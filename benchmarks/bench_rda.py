@@ -1,0 +1,49 @@
+"""Paper Tables II & III — end-to-end RDA fused vs unfused + per-step
+breakdown. Default scene 512x512 (CPU-tractable); --full runs the paper's
+4096x4096. Also reports the beyond-paper variants (transpose-free 4-dispatch
+and reordered 3-dispatch pipelines) and the CSA baseline."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, timeit
+from repro.core.sar import build_pipeline, paper_targets, simulate_cached
+from repro.core.sar.csa import build_csa, build_csa_fused
+from repro.core.sar.geometry import paper_scene, test_scene
+
+
+def run(n: int = 512, full: bool = False):
+    cfg = paper_scene() if full else test_scene(n)
+    targets = paper_targets(cfg)
+    raw = jnp.asarray(simulate_cached(cfg, targets))
+
+    header(f"table_2: end-to-end RDA {cfg.na}x{cfg.nr} "
+           "(CPU wall; dispatch/HBM counts are the architecture story)")
+    times = {}
+    variants = ["unfused", "fused", "fused_tfree", "fused3"]
+    for v in variants:
+        p = build_pipeline(cfg, v)
+        f = p.jitted()
+        times[v] = timeit(f, raw, warmup=1, iters=3)
+        emit(f"rda_{v}", times[v],
+             f"dispatches={p.dispatches};hbm_roundtrips={p.hbm_roundtrips};"
+             f"speedup_vs_unfused={times['unfused'] / times[v]:.2f}x")
+    for name, b in (("csa", build_csa), ("csa_fused", build_csa_fused)):
+        p = b(cfg)
+        t = timeit(p.jitted(), raw, warmup=1, iters=3)
+        emit(f"rda_{name}", t,
+             f"dispatches={p.dispatches};"
+             f"speedup_vs_unfused={times['unfused'] / t:.2f}x")
+
+    header(f"table_3: per-step breakdown {cfg.na}x{cfg.nr}")
+    for v in ["fused", "fused_tfree", "fused3"]:
+        p = build_pipeline(cfg, v)
+        x = raw
+        for s in p.steps:
+            f = jax.jit(s.fn)
+            t = timeit(f, x)
+            emit(f"step_{v}_{s.name}", t,
+                 f"fused={s.fused};dispatches={s.dispatches}")
+            x = f(x)

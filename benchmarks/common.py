@@ -1,0 +1,37 @@
+"""Benchmark utilities: timing, CSV emission, CPU-vs-TPU framing.
+
+This container is CPU-only, so wall-clock numbers are CPU-XLA illustrative
+(Pallas kernels run in interpret mode); the TPU performance story is the
+roofline table derived from the compiled dry-run artifacts
+(EXPERIMENTS.md §Roofline). Every bench prints `name,us_per_call,derived`
+rows so results are machine-readable.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call, seconds. Blocks on jax arrays."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def header(title: str):
+    print(f"# {title}", flush=True)

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table. CSV: name,us_per_call,derived.
+
+  PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
+  PYTHONPATH=src python -m benchmarks.run --full     # the paper's 4096^2
+  PYTHONPATH=src python -m benchmarks.run --only table_2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import bench_compare, bench_fft, bench_quality, bench_rda
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size scenes (4096^2; slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="table_1|table_2|table_3|table_4|table_5")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    want = lambda t: args.only is None or args.only == t
+    if want("table_1"):
+        bench_fft.run(full=args.full)
+    if want("table_2") or want("table_3"):
+        bench_rda.run(full=args.full)
+    if want("table_4"):
+        bench_quality.run(full=args.full)
+    if want("table_5"):
+        bench_compare.run(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

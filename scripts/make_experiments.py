@@ -1,0 +1,229 @@
+"""Generate EXPERIMENTS.md from experiments/dryrun/*.json + bench logs.
+
+  PYTHONPATH=src python scripts/make_experiments.py
+
+Sections §Dry-run and §Roofline are generated from the artifacts; §Perf and
+§Paper-validation include the curated iteration logs (PERF_LOG below, updated
+by hand as hillclimbing proceeds).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCH_ORDER = [
+    "recurrentgemma-9b", "minitron-4b", "gemma3-12b", "stablelm-1.6b",
+    "yi-34b", "qwen2-vl-72b", "llama4-scout-17b-a16e",
+    "granite-moe-3b-a800m", "whisper-tiny", "falcon-mamba-7b", "sar-rda-4k",
+    "sar-rda-8k",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "n/a"]
+
+SKIPS = [
+    ("minitron-4b", "long_500k", "pure full attention"),
+    ("gemma3-12b", None, None),
+    ("stablelm-1.6b", "long_500k", "pure full attention"),
+    ("yi-34b", "long_500k", "pure full attention"),
+    ("qwen2-vl-72b", "long_500k", "pure full attention"),
+    ("llama4-scout-17b-a16e", "long_500k",
+     "1-in-4 global full-attention layers"),
+    ("granite-moe-3b-a800m", "long_500k", "pure full attention"),
+    ("whisper-tiny", "long_500k", "enc-dec, bounded decoder positions"),
+]
+
+
+def load():
+    recs = {}
+    for p in glob.glob(os.path.join(DRY, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], "multi" if r["devices"] == 512
+              else "single")] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:.2f}"
+
+
+def gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def note_for(r):
+    """One sentence: what would move the dominant term down."""
+    roof = r["roofline"]
+    b = roof["bottleneck"]
+    arch, shape = r["arch"], r["shape"]
+    if arch.startswith("sar-rda"):
+        return ("interpret-HLO memory ~ the unfused pipeline; the fused "
+                "kernel's BlockSpec bytes put the real bound on the corner "
+                "turns (§Perf P1)")
+    if b == "compute":
+        uf = roof.get("useful_flops_fraction") or 0
+        if uf and uf < 0.6:
+            return (f"only {uf:.0%} of compiled FLOPs are model FLOPs — cut "
+                    "remat recompute / attention waste")
+        return ("near compute roofline; next: fewer rematerialized ops, "
+                "bf16 everywhere")
+    if b == "memory":
+        if "decode" in shape or shape == "long_500k":
+            return ("KV/state reads dominate (inherent at decode); raise "
+                    "batch or quantize the cache to int8")
+        return ("HBM traffic dominates: larger fusion regions, bf16 "
+                "master-weight gathers, fewer layout copies")
+    return ("collective-bound: overlap FSDP gathers with compute, compress "
+            "cross-pod gradients (int8), or reshard to cut all-to-alls")
+
+
+PAPER_VALIDATION = """
+## §Paper-validation (faithful reproduction vs the paper's claims)
+
+| Paper claim | Paper value | This repo (CPU-exact, 512^2 scene) | Where |
+|---|---|---|---|
+| Fused == unfused, L2 relative error | 2.44e-7 | **3.0e-7** (FP32 roundoff) | `benchmarks/bench_quality.py`, `tests/test_sar.py::test_fused_equals_unfused` |
+| SNR delta, all 5 point targets | 0.0 dB | **0.0000 dB** | same |
+| Max abs error | 3.81e-4 | 1.2e-4 | same |
+| Per-target SNR ~45-47 dB | 45.2-47.3 dB | 58.0-58.3 dB (different noise accounting; delta is the claim) | same |
+| Fused pipeline structure: range compression 1 dispatch, azimuth fused multiply+IFFT | Table III | identical step structure; dispatch counts 8 (fused) vs 7 (unfused XLA ops), HBM round-trips 8 vs 7 -> **4 (tfree)** -> **3 (fused3)** | `benchmarks/bench_rda.py` |
+| IFFT = conj-FFT-conj, bit-comparable | Sec II-C | kernel property test `tests/test_kernels.py::test_ifft_inverts_fft` |
+| MMA(matrix-unit) FFT within a few % of scalar | Table I (93%) | MXU-matmul vs VPU-stockham kernels both validated vs oracle; TPU ratio is roofline-derived (below), CPU interpret-mode timing in bench_fft | `benchmarks/bench_fft.py` |
+
+Wall-clock speedup note: the paper's 22x is an Apple-M1 device-memory
+effect. This container is CPU-only, so the reproduction validates the
+*numerics* exactly and the *structure* (dispatch & HBM-round-trip counts);
+the TPU performance claim is made through the roofline analysis below —
+the fused pipeline's HBM traffic term is 8/3 = 2.7x lower than unfused at
+identical FLOPs, and the kernel keeps each 4096-line resident in VMEM
+(32 KiB/line vs 16 MiB VMEM = 128-line blocks per grid step).
+"""
+
+PERF_LOG = """
+## §Perf (hillclimbing log: baseline -> optimized, three chosen cells)
+
+Chosen cells (per assignment: worst roofline fraction, most collective-bound,
+most representative of the paper's technique):
+
+%PERF_BODY%
+"""
+
+
+def main():
+    recs = load()
+    lines = ["# EXPERIMENTS",
+             "",
+             "Hardware target: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, "
+             "~50 GB/s/link ICI. Container is CPU-only: all TPU numbers are "
+             "derived from AOT-compiled artifacts (memory_analysis / "
+             "cost_analysis / SPMD HLO collective parse), wall-clock numbers "
+             "are CPU and labelled as such.",
+             ""]
+    lines.append(PAPER_VALIDATION)
+
+    # ----- dry run -------------------------------------------------------
+    lines += ["## §Dry-run (lower + compile, every cell x both meshes)",
+              "",
+              "Meshes: single pod (16,16)=256 chips ('data','model'); "
+              "multi-pod (2,16,16)=512 chips ('pod','data','model'). "
+              "`compile OK` means jit(step).lower(...).compile() succeeded "
+              "with the production shardings; bytes are per-device "
+              "(arguments + temporaries).",
+              ""]
+    for tag in ("single", "multi"):
+        lines += [f"### {tag} pod", "",
+                  "| arch | shape | compile | GiB/dev args | GiB/dev temp | "
+                  "peak GiB/dev | collectives (count) |", "|---|---|---|---|---|---|---|"]
+        for a in ARCH_ORDER:
+            for s in SHAPE_ORDER:
+                r = recs.get((a, s, tag))
+                if r is None:
+                    continue
+                cc = r["roofline"]["collective_counts"]
+                ccs = " ".join(f"{k}:{v}" for k, v in sorted(cc.items()))
+                m = r["memory"]
+                lines.append(
+                    f"| {a} | {s} | OK ({r['t_compile_s']:.0f}s) | "
+                    f"{gib(m['argument_bytes'])} | {gib(m['temp_bytes'])} | "
+                    f"{gib(m['peak_bytes_per_device'])} | {ccs} |")
+        lines.append("")
+    lines += ["Skipped cells (assignment long_500k rule):", ""]
+    for a, s, why in SKIPS:
+        if s:
+            lines.append(f"- `{a}` x `{s}`: {why}")
+    lines.append("")
+
+    # ----- roofline ------------------------------------------------------
+    lines += [
+        "## §Roofline (single-pod, per-device terms in ms)", "",
+        "compute = HLO_FLOPs/197e12 (scan bodies corrected x trip count); "
+        "memory = HLO bytes/819e9; collective = ring-model link bytes/50e9. "
+        "`useful` = MODEL_FLOPS (6ND, active-params for MoE) / HLO_FLOPs.",
+        "",
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | "
+        "useful | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "single"))
+            if r is None:
+                continue
+            roof = r["roofline"]
+            uf = roof.get("useful_flops_fraction")
+            lines.append(
+                f"| {a} | {s} | {fmt_ms(roof['t_compute_s'])} | "
+                f"{fmt_ms(roof['t_memory_s'])} | "
+                f"{fmt_ms(roof['t_collective_s'])} | {roof['bottleneck']} | "
+                f"{uf:.2f} | {note_for(r)} |" if uf else
+                f"| {a} | {s} | {fmt_ms(roof['t_compute_s'])} | "
+                f"{fmt_ms(roof['t_memory_s'])} | "
+                f"{fmt_ms(roof['t_collective_s'])} | {roof['bottleneck']} | "
+                f"n/a | {note_for(r)} |")
+    lines.append("")
+
+    # ----- perf ----------------------------------------------------------
+    perf_body_path = os.path.join(os.path.dirname(__file__), "perf_log.md")
+    body = open(perf_body_path).read() if os.path.exists(perf_body_path) \
+        else "(hillclimbing in progress — see scripts/perf_log.md)"
+    lines.append(PERF_LOG.replace("%PERF_BODY%", body))
+
+    lines.append("""
+## §Beyond-paper summary
+
+The paper-faithful reproduction (fused pipeline, conj-FFT-conj IFFT,
+matrix-unit FFT, Table IV equivalence) is the baseline above; on top of it:
+
+1. **3-dispatch RDA** (`fused3`): range compression commutes with the
+   azimuth FFT, so RCMC (as an exact Fourier shift) and the range matched
+   filter fuse into ONE dispatch — 3 HBM round-trips vs the paper's 8
+   dispatches, and zero global transposes (the paper's 80%-of-runtime item).
+2. **Rank-K on-the-fly phase synthesis** (FILTER_OUTER / SHARED_OUTER):
+   RCMC + azimuth-compression filters synthesized in VMEM from O(N) vectors
+   instead of O(N^2) filter reads — 1.33x on the fused HBM term, float32-safe
+   via a wrapped rank-2 split.
+3. **Distributed corner-turn schedules** (`corner2`, `halo`) with measured
+   collective terms, an applicability bound for halo, and (IR-level) bf16
+   turn payloads; multi-pod (512-chip) dry-run of the paper's own workload,
+   plus the 8K x 8K future-work scene (sub-ms roofline bound vs Jetson
+   Orin's 400 ms).
+4. **The competitor algorithm (CSA) fused too**: all three of its stages are
+   [FFT]*phase*[IFFT], so the paper's kernel runs it in 3 dispatches
+   (`build_csa_fused`), equivalence-tested at FP32 roundoff.
+5. **FFTConvMixer**: the fused kernel inside a Hyena-style LM block (the
+   assigned archs are all input-gated, so this is the LTI demonstration of
+   where the technique applies in LMs).
+6. **MoE gather/scatter dispatch** (2.8x compute on granite), **GQA
+   flat-head score sharding**, **chunked Mamba readout**, **seq-sharded
+   residual constraints** — the LM-pool hillclimbs recorded in §Perf.
+""")
+
+    with open(OUT, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {OUT} ({len(lines)} lines, {len(recs)} cells)")
+
+
+if __name__ == "__main__":
+    main()

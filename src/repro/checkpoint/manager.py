@@ -1,0 +1,154 @@
+"""Sharded npz checkpoints: atomic, keep-k, async, reshard-on-restore.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json        tree structure, shapes, dtypes, leaf->file map
+        shard_000.npz        leaf arrays (host numpy), chunked ~512 MB
+    <dir>/step_000123.tmp_*  staging dir, os.rename'd into place (atomic on
+                             POSIX within a filesystem)
+
+Restore takes an optional `shardings` pytree: leaves are device_put with the
+NEW sharding, so a checkpoint written on one mesh restores onto a different
+mesh (elastic restart after losing nodes). Parameters are stored unsharded
+host-side (gathered), which is the simple-and-correct baseline for this
+container; the multi-host variant writes per-host shards with the same
+manifest format (documented in DESIGN.md §fault-tolerance).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True) -> str:
+        """Write checkpoint for `step`. blocking=False returns immediately and
+        writes on a background thread (training continues)."""
+        keys, leaves, _ = _paths_and_leaves(tree)
+        host = [np.asarray(x) for x in leaves]  # device->host copy now
+        if blocking:
+            return self._write(step, keys, host)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, keys, host), daemon=True)
+        self._thread.start()
+        return self._final_dir(step)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _final_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def _write(self, step: int, keys, arrays) -> str:
+        final = self._final_dir(step)
+        tmp = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp_", dir=self.dir)
+        try:
+            manifest = {"step": step, "leaves": {}, "shards": []}
+            shard, shard_bytes, shard_idx = {}, 0, 0
+
+            def flush():
+                nonlocal shard, shard_bytes, shard_idx
+                if not shard:
+                    return
+                fname = f"shard_{shard_idx:03d}.npz"
+                np.savez(os.path.join(tmp, fname), **shard)
+                manifest["shards"].append(fname)
+                shard, shard_bytes, shard_idx = {}, 0, shard_idx + 1
+
+            for i, (k, a) in enumerate(zip(keys, arrays)):
+                skey = f"a{i:06d}"
+                manifest["leaves"][k] = {
+                    "shard": f"shard_{shard_idx:03d}.npz", "key": skey,
+                    "shape": list(a.shape), "dtype": str(a.dtype)}
+                shard[skey] = a
+                shard_bytes += a.nbytes
+                if shard_bytes >= _SHARD_BYTES:
+                    flush()
+            flush()
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._final_dir(s), ignore_errors=True)
+
+    # ---- restore --------------------------------------------------------------
+    def all_steps(self) -> list:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple:
+        """Restore into the structure of `like`. Returns (tree, step).
+
+        shardings: optional pytree of jax.sharding.Sharding matching `like` —
+        leaves are device_put accordingly (reshard-on-restore)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._final_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        cache = {}
+
+        def load(key):
+            info = manifest["leaves"][key]
+            if info["shard"] not in cache:
+                cache[info["shard"]] = np.load(os.path.join(d, info["shard"]))
+            return cache[info["shard"]][info["key"]]
+
+        keys, leaves, treedef = _paths_and_leaves(like)
+        sh_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                     if shardings is not None else [None] * len(leaves))
+        out = []
+        for k, ref, sh in zip(keys, leaves, sh_leaves):
+            a = load(k)
+            assert list(a.shape) == list(ref.shape), (k, a.shape, ref.shape)
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.device_put(a))
+        return jax.tree_util.tree_unflatten(treedef, out), step

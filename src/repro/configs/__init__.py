@@ -1,0 +1,1 @@
+"""Per-architecture configs (exact assigned dimensions) + SAR scenes."""

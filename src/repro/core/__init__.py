@@ -1,0 +1,8 @@
+"""Core: the paper's fused spectral pipeline + the SAR system built on it."""
+from repro.core.fusion import (  # noqa: F401
+    BACKEND_PALLAS,
+    BACKEND_XLA,
+    SpectralPipeline,
+    fft_conv,
+)
+from repro.core import sar  # noqa: F401

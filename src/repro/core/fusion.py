@@ -1,0 +1,83 @@
+"""SpectralPipeline — the paper's contribution as a composable JAX op.
+
+One fused dispatch computing  [FFT] -> pointwise filter -> [IFFT]  along rows
+or columns of a 2-D block, with the intermediate spectrum never leaving
+on-chip memory. Backend 'pallas' lowers to the single pl.pallas_call kernel
+(kernels/fft4step.py, MXU matmul FFT); backend 'xla' is the unfused oracle
+(jnp.fft per stage) used for baselines and CPU-exact references.
+
+Also exposes `fft_conv`, a fused long-convolution primitive (FFT * K * IFFT
+in one dispatch) — the building block of the FFTConvMixer LM layer that
+demonstrates the paper's kernel inside a Hyena/S4-style language model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.fft4step import (
+    FILTER_FULL,
+    FILTER_NONE,
+    FILTER_OUTER,
+    FILTER_SHARED,
+    FILTER_SHARED_OUTER,
+)
+
+BACKEND_PALLAS = "pallas"
+BACKEND_XLA = "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralPipeline:
+    """A reusable fused [FFT] * H * [IFFT] stage.
+
+    axis: 1 = transform rows of (lines, n); 0 = columns of (n, lines).
+    filter_mode: one of kernels.FILTER_* ('none'|'shared'|'full'|'outer'|
+                 'shared_outer').
+    backend: 'pallas' (fused single dispatch) or 'xla' (unfused jnp.fft).
+    """
+
+    fwd: bool = True
+    inv: bool = True
+    filter_mode: str = FILTER_NONE
+    axis: int = 1
+    backend: str = BACKEND_PALLAS
+    block: int = 8
+    fft_impl: str = "matmul"
+    compute_dtype: str = "f32"
+    karatsuba: bool = False
+    interpret: Optional[bool] = None
+
+    def __call__(self, xr, xi, hr=None, hi=None, u=None, v=None):
+        if self.backend == BACKEND_XLA:
+            h = dict(hr=hr, hi=hi) if hr is not None else {}
+            o = dict(u=u, v=v) if u is not None else {}
+            if self.filter_mode == FILTER_SHARED and hr is not None:
+                # broadcast the shared vector along the line axis
+                shape = (1, -1) if self.axis == 1 else (-1, 1)
+                h = dict(hr=hr.reshape(shape), hi=hi.reshape(shape))
+            return ref.spectral_ref(xr, xi, axis=self.axis, fwd=self.fwd,
+                                    inv=self.inv, **h, **o)
+        return ops.spectral_op(
+            xr, xi, hr=hr, hi=hi, u=u, v=v, axis=self.axis, fwd=self.fwd,
+            inv=self.inv, filter_mode=self.filter_mode, block=self.block,
+            fft_impl=self.fft_impl, karatsuba=self.karatsuba,
+            compute_dtype=self.compute_dtype, interpret=self.interpret)
+
+
+def fft_conv(x: jnp.ndarray, k_fft_r: jnp.ndarray, k_fft_i: jnp.ndarray,
+             backend: str = BACKEND_PALLAS, block: int = 8,
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused circular convolution: real input (B, N), precomputed filter
+    spectrum (N,) split re/im -> real output (B, N). ONE dispatch.
+
+    Callers wanting causal/linear convolution zero-pad x and the kernel to
+    2N before calling (standard FFT-conv practice)."""
+    zeros = jnp.zeros_like(x)
+    pipe = SpectralPipeline(fwd=True, inv=True, filter_mode=FILTER_SHARED,
+                            backend=backend, block=block, interpret=interpret)
+    yr, _ = pipe(x, zeros, hr=k_fft_r, hi=k_fft_i)
+    return yr

@@ -1,0 +1,18 @@
+"""SAR substrate: geometry, simulator, filters, RDA/CSA pipelines, metrics."""
+from repro.core.sar.geometry import (  # noqa: F401
+    C,
+    PointTarget,
+    SceneConfig,
+    paper_scene,
+    paper_targets,
+    test_scene,
+)
+from repro.core.sar.simulate import simulate, simulate_cached  # noqa: F401
+from repro.core.sar.rda import (  # noqa: F401
+    BUILDERS,
+    Pipeline,
+    Step,
+    build_pipeline,
+    focus,
+)
+from repro.core.sar import filters, metrics  # noqa: F401

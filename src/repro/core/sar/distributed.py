@@ -1,0 +1,218 @@
+"""Multi-device SAR: shard_map RDA with corner-turn collectives.
+
+A SAR scene alternates between row-local (range) and column-local (azimuth)
+stages, so the classic multi-node schedule is a "corner turn" — an all-to-all
+that re-shards the matrix from azimuth-sharded to range-sharded. Two
+schedules are provided (the collective-bytes trade-off is a §Perf experiment):
+
+``corner2``  The 3-dispatch RDA (rda.build_fused3) distributed directly:
+             azimuth stages run on column slabs, the fused range stage on row
+             slabs, with a corner turn before and after it. 2 all-to-alls,
+             every compute stage a single fused Pallas dispatch.
+
+``halo``     The paper-ordered pipeline with ONE corner turn: range
+             compression is row-local on the natural (azimuth-sharded) raw
+             layout; after one corner turn the azimuth FFT + azimuth
+             compression are column-local, and RCMC (which gathers at most
+             `halo` range cells across the cut) uses a halo exchange with the
+             two ring neighbours (collective_permute) instead of a second
+             all-to-all. all_to_all bytes halve; permute bytes are
+             O(halo/nr_local) of a corner turn.
+
+Both return the focused image range-sharded (na, nr/P). Ingest layouts differ
+(each matches a physically sensible way to distribute arriving pulses):
+  corner2: raw sharded P(None, axes) — each pulse scattered across devices
+           (range-sharded ingest; azimuth stages are then immediately local)
+  halo:    raw sharded P(axes, None) — pulses round-robined across devices
+           (pulse-sharded ingest; range compression is immediately local)
+  output image (na, nr) sharded P(None, axes) — range columns distributed
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sar import filters
+from repro.core.sar.geometry import SceneConfig
+from repro.core.sar.rda import split, unsplit
+from repro.kernels import ops
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------------
+# Schedule 1: two corner turns around the fused range stage
+# ---------------------------------------------------------------------------
+
+def build_corner2(cfg: SceneConfig, mesh: Mesh, axes=("data",),
+                  interpret: Optional[bool] = None, block: int = 8,
+                  col_block: int = 8, fft_impl: str = "matmul",
+                  turn_dtype=None):
+    """Returns jit-able fn(raw (na, nr) complex64) -> image, both sharded.
+
+    turn_dtype: optional dtype for the corner-turn payload (e.g.
+    jnp.bfloat16) — halves the dominant collective term; quality impact is
+    measured in tests (§Perf-SAR iteration 3)."""
+    p = _axis_size(mesh, axes)
+    if cfg.nr % p or cfg.na % p:
+        raise ValueError(f"scene {cfg.na}x{cfg.nr} not divisible by {p} devices")
+
+    hr_r, hr_i = (jnp.asarray(a) for a in filters.range_matched_filter(cfg))
+    rc_u, rc_v = (jnp.asarray(a) for a in filters.rcmc_phase_uv(cfg))
+    az_u2, az_v2 = (jnp.asarray(a) for a in filters.azimuth_phase_uv2(cfg))
+    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
+    ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
+
+    def turn(x, split_axis, concat_axis):
+        dt = x.dtype
+        if turn_dtype is not None:
+            # bf16 wire format for the turn: the FFT magnitudes are
+            # O(sqrt(N)) and bf16's 8-bit mantissa costs ~2e-3 relative —
+            # validated acceptable for imaging (SNR delta < 0.01 dB). The
+            # optimization_barrier pins the converts to the collective's two
+            # sides so XLA cannot re-widen the payload.
+            x = jax.lax.optimization_barrier(x.astype(turn_dtype))
+        x = jax.lax.all_to_all(x, axes, split_axis, concat_axis, tiled=True)
+        if turn_dtype is not None:
+            x = jax.lax.optimization_barrier(x)
+        return x.astype(dt)
+
+    def local(xr, xi, rc_u_blk, az_u2_blk):
+        # in: (na, nr/P) column slab; azimuth lines complete per column.
+        xr, xi = ops.fft_cols(xr, xi, **ckw)                 # dispatch 1
+        # corner turn -> (na/P, nr) row slab (rows = azimuth freq)
+        xr = turn(xr, 0, 1)
+        xi = turn(xi, 0, 1)
+        xr, xi = ops.fused_rc_rcmc_rows(
+            xr, xi, hr_r, hr_i, rc_u_blk, rc_v, **rkw)       # dispatch 2
+        # corner turn back -> (na, nr/P)
+        xr = turn(xr, 1, 0)
+        xi = turn(xi, 1, 0)
+        xr, xi = ops.fused_mult_ifft_cols_outer(
+            xr, xi, az_u2_blk, az_v2, **ckw)                 # dispatch 3
+        return xr, xi
+
+    shard = functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes), P(axes), P(axes, None)),
+        out_specs=(P(None, axes), P(None, axes)), check_vma=False)
+
+    @jax.jit
+    def run(raw):
+        xr, xi = split(raw)
+        # rc_u is per azimuth-frequency row -> sharded with the row slabs;
+        # az_u2 is per range gate -> sharded with the column slabs.
+        yr, yi = shard(local)(xr, xi, rc_u, az_u2)
+        return unsplit(yr, yi)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Schedule 2: one corner turn + halo-exchange RCMC
+# ---------------------------------------------------------------------------
+
+def _halo_rcmc(xr, xi, cfg: SceneConfig, axes, halo: int, taps: int = 8):
+    """Sinc-interp RCMC on an (na, nr/P) column slab with ring halo exchange.
+
+    Every row's shift is <= halo - taps//2 cells, so each device only needs
+    `halo` columns from its right neighbour (shifts are non-negative: the
+    migration curve always moves content to larger range).
+    """
+    s = jnp.asarray(filters.rcmc_shift_samples(cfg), jnp.float32)[:, None]
+    base = jnp.floor(s)
+    frac = s - base
+    offs = np.arange(taps) - taps // 2 + 1
+    xk = offs[None, None, :] - frac[..., None]
+    w = jnp.sinc(xk) * jnp.where(
+        jnp.abs(xk) <= taps // 2,
+        0.54 + 0.46 * jnp.cos(np.pi * xk / (taps // 2)), 0.0)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+    # halo exchange with both ring neighbours (the shift is non-negative, but
+    # the sinc taps reach taps//2 - 1 cells to the left)
+    p = jax.lax.axis_size(axes)
+    lh = taps // 2
+    perm_r = [((i + 1) % p, i) for i in range(p)]  # right neighbour -> me
+    perm_l = [((i - 1) % p, i) for i in range(p)]  # left neighbour -> me
+
+    def with_halo(x):
+        from_right = jax.lax.ppermute(x[:, :halo], axes, perm_r)
+        from_left = jax.lax.ppermute(x[:, -lh:], axes, perm_l)
+        return jnp.concatenate([from_left, x, from_right], axis=1)
+
+    hxr, hxi = with_halo(xr), with_halo(xi)
+    nr_loc = xr.shape[1]
+    cols = jnp.arange(nr_loc, dtype=jnp.int32)[None, :]
+    yr = jnp.zeros_like(xr)
+    yi = jnp.zeros_like(xi)
+    for k in range(taps):
+        idx = jnp.clip(cols + lh + base.astype(jnp.int32) + offs[k], 0,
+                       nr_loc + lh + halo - 1)
+        wk = w[..., k]
+        yr = yr + jnp.take_along_axis(hxr, jnp.broadcast_to(idx, xr.shape), 1) * wk
+        yi = yi + jnp.take_along_axis(hxi, jnp.broadcast_to(idx, xi.shape), 1) * wk
+    return yr, yi
+
+
+def build_halo(cfg: SceneConfig, mesh: Mesh, axes=("data",),
+               interpret: Optional[bool] = None, block: int = 8,
+               col_block: int = 8, fft_impl: str = "matmul",
+               halo: Optional[int] = None):
+    p = _axis_size(mesh, axes)
+    if cfg.nr % p or cfg.na % p:
+        raise ValueError(f"scene {cfg.na}x{cfg.nr} not divisible by {p} devices")
+    max_shift = float(np.max(filters.rcmc_shift_samples(cfg)))
+    halo = halo or int(np.ceil(max_shift)) + 8
+    if halo > cfg.nr // p:
+        # the halo premise (halo << nr/P) fails: each device would need more
+        # than its whole neighbour slab, i.e. the exchange degenerates to a
+        # corner turn. Applicability bound recorded in EXPERIMENTS.md §Perf.
+        raise ValueError("halo exceeds local slab width; use corner2")
+
+    hr_r, hr_i = (jnp.asarray(a) for a in filters.range_matched_filter(cfg))
+    az_u2, az_v2 = (jnp.asarray(a) for a in filters.azimuth_phase_uv2(cfg))
+    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
+    ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
+
+    def local(xr, xi, az_u2_blk):
+        # in: (na/P, nr) row slab — the raw data's natural layout.
+        xr, xi = ops.fused_fft_mult_ifft_rows(xr, xi, hr_r, hr_i, **rkw)  # 1
+        # the single corner turn -> (na, nr/P)
+        xr = jax.lax.all_to_all(xr, axes, 1, 0, tiled=True)
+        xi = jax.lax.all_to_all(xi, axes, 1, 0, tiled=True)
+        xr, xi = ops.fft_cols(xr, xi, **ckw)                              # 2
+        xr, xi = _halo_rcmc(xr, xi, cfg, axes, halo)                      # 3
+        xr, xi = ops.fused_mult_ifft_cols_outer(
+            xr, xi, az_u2_blk, az_v2, **ckw)                              # 4
+        return xr, xi
+
+    shard = functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(axes)),
+        out_specs=(P(None, axes), P(None, axes)), check_vma=False)
+
+    @jax.jit
+    def run(raw):
+        xr, xi = split(raw)
+        yr, yi = shard(local)(xr, xi, az_u2)
+        return unsplit(yr, yi)
+
+    return run
+
+
+SCHEDULES = {"corner2": build_corner2, "halo": build_halo}
+
+
+def distributed_focus(raw, cfg: SceneConfig, mesh: Mesh, axes=("data",),
+                      schedule: str = "corner2", **kw):
+    return SCHEDULES[schedule](cfg, mesh, axes, **kw)(raw)

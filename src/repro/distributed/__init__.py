@@ -1,0 +1,7 @@
+from repro.distributed.fault import (  # noqa: F401
+    FailureInjector,
+    PreemptionHandler,
+    SimulatedFailure,
+    StragglerWatchdog,
+    run_with_restarts,
+)

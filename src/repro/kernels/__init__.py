@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the fused spectral pipeline (paper's contribution).
+
+fft4step.py — single-dispatch [FFT]·[filter]·[IFFT] kernel, matmul (MXU) and
+              stockham (VPU) implementations, rows & columns pipelines.
+ops.py      — jit'd public wrappers (padding, filter plumbing).
+ref.py      — pure-jnp oracles (jnp.fft) every kernel is tested against.
+transpose.py— tiled transpose for the paper-faithful pipeline variant.
+"""
+from repro.kernels.fft4step import (  # noqa: F401
+    FILTER_FULL,
+    FILTER_NONE,
+    FILTER_OUTER,
+    FILTER_SHARED,
+    FILTER_SHARED_OUTER,
+    SpectralSpec,
+    build_spectral_call,
+    default_factorization,
+    dft_constants,
+)
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.transpose import transpose  # noqa: F401

@@ -1,0 +1,434 @@
+"""Single-dispatch fused spectral-pipeline Pallas kernel (the paper's contribution).
+
+The paper fuses FFT -> matched-filter multiply -> IFFT into one Metal dispatch,
+holding a 4096-point complex line in 32 KiB of threadgroup memory, and feeds
+Apple's 8x8 simdgroup MMA with a radix-8 DFT butterfly.
+
+TPU adaptation (see DESIGN.md SS2):
+  * on-chip tier   : 32 KiB threadgroup memory  ->  ~16 MiB VMEM. We block a
+    *batch of lines* (row pipeline) or a whole (N x L) column slab (column
+    pipeline) per grid step, instead of one line per threadgroup.
+  * matrix unit    : 8x8 simdgroup MMA -> 128x128 MXU. The radix-8 butterfly
+    becomes a *four-step FFT*: N = n1*n2, each stage a dense matmul against a
+    DFT matrix (n1, n2 <= 128), twiddle as a pointwise multiply. Complex
+    arithmetic is split re/im (4 real matmuls, or 3 with Karatsuba).
+  * IFFT           : conj-FFT-conj with the 1/N scale folded into the final
+    store — identical to the paper's SSII-C trick.
+  * the paper's in-place constraint (Stockham needs 2x buffers > 32 KiB) does
+    not bind in VMEM; we keep the numerically-identical out-of-place stages
+    inside the kernel and spend the slack on line batching.
+
+A 'stockham' VPU implementation (radix-4/radix-2, no matmuls) is provided as
+the scalar baseline for the paper's Table I comparison.
+
+Everything is validated in interpret mode against kernels/ref.py (pure jnp).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Filter (pointwise multiply) modes for the fused pipeline.
+FILTER_NONE = "none"      # no multiply (pure FFT / pure IFFT dispatch)
+FILTER_SHARED = "shared"  # one N-vector shared by every line (range matched filter)
+FILTER_FULL = "full"      # full 2-D filter, same shape as the scene block
+FILTER_OUTER = "outer"    # on-the-fly rank-K phase synthesis
+                          # exp(i * sum_k u[line,k] * v[sample,k])
+                          # (covers RCMC phase ramps and azimuth compression —
+                          #  beyond-paper bandwidth optimization: O(N+L) filter
+                          #  I/O instead of O(N*L))
+FILTER_SHARED_OUTER = "shared_outer"  # H[sample] * exp(i sum_k u v): range
+                          # matched filter and RCMC shift in ONE dispatch
+                          # (the 3-dispatch RDA; beyond-paper)
+
+
+def default_factorization(n: int) -> tuple[int, int]:
+    """Split n = n1 * n2 with n1 >= n2, both powers of two <= 128 when possible."""
+    if n & (n - 1):
+        raise ValueError(f"FFT length must be a power of two, got {n}")
+    p = n.bit_length() - 1
+    n1 = 1 << ((p + 1) // 2)
+    n2 = n // n1
+    return n1, n2
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralSpec:
+    """Static configuration of one fused spectral dispatch."""
+
+    n: int                      # FFT length (the transformed axis)
+    fwd: bool                   # forward FFT first?
+    filter_mode: str            # FILTER_*
+    inv: bool                   # inverse FFT last?
+    axis: int = 1               # 1 = rows pipeline (last axis), 0 = columns
+    block: int = 8              # lines (rows kernel) / columns (cols kernel) per grid step
+    n1: Optional[int] = None    # four-step factorization (defaults to ~sqrt split)
+    n2: Optional[int] = None
+    fft_impl: str = "matmul"    # 'matmul' (MXU) | 'stockham' (VPU scalar baseline)
+    karatsuba: bool = False     # 3-matmul complex product instead of 4
+    compute_dtype: str = "f32"  # 'f32' | 'bf16' (bf16 inputs, f32 accumulation)
+    fold_scale: bool = True     # fold the IFFT 1/N into the filter/final store
+    outer_rank: int = 1         # K of the rank-K FILTER_OUTER phase
+
+    def factors(self) -> tuple[int, int]:
+        if self.n1 is not None:
+            n1 = self.n1
+            n2 = self.n2 if self.n2 is not None else self.n // n1
+        else:
+            n1, n2 = default_factorization(self.n)
+        if n1 * n2 != self.n:
+            raise ValueError(f"n1*n2 != n: {n1}*{n2} != {self.n}")
+        return n1, n2
+
+
+# ---------------------------------------------------------------------------
+# DFT constants (host-side numpy; passed to the kernel as broadcast operands)
+# ---------------------------------------------------------------------------
+
+def dft_constants(n1: int, n2: int) -> tuple[np.ndarray, ...]:
+    """F1 (n1,n1), F2 (n2,n2) DFT matrices and the (n1,n2) twiddle, split re/im."""
+    def dft(n):
+        k = np.arange(n)
+        m = np.exp(-2j * np.pi * np.outer(k, k) / n)
+        return m.real.astype(np.float32), m.imag.astype(np.float32)
+
+    f1r, f1i = dft(n1)
+    f2r, f2i = dft(n2)
+    k1 = np.arange(n1)[:, None]
+    m2 = np.arange(n2)[None, :]
+    tw = np.exp(-2j * np.pi * k1 * m2 / (n1 * n2))
+    return f1r, f1i, f2r, f2i, tw.real.astype(np.float32), tw.imag.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel complex helpers (split re/im)
+# ---------------------------------------------------------------------------
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _cast(x, dtype_str):
+    return x.astype(jnp.bfloat16) if dtype_str == "bf16" else x
+
+
+def _cdot(fr, fi, xr, xi, dims, *, karatsuba: bool, compute_dtype: str):
+    """Complex dot_general: (fr + i fi) . (xr + i xi) with contraction `dims`.
+
+    4 real matmuls, or 3 with Karatsuba (P3 = (Fr+Fi)(Xr+Xi)). f32 accumulate.
+    """
+    dg = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(dims, ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    fr_, fi_ = _cast(fr, compute_dtype), _cast(fi, compute_dtype)
+    xr_, xi_ = _cast(xr, compute_dtype), _cast(xi, compute_dtype)
+    if karatsuba:
+        p1 = dg(fr_, xr_)
+        p2 = dg(fi_, xi_)
+        p3 = dg(_cast(fr + fi, compute_dtype), _cast(xr + xi, compute_dtype))
+        return p1 - p2, p3 - p1 - p2
+    yr = dg(fr_, xr_) - dg(fi_, xi_)
+    yi = dg(fr_, xi_) + dg(fi_, xr_)
+    return yr, yi
+
+
+def _cdot_rhs(xr, xi, fr, fi, dims, *, karatsuba: bool, compute_dtype: str):
+    """Complex dot_general with the DFT matrix on the right: X . F."""
+    dg = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(dims, ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    fr_, fi_ = _cast(fr, compute_dtype), _cast(fi, compute_dtype)
+    xr_, xi_ = _cast(xr, compute_dtype), _cast(xi, compute_dtype)
+    if karatsuba:
+        p1 = dg(xr_, fr_)
+        p2 = dg(xi_, fi_)
+        p3 = dg(_cast(xr + xi, compute_dtype), _cast(fr + fi, compute_dtype))
+        return p1 - p2, p3 - p1 - p2
+    yr = dg(xr_, fr_) - dg(xi_, fi_)
+    yi = dg(xi_, fr_) + dg(xr_, fi_)
+    return yr, yi
+
+
+# ---------------------------------------------------------------------------
+# Four-step matmul FFT, in-kernel (rows: transform the last axis of (L, N))
+# ---------------------------------------------------------------------------
+
+def _fft_rows_matmul(xr, xi, consts, spec: SpectralSpec):
+    f1r, f1i, f2r, f2i, twr, twi = consts
+    n1, n2 = spec.factors()
+    L = xr.shape[0]
+    xr = xr.reshape(L, n1, n2)
+    xi = xi.reshape(L, n1, n2)
+    # Stage A: contract n1 with F1 -> (n1, L, n2)
+    ar, ai = _cdot(f1r, f1i, xr, xi, ((1,), (1,)),
+                   karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    # Twiddle (n1, 1, n2)
+    br, bi = _cmul(ar, ai, twr[:, None, :], twi[:, None, :])
+    # Stage C: contract n2 with F2 -> (n1, L, n2)
+    cr, ci = _cdot_rhs(br, bi, f2r, f2i, ((2,), (0,)),
+                       karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    # out[l, k2*n1 + k1] = C[k1, l, k2]
+    cr = jnp.transpose(cr, (1, 2, 0)).reshape(L, spec.n)
+    ci = jnp.transpose(ci, (1, 2, 0)).reshape(L, spec.n)
+    return cr, ci
+
+
+def _fft_cols_matmul(xr, xi, consts, spec: SpectralSpec):
+    """Transform axis 0 of an (N, C) column slab — no global transpose needed."""
+    f1r, f1i, f2r, f2i, twr, twi = consts
+    n1, n2 = spec.factors()
+    C = xr.shape[1]
+    xr = xr.reshape(n1, n2, C)
+    xi = xi.reshape(n1, n2, C)
+    # Stage A: contract n1 with F1 -> (n1, n2, C)
+    ar, ai = _cdot(f1r, f1i, xr, xi, ((1,), (0,)),
+                   karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    br, bi = _cmul(ar, ai, twr[:, :, None], twi[:, :, None])
+    # Stage C: contract n2 with F2 -> (n1, C, n2)
+    cr, ci = _cdot_rhs(br, bi, f2r, f2i, ((1,), (0,)),
+                       karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    # out[k2*n1 + k1, c] = C[k1, c, k2]
+    cr = jnp.transpose(cr, (2, 0, 1)).reshape(spec.n, C)
+    ci = jnp.transpose(ci, (2, 0, 1)).reshape(spec.n, C)
+    return cr, ci
+
+
+# ---------------------------------------------------------------------------
+# Stockham VPU FFT, in-kernel (the paper's 'scalar' baseline, radix-4 + radix-2)
+# ---------------------------------------------------------------------------
+
+def _fft_stockham(xr, xi, spec: SpectralSpec, axis: int):
+    """Self-sorting Stockham along `axis` of a 2-D block, pure vector ops."""
+    if axis == 0:  # operate on (N, C): move to (C, N), reuse rows code, move back
+        yr, yi = _fft_stockham(xr.T, xi.T, spec, 1)
+        return yr.T, yi.T
+    L, N = xr.shape
+    yr = xr.reshape(L, N, 1)
+    yi = xi.reshape(L, N, 1)
+    n, s = N, 1
+    while n > 1:
+        if n % 4 == 0:
+            m = n // 4
+            k = jax.lax.broadcasted_iota(jnp.float32, (m, 1), 0)
+            th = (-2.0 * math.pi / n) * k
+            w1r, w1i = jnp.cos(th), jnp.sin(th)
+            w2r, w2i = _cmul(w1r, w1i, w1r, w1i)
+            w3r, w3i = _cmul(w2r, w2i, w1r, w1i)
+            sl = lambda z, q: z[:, q * m:(q + 1) * m, :]
+            a_r, a_i = sl(yr, 0), sl(yi, 0)
+            b_r, b_i = sl(yr, 1), sl(yi, 1)
+            c_r, c_i = sl(yr, 2), sl(yi, 2)
+            d_r, d_i = sl(yr, 3), sl(yi, 3)
+            apc_r, apc_i = a_r + c_r, a_i + c_i
+            amc_r, amc_i = a_r - c_r, a_i - c_i
+            bpd_r, bpd_i = b_r + d_r, b_i + d_i
+            bmd_r, bmd_i = b_r - d_r, b_i - d_i
+            t0r, t0i = apc_r + bpd_r, apc_i + bpd_i
+            # (amc - i*bmd) * w1
+            u1r, u1i = amc_r + bmd_i, amc_i - bmd_r
+            t1r, t1i = _cmul(u1r, u1i, w1r, w1i)
+            # (apc - bpd) * w2
+            t2r, t2i = _cmul(apc_r - bpd_r, apc_i - bpd_i, w2r, w2i)
+            # (amc + i*bmd) * w3
+            u3r, u3i = amc_r - bmd_i, amc_i + bmd_r
+            t3r, t3i = _cmul(u3r, u3i, w3r, w3i)
+            yr = jnp.stack([t0r, t1r, t2r, t3r], axis=2).reshape(L, m, 4 * s)
+            yi = jnp.stack([t0i, t1i, t2i, t3i], axis=2).reshape(L, m, 4 * s)
+            n, s = m, 4 * s
+        else:
+            m = n // 2
+            k = jax.lax.broadcasted_iota(jnp.float32, (m, 1), 0)
+            th = (-2.0 * math.pi / n) * k
+            wr, wi = jnp.cos(th), jnp.sin(th)
+            a_r, a_i = yr[:, :m, :], yi[:, :m, :]
+            b_r, b_i = yr[:, m:, :], yi[:, m:, :]
+            t1r, t1i = _cmul(a_r - b_r, a_i - b_i, wr, wi)
+            yr = jnp.stack([a_r + b_r, t1r], axis=2).reshape(L, m, 2 * s)
+            yi = jnp.stack([a_i + b_i, t1i], axis=2).reshape(L, m, 2 * s)
+            n, s = m, 2 * s
+    return yr.reshape(L, N), yi.reshape(L, N)
+
+
+# ---------------------------------------------------------------------------
+# The fused kernel body: [FFT] -> [multiply] -> [IFFT], one dispatch
+# ---------------------------------------------------------------------------
+
+def _run_fft(xr, xi, consts, spec: SpectralSpec, inverse: bool):
+    """Forward or inverse (conj-FFT-conj) transform along spec.axis."""
+    if inverse:
+        xi = -xi
+    if spec.fft_impl == "matmul":
+        fft = _fft_rows_matmul if spec.axis == 1 else _fft_cols_matmul
+        yr, yi = fft(xr, xi, consts, spec)
+    elif spec.fft_impl == "stockham":
+        yr, yi = _fft_stockham(xr, xi, spec, spec.axis)
+    else:
+        raise ValueError(f"unknown fft_impl {spec.fft_impl}")
+    if inverse:
+        # conj + 1/N, folded into the final store (paper SSII-C)
+        scale = 1.0 / spec.n
+        return yr * scale, yi * (-scale)
+    return yr, yi
+
+
+def _spectral_kernel(spec: SpectralSpec, *refs):
+    """Pallas kernel body. Ref layout (in order):
+
+    xr, xi, [f1r,f1i,f2r,f2i,twr,twi if matmul], [filter refs...], or, oi
+    """
+    it = iter(refs)
+    xr_ref, xi_ref = next(it), next(it)
+    consts = None
+    if spec.fft_impl == "matmul" and (spec.fwd or spec.inv):
+        consts = tuple(next(it)[...] for _ in range(6))
+    filt = ()
+    if spec.filter_mode in (FILTER_SHARED, FILTER_FULL):
+        filt = (next(it), next(it))          # hr, hi
+    elif spec.filter_mode == FILTER_OUTER:
+        filt = (next(it), next(it))          # u (per-line), v (per-sample)
+    elif spec.filter_mode == FILTER_SHARED_OUTER:
+        filt = (next(it), next(it), next(it), next(it))  # hr, hi, u, v
+    or_ref, oi_ref = next(it), next(it)
+
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+
+    if spec.fwd:
+        xr, xi = _run_fft(xr, xi, consts, spec, inverse=False)
+
+    def _apply_outer(xr, xi, u_ref, v_ref):
+        u = u_ref[...]      # rows: (L, K); cols: (K, C)  — per-line parameters
+        v = v_ref[...]      # rows: (K, N); cols: (N, K)  — per-sample parameters
+        # rank-K phase synthesized in VMEM (no 2-D filter I/O)
+        if spec.axis == 1:
+            phase = jax.lax.dot_general(
+                u, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            phase = jax.lax.dot_general(
+                v, u, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        return _cmul(xr, xi, jnp.cos(phase), jnp.sin(phase))
+
+    if spec.filter_mode in (FILTER_SHARED, FILTER_FULL):
+        # FILTER_SHARED blocks are (1, N) [rows] or (N, 1) [cols]: broadcast.
+        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
+    elif spec.filter_mode == FILTER_OUTER:
+        xr, xi = _apply_outer(xr, xi, filt[0], filt[1])
+    elif spec.filter_mode == FILTER_SHARED_OUTER:
+        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
+        xr, xi = _apply_outer(xr, xi, filt[2], filt[3])
+
+    if spec.inv:
+        xr, xi = _run_fft(xr, xi, consts, spec, inverse=True)
+
+    or_ref[...] = xr
+    oi_ref[...] = xi
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builder
+# ---------------------------------------------------------------------------
+
+def _flops_per_line(spec: SpectralSpec) -> float:
+    """Nominal 5 N log2 N per transform + 6N per complex multiply (for benches)."""
+    n = spec.n
+    f = 0.0
+    if spec.fwd:
+        f += 5.0 * n * math.log2(n)
+    if spec.inv:
+        f += 5.0 * n * math.log2(n)
+    if spec.filter_mode != FILTER_NONE:
+        f += 6.0 * n
+    return f
+
+
+def build_spectral_call(spec: SpectralSpec, lines: int, interpret: bool = False):
+    """Returns fn(xr, xi, *filter_args) -> (yr, yi) as a single pallas_call.
+
+    Rows pipeline: x is (lines, N), grid over line blocks.
+    Cols pipeline: x is (N, lines), grid over column blocks.
+    """
+    n = spec.n
+    L = spec.block
+    if lines % L:
+        raise ValueError(f"lines={lines} not divisible by block={L}")
+    grid = (lines // L,)
+
+    K = spec.outer_rank
+    if spec.axis == 1:
+        x_shape = (lines, n)
+        x_spec = pl.BlockSpec((L, n), lambda i: (i, 0))
+        shared_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+        full_spec = x_spec
+        u_spec = pl.BlockSpec((L, K), lambda i: (i, 0))   # (lines, K)
+        v_spec = pl.BlockSpec((K, n), lambda i: (0, 0))   # (K, n)
+    else:
+        x_shape = (n, lines)
+        x_spec = pl.BlockSpec((n, L), lambda i: (0, i))
+        shared_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
+        full_spec = x_spec
+        u_spec = pl.BlockSpec((K, L), lambda i: (0, i))   # (K, lines)
+        v_spec = pl.BlockSpec((n, K), lambda i: (0, 0))   # (n, K)
+
+    in_specs = [x_spec, x_spec]
+    extra_args: list[jnp.ndarray] = []
+
+    needs_consts = spec.fft_impl == "matmul" and (spec.fwd or spec.inv)
+    if needs_consts:
+        n1, n2 = spec.factors()
+        consts = dft_constants(n1, n2)
+        const_specs = [
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+        ]
+        in_specs += const_specs
+        extra_args += [jnp.asarray(c) for c in consts]
+
+    if spec.filter_mode == FILTER_SHARED:
+        in_specs += [shared_spec, shared_spec]
+    elif spec.filter_mode == FILTER_FULL:
+        in_specs += [full_spec, full_spec]
+    elif spec.filter_mode == FILTER_OUTER:
+        in_specs += [u_spec, v_spec]
+    elif spec.filter_mode == FILTER_SHARED_OUTER:
+        in_specs += [shared_spec, shared_spec, u_spec, v_spec]
+
+    out_specs = [x_spec, x_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct(x_shape, jnp.float32),
+        jax.ShapeDtypeStruct(x_shape, jnp.float32),
+    ]
+
+    kernel = functools.partial(_spectral_kernel, spec)
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+
+    def fn(xr, xi, *filter_args):
+        args = [xr, xi] + extra_args + list(filter_args)
+        return call(*args)
+
+    fn.flops = _flops_per_line(spec) * lines  # nominal, for benchmark CSV
+    return fn

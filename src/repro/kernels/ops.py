@@ -1,0 +1,179 @@
+"""Jit'd public wrappers around the fused spectral Pallas kernel.
+
+All functions take/return split re/im float32 arrays. `interpret=None`
+auto-selects interpret mode off-TPU (this container is CPU-only; on a real
+TPU fleet the same code lowers to Mosaic).
+
+The wrappers handle line-count padding so callers never worry about the
+block size; the kernel itself assumes divisibility.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fft4step import (
+    FILTER_FULL,
+    FILTER_NONE,
+    FILTER_OUTER,
+    FILTER_SHARED,
+    FILTER_SHARED_OUTER,
+    SpectralSpec,
+    build_spectral_call,
+)
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_lines(x, axis, mult):
+    lines = x.shape[axis]
+    pad = (-lines) % mult
+    if pad == 0:
+        return x, lines
+    widths = [(0, 0), (0, 0)]
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), lines
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "axis", "fwd", "inv", "filter_mode", "block", "fft_impl",
+        "karatsuba", "compute_dtype", "interpret", "n1", "n2",
+    ),
+)
+def spectral_op(
+    xr,
+    xi,
+    hr=None,
+    hi=None,
+    u=None,
+    v=None,
+    *,
+    axis: int = 1,
+    fwd: bool = True,
+    inv: bool = True,
+    filter_mode: str = FILTER_NONE,
+    block: int = 8,
+    fft_impl: str = "matmul",
+    karatsuba: bool = False,
+    compute_dtype: str = "f32",
+    interpret: Optional[bool] = None,
+    n1: Optional[int] = None,
+    n2: Optional[int] = None,
+):
+    """One fused dispatch: [FFT] -> [filter multiply] -> [IFFT] along `axis`.
+
+    x: (lines, N) when axis=1, (N, lines) when axis=0.
+    filter args by mode:
+      shared: hr/hi (N,)       — e.g. the range matched filter
+      full:   hr/hi same shape as x
+      outer:  u (lines,) or (lines, K), v (N,) or (N, K) —
+              filter = exp(i * sum_k u[line,k] * v[sample,k])
+    """
+    line_axis = 0 if axis == 1 else 1
+    n = xr.shape[axis]
+    xr, lines = _pad_lines(xr, line_axis, block)
+    xi, _ = _pad_lines(xi, line_axis, block)
+
+    outer_rank = 1
+    if filter_mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+        u = u.reshape(u.shape[0], -1)
+        v = v.reshape(v.shape[0], -1)
+        outer_rank = u.shape[1]
+
+    spec = SpectralSpec(
+        n=n, fwd=fwd, inv=inv, filter_mode=filter_mode, axis=axis,
+        block=block, fft_impl=fft_impl, karatsuba=karatsuba,
+        compute_dtype=compute_dtype, n1=n1, n2=n2, outer_rank=outer_rank,
+    )
+    call = build_spectral_call(spec, xr.shape[line_axis],
+                               interpret=_auto_interpret(interpret))
+
+    filter_args = []
+    if filter_mode == FILTER_SHARED:
+        fshape = (1, n) if axis == 1 else (n, 1)
+        filter_args = [hr.reshape(fshape), hi.reshape(fshape)]
+    elif filter_mode == FILTER_FULL:
+        hr, _ = _pad_lines(hr, line_axis, block)
+        hi, _ = _pad_lines(hi, line_axis, block)
+        filter_args = [hr, hi]
+    elif filter_mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+        pad = (-lines) % block
+        u = jnp.pad(u, ((0, pad), (0, 0)))      # (lines_padded, K)
+        if axis == 1:
+            filter_args = [u, v.T]              # (L, K), (K, N)
+        else:
+            filter_args = [u.T, v]              # (K, L), (N, K)
+        if filter_mode == FILTER_SHARED_OUTER:
+            fshape = (1, n) if axis == 1 else (n, 1)
+            filter_args = [hr.reshape(fshape), hi.reshape(fshape)] + filter_args
+
+    yr, yi = call(xr, xi, *filter_args)
+    if line_axis == 0:
+        return yr[:lines], yi[:lines]
+    return yr[:, :lines], yi[:, :lines]
+
+
+# ---- Convenience entry points (named for the SAR pipeline steps) ----------
+
+def fft_rows(xr, xi, **kw):
+    """Batched forward FFT along the last axis of (B, N)."""
+    return spectral_op(xr, xi, fwd=True, inv=False, axis=1, **kw)
+
+
+def ifft_rows(xr, xi, **kw):
+    return spectral_op(xr, xi, fwd=False, inv=True, axis=1, **kw)
+
+
+def fft_cols(xr, xi, **kw):
+    """Forward FFT along axis 0 of (N, C) — transpose-free column pipeline."""
+    return spectral_op(xr, xi, fwd=True, inv=False, axis=0, **kw)
+
+
+def ifft_cols(xr, xi, **kw):
+    return spectral_op(xr, xi, fwd=False, inv=True, axis=0, **kw)
+
+
+def fused_fft_mult_ifft_rows(xr, xi, hr, hi, **kw):
+    """The paper's fused range-compression dispatch: FFT · H · IFFT per line."""
+    return spectral_op(xr, xi, hr=hr, hi=hi, fwd=True, inv=True, axis=1,
+                       filter_mode=FILTER_SHARED, **kw)
+
+
+def fused_mult_ifft_cols(xr, xi, hr, hi, **kw):
+    """The paper's fused azimuth-compression dispatch: H · IFFT per column
+    (data already in the azimuth frequency domain). hr/hi is the full 2-D
+    azimuth filter H_a(f_a, R0)."""
+    return spectral_op(xr, xi, hr=hr, hi=hi, fwd=False, inv=True, axis=0,
+                       filter_mode=FILTER_FULL, **kw)
+
+
+def fused_rcmc_rows(xr, xi, shift, freqs, **kw):
+    """Beyond-paper: exact RCMC as one fused dispatch per azimuth-frequency row:
+    FFT -> exp(i * shift[row] * freqs[col]) -> IFFT (Fourier shift theorem),
+    with the rank-1 phase synthesized in VMEM (FILTER_OUTER)."""
+    return spectral_op(xr, xi, u=shift, v=freqs, fwd=True, inv=True, axis=1,
+                       filter_mode=FILTER_OUTER, **kw)
+
+
+def fused_mult_ifft_cols_outer(xr, xi, u, v, **kw):
+    """Azimuth compression with on-the-fly rank-1 phase: H = exp(i u[col] v[row])
+    — u is the per-column (range gate) 1/Ka term, v the per-row -pi f_a^2."""
+    return spectral_op(xr, xi, u=u, v=v, fwd=False, inv=True, axis=0,
+                       filter_mode=FILTER_OUTER, **kw)
+
+
+def fused_rc_rcmc_rows(xr, xi, hr, hi, u, v, **kw):
+    """Beyond-paper 3-dispatch RDA, middle dispatch: range compression AND
+    exact RCMC in one pass (data already in the azimuth-frequency domain):
+    FFT -> H_r[col] * exp(i shift[row] * freqs[col]) -> IFFT."""
+    return spectral_op(xr, xi, hr=hr, hi=hi, u=u, v=v, fwd=True, inv=True,
+                       axis=1, filter_mode=FILTER_SHARED_OUTER, **kw)

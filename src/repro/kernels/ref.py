@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (complex64 via jnp.fft).
+
+These define the numerical ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def to_complex(xr, xi):
+    return xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64)
+
+
+def from_complex(x):
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def fft_ref(xr, xi, axis: int):
+    return from_complex(jnp.fft.fft(to_complex(xr, xi), axis=axis))
+
+
+def ifft_ref(xr, xi, axis: int):
+    return from_complex(jnp.fft.ifft(to_complex(xr, xi), axis=axis))
+
+
+def spectral_ref(xr, xi, *, axis: int, fwd: bool, inv: bool,
+                 hr=None, hi=None, u=None, v=None):
+    """Oracle for the fused pipeline: [FFT] -> [pointwise filter] -> [IFFT].
+
+    hr/hi: explicit filter (broadcastable to x). u/v: rank-K phase filter
+    exp(i * sum_k u[line,k] v[sample,k]) matching FILTER_OUTER
+    (u: (lines,) or (lines, K); v: (n,) or (n, K))."""
+    x = to_complex(xr, xi)
+    if fwd:
+        x = jnp.fft.fft(x, axis=axis)
+    if hr is not None:
+        x = x * to_complex(hr, hi)
+    if u is not None:
+        u2 = u.reshape(u.shape[0], -1)
+        v2 = v.reshape(v.shape[0], -1)
+        phase = jnp.einsum("lk,sk->ls", u2, v2)   # (lines, samples)
+        if axis == 0:
+            phase = phase.T
+        x = x * jnp.exp(1j * phase.astype(jnp.complex64))
+    if inv:
+        x = jnp.fft.ifft(x, axis=axis)
+    return from_complex(x)
+
+
+def transpose_ref(x):
+    return x.T

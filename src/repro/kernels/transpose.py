@@ -1,0 +1,39 @@
+"""Tiled VMEM transpose kernel (used by the paper-faithful pipeline variant).
+
+The paper's azimuth steps spend 80% of runtime on global transposes; our
+production pipeline eliminates them with column-slab kernels (fft4step.py,
+axis=0), but the paper-faithful variant keeps them so the reproduction and
+the beyond-paper win can be measured separately (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def transpose(x, *, tile: int = 256, interpret: Optional[bool] = None):
+    """Tiled (R, C) -> (C, R) transpose. Tile must divide both dims."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r, c = x.shape
+    t = min(tile, r, c)
+    if r % t or c % t:
+        # fall back to XLA for ragged shapes (tests exercise the tiled path)
+        return x.T
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(r // t, c // t),
+        in_specs=[pl.BlockSpec((t, t), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((c, r), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, sharding rules, AOT dry-run, roofline, drivers."""

@@ -1,0 +1,168 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = per-device link bytes / 50e9 B/s per ICI link
+
+Collective bytes come from the post-SPMD HLO text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's tensor
+bytes, scaled by the ring-transfer factor on its replica-group size g:
+  all-reduce      2 (g-1)/g        (reduce-scatter + all-gather phases)
+  all-gather      (g-1)/g          (on the gathered output bytes)
+  reduce-scatter  (g-1)/g          (on the scattered input bytes)
+  all-to-all      (g-1)/g
+  collective-permute  1
+HLO_FLOPs / HLO_bytes from compiled.cost_analysis() are for the per-device
+SPMD program, so terms are per-chip step latencies directly (the `chips x`
+division is already reflected in the partitioned shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|[a-z0-9\[\],{} ]+?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_FACTORS = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+    link_bytes: float      # ring-model per-device bytes over the slowest link
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by_op: dict = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3).lower()
+        if "-done" in line.split("=")[1][:40]:
+            continue  # async done ops carry no new bytes
+        nbytes = _shape_bytes(m.group(2))  # output shape (tuple-safe)
+        if nbytes == 0:
+            continue
+        g = _group_size(line, n_devices)
+        counts[op] = counts.get(op, 0) + 1
+        bytes_by_op[op] = bytes_by_op.get(op, 0) + nbytes
+        link += _FACTORS[op](max(g, 1)) * nbytes
+    return CollectiveStats(counts, bytes_by_op, link)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collectives: CollectiveStats
+    model_flops: Optional[float] = None   # analytic 6*N*D (or 6*N_active*D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collectives.link_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self) -> float:
+        """Roofline step-time lower bound (max of the three terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_counts": self.collectives.counts,
+            "collective_bytes_by_op": self.collectives.bytes_by_op,
+            "collective_link_bytes": self.collectives.link_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_bound_s": self.bound,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+        }
+
+
+def from_compiled(compiled, n_devices: int,
+                  model_flops: Optional[float] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text(), n_devices)
+    return Roofline(flops, nbytes, stats, model_flops)

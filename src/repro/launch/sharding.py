@@ -1,0 +1,162 @@
+"""Parameter sharding rules: FSDP over "data" x tensor/expert parallel over
+"model", resolved per architecture.
+
+Rules are path-regex -> logical axes; logical axes resolve to mesh axes
+(launch.mesh.activation_rules) with divisibility checks — a dimension that
+does not divide its mesh axis falls back to replicated rather than relying
+on GSPMD padding (exceptions: see `_maybe`). MoE experts shard over "model"
+when E divides it (expert parallelism); otherwise experts replicate and the
+per-expert FFN is sharded over its hidden dim (granite's 40 experts on a
+16-way axis; DESIGN.md §MoE-sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# path-regex -> logical spec (leading scan axis handled automatically)
+PARAM_RULES = [
+    (r"\['embed'\]\['table'\]$", ("vocab", "embed")),
+    (r"\['lm_head'\]\['table'\]$", ("vocab", "embed")),
+    (r"\['(wq|wk|wv)'\]$", ("embed", "heads")),
+    (r"\['wo'\]$", ("heads", "embed")),
+    (r"\['(wi_gate|wi_up)'\]$", ("embed", "ff")),          # dense MLP (D, F)
+    (r"\['ffn'\]\['router'\]$", ("embed", None)),
+    (r"moe_wi", ("experts", "embed", "ff")),               # (E, D, F) placeholder
+    (r"\['in_proj'\]$", ("embed", "ff")),                  # mamba (D, 2di)
+    (r"\['x_proj'\]$", ("ff", None)),
+    (r"\['dt_proj'\]\['w'\]$", (None, "ff")),
+    (r"\['dt_proj'\]\['b'\]$", ("ff",)),
+    (r"\['a_log'\]$", ("ff", None)),
+    (r"\['d_skip'\]$", ("ff",)),
+    (r"\['out_proj'\]$", ("ff", "embed")),                 # mamba/rglru out
+    (r"\['(gate_proj|rec_proj)'\]$", ("embed", "ff")),     # rglru (D, W)
+    (r"\['(wa|wx)'\]$", (None, "ff")),                     # rglru (W, W)
+    (r"\['lambda'\]$", ("ff",)),
+    (r"\['conv'\]\['w'\]$", (None, "ff")),
+    (r"\['conv'\]\['b'\]$", ("ff",)),
+    (r"\['scale'\]$", (None,)),                            # norms
+]
+
+
+def _logical_for(path: str, shape, cfg: ModelConfig, ep: bool):
+    # MoE expert tensors are 3-D (E, D, F) / (E, F, D) — 4-D when
+    # scan-stacked (the leading period axis is added by the caller).
+    if re.search(r"\['ffn'\]\['(wi_gate|wi_up)'\]$", path) and len(shape) >= 3:
+        return ("experts", "embed", None) if ep else (None, "embed", "ff")
+    if re.search(r"\['ffn'\]\['wo'\]$", path) and len(shape) >= 3:
+        return ("experts", None, "embed") if ep else (None, "ff", "embed")
+    for pat, spec in PARAM_RULES:
+        if re.search(pat, path):
+            return spec
+    return tuple(None for _ in shape)
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _maybe(mesh: Mesh, rules: dict, logical, dim: int) -> Optional[object]:
+    """Resolve one logical name to a mesh axis iff the dim divides it."""
+    axis = rules.get(logical) if logical else None
+    if axis is None:
+        return None
+    if dim % _mesh_axis_size(mesh, axis) != 0:
+        return None
+    return axis
+
+
+def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh, rules: dict):
+    """Pytree of NamedSharding for a params (or eval_shape) pytree."""
+    ep = (cfg.moe is not None
+          and cfg.moe.n_experts % _mesh_axis_size(mesh, rules.get("experts")) == 0)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        pstr = "".join(str(k) for k in path)
+        shape = leaf.shape
+        logical = _logical_for(pstr, shape, cfg, ep)
+        # scan-stacked params carry a leading period axis -> replicated dim
+        if "'scan'" in pstr and len(logical) == len(shape) - 1:
+            logical = (None,) + tuple(logical)
+        if len(logical) != len(shape):
+            logical = tuple(None for _ in shape)
+        spec = P(*[_maybe(mesh, rules, l, d) for l, d in zip(logical, shape)])
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_shardings(cache_shape, cfg: ModelConfig, mesh: Mesh, rules: dict,
+                    batch: int):
+    """Decode-cache shardings. KV tensors (..., B, S, K, Dh): batch shards
+    over the batch axes when divisible; otherwise the cache sequence shards
+    over "data" (sequence-parallel flash-decoding for batch-1 long context).
+    KV heads shard over "model" when divisible, else head_dim."""
+    baxes = rules.get("batch")
+    b_ok = batch % _mesh_axis_size(mesh, baxes) == 0 and batch > 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    out = []
+    for path, leaf in flat:
+        pstr = "".join(str(k) for k in path)
+        shape = leaf.shape
+        spec = P()
+        if re.search(r"\['(k|v)'\]$", pstr) and len(shape) >= 4:
+            lead = len(shape) - 4
+            bdim, sdim, kdim, ddim = shape[-4:]
+            b_ax = baxes if (b_ok and bdim % _mesh_axis_size(mesh, baxes) == 0) else None
+            s_ax = None if b_ax is not None else _maybe(
+                mesh, rules, "kv_seq", sdim)
+            k_ax = _maybe(mesh, rules, "heads", kdim)
+            d_ax = None if k_ax is not None else _maybe(
+                mesh, rules, "heads", ddim)
+            spec = P(*([None] * lead + [b_ax, s_ax, k_ax, d_ax]))
+        elif re.search(r"\['pos'\]$", pstr) and len(shape) >= 2:
+            lead = len(shape) - 2
+            b_ax = baxes if (b_ok and shape[-2] % _mesh_axis_size(mesh, baxes) == 0) else None
+            spec = P(*([None] * lead + [b_ax, None]))
+        elif len(shape) >= 2:  # recurrent states (..., B, ...)
+            lead = len(shape) - 2
+            # state tensors: (P?, B, di, n) or (P?, B, w-1, di)
+            dims = list(shape)
+            axes = [None] * len(shape)
+            # batch dim is the first after any scan lead for rec states
+            bpos = 1 if len(shape) > 2 and "'scan'" in pstr else 0
+            if b_ok and dims[bpos] % _mesh_axis_size(mesh, baxes) == 0:
+                axes[bpos] = baxes
+            # shard the channel dim over model if divisible
+            ch = len(shape) - 1 if re.search(r"conv", pstr) else len(shape) - 2
+            spec = P(*axes)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shape, mesh: Mesh, rules: dict):
+    """Input batch: dim 0 over the batch axes (if divisible), rest replicated."""
+    baxes = rules.get("batch")
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ok = leaf.shape[0] % _mesh_axis_size(mesh, baxes) == 0
+        return NamedSharding(
+            mesh, P(*([baxes if ok else None] + [None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def attach(shapes, shardings):
+    """ShapeDtypeStruct pytree + sharding pytree -> sharded SDS pytree
+    (the AOT lowering inputs; no device allocation)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

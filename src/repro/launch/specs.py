@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Per the assignment, modality frontends are stubs: `input_specs` supplies
+precomputed frame/patch embeddings alongside the token ids. Nothing here
+allocates device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec
+from repro.models import Model
+from repro.models.config import ModelConfig
+
+N_PATCHES = 256  # vision stub: fixed patch count folded into the sequence
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    out = {"tokens": sds((b, s), i32)}
+    if with_labels:
+        out["labels"] = sds((b, s), i32)
+    if cfg.frontend == "vision_stub":
+        out["patch_embeds"] = sds((b, N_PATCHES, cfg.d_model), jnp.bfloat16)
+        if cfg.mrope_sections is not None:
+            out["positions"] = sds((b, s, len(cfg.mrope_sections)), i32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((b, cfg.encoder.n_frames, cfg.d_model),
+                            jnp.bfloat16)
+    return out
+
+
+def decode_token_specs(shape: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(model: Model, shape: ShapeSpec) -> dict:
+    """Abstract decode cache (already at full length: the decode cells lower
+    one serve_step against a seq_len-deep cache, per the assignment)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def params_specs(model: Model) -> dict:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

@@ -1,0 +1,30 @@
+"""The three lowered entry points per architecture: train_step, prefill,
+decode_step — plus the SAR pipeline step for the paper's own workload."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw
+
+
+def build_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None,
+                     accum_steps: int = 1):
+    opt_cfg = opt_cfg or AdamWConfig()
+    return adamw.make_train_step(model.loss, opt_cfg, accum_steps)
+
+
+def build_prefill(model: Model, max_len: int):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def build_decode(model: Model):
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode

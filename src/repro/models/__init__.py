@@ -1,0 +1,14 @@
+"""LM model stack for the assigned architecture pool."""
+from repro.models.config import (  # noqa: F401
+    EncoderConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+)
+from repro.models.model import Model  # noqa: F401
+from repro.models.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    shard,
+    use_mesh_rules,
+)

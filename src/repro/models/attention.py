@@ -1,0 +1,246 @@
+"""GQA attention: global causal, sliding-window local, bidirectional
+(encoder), cross-attention, with full and ring KV caches for decode.
+
+Numerics: logits and softmax in float32 regardless of compute dtype.
+Memory: optional query chunking (lax.scan with rematerialized chunk body)
+keeps the (Sq, Skv) score matrix bounded at Sq_chunk * Skv — the pure-JAX
+flash-attention pattern, adequate on TPU where XLA fuses mask+softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, cast, rope_angles, truncated_normal
+from repro.models.sharding import axis_size, shard
+
+
+def _kv_spec(n_kv: int, head_dim: int) -> tuple:
+    """KV tensors (B, S, K, Dh): shard heads over "model" only when K divides
+    it (padded small-K shardings trigger involuntary SPMD remats); fall back
+    to head_dim, then replicated."""
+    m = axis_size("heads")
+    if m > 1 and n_kv % m == 0:
+        return (None, "heads", None)
+    if m > 1 and head_dim % m == 0:
+        return (None, None, "heads")
+    return (None, None, None)
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": truncated_normal(k1, (d, n_heads * head_dim), d ** -0.5),
+        "wk": truncated_normal(k2, (d, n_kv * head_dim), d ** -0.5),
+        "wv": truncated_normal(k3, (d, n_kv * head_dim), d ** -0.5),
+        "wo": truncated_normal(k4, (n_heads * head_dim, d),
+                               (n_heads * head_dim) ** -0.5),
+    }
+    return p
+
+
+def _split_heads(x, n, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, head_dim)
+
+
+def _score_mask(q_pos, k_pos, causal: bool, window: Optional[int],
+                k_valid=None):
+    """(B, Sq, Skv) bool mask of allowed attention edges.
+
+    q_pos/k_pos: (B, Sq)/(B, Skv) int32 absolute positions.
+    window W: only k in (q - W, q] (combined with causal).
+    k_valid: (B, Skv) bool for cache slots that are populated.
+    """
+    d = q_pos[:, :, None] - k_pos[:, None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m = m & (d >= 0)
+    if window is not None:
+        m = m & (d < window)
+    if k_valid is not None:
+        m = m & k_valid[:, None, :]
+    return m
+
+
+def sdpa(q, k, v, mask, q_chunk: Optional[int] = None):
+    """q: (B,Sq,H,Dh), k/v: (B,Skv,K,Dh), mask: (B,Sq,Skv) -> (B,Sq,H,Dh).
+
+    GQA: H = G*K query heads share K kv heads. float32 softmax.
+
+    Train/prefill (Sq > 1): kv heads are expanded to H so the score tensor
+    (B, H, Sq_chunk, Skv) is cleanly head-sharded over "model" — kv counts
+    like yi's K=8 on a 16-way axis would otherwise leave the scores
+    unsharded (56 GiB/device in the dry run). The expansion is cheap: kv
+    projections are small and slice per-shard. Decode (Sq == 1) keeps the
+    grouped einsum — expanding would multiply KV-cache HBM reads by G.
+    """
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = dh ** -0.5
+
+    if sq == 1:
+        qg = q.reshape(b, sq, kheads, g, dh)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+        return o.reshape(b, sq, h, dh)
+
+    kf = jnp.repeat(k, g, axis=2) if g > 1 else k     # (B,Skv,H,Dh)
+    vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+    kf = shard(kf, "batch", None, "heads", None)
+    vf = shard(vf, "batch", None, "heads", None)
+
+    def block(qc, mc):
+        # qc: (B,c,H,Dh), mc: (B,c,Skv)
+        logits = jnp.einsum("bqhd,bshd->bhqs", qc, kf,
+                            preferred_element_type=jnp.float32) * scale
+        logits = shard(logits, "batch", "heads", None, None)
+        logits = jnp.where(mc[:, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", w, vf)
+
+    if q_chunk is None or sq <= q_chunk:
+        return block(q, mask)
+
+    n = sq // q_chunk
+    rem = sq - n * q_chunk
+    xs = (q[:, :n * q_chunk].reshape(b, n, q_chunk, h, dh).swapaxes(0, 1),
+          mask[:, :n * q_chunk].reshape(b, n, q_chunk, -1).swapaxes(0, 1))
+    _, ys = jax.lax.scan(
+        lambda c, inp: (c, jax.checkpoint(block)(inp[0], inp[1])), None, xs)
+    out = ys.swapaxes(0, 1).reshape(b, n * q_chunk, h, dh)
+    if rem:
+        out = jnp.concatenate([out, block(q[:, -rem:], mask[:, -rem:])], 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_full_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                    dtype) -> dict:
+    shape = (batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_ring_cache(batch: int, window: int, n_kv: int, head_dim: int,
+                    dtype) -> dict:
+    shape = (batch, window, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.full((batch, window), -1, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# The attention block (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None          # None = global
+    theta: float = 10_000.0
+    sections: Optional[tuple] = None      # M-RoPE
+    use_rope: bool = True
+    q_chunk: Optional[int] = None
+
+
+def attn_forward(p, spec: AttnSpec, x, positions, k_pos=None, xkv=None):
+    """Training/prefill forward. x: (B,S,D). Returns (out, (k, v)) with k/v
+    rotated (ready for caching)."""
+    dt = x.dtype
+    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
+    src = x if xkv is None else xkv
+    k = _split_heads(src @ cast(p["wk"], dt), spec.n_kv, spec.head_dim)
+    v = _split_heads(src @ cast(p["wv"], dt), spec.n_kv, spec.head_dim)
+    kp = positions if k_pos is None else k_pos
+    if spec.use_rope:
+        q = apply_rope(q, rope_angles(positions, spec.head_dim, spec.theta,
+                                      spec.sections))
+        k = apply_rope(k, rope_angles(kp, spec.head_dim, spec.theta,
+                                      spec.sections))
+    q = shard(q, "batch", None, "heads", None)
+    kvs = _kv_spec(spec.n_kv, spec.head_dim)
+    k = shard(k, "batch", *kvs)
+    v = shard(v, "batch", *kvs)
+    mask = _score_mask(positions if positions.ndim == 2 else positions[..., 0],
+                       kp if kp.ndim == 2 else kp[..., 0],
+                       spec.causal, spec.window)
+    o = sdpa(q, k, v, mask, spec.q_chunk)
+    o = shard(o, "batch", None, "heads", None)
+    out = o.reshape(*x.shape[:2], -1) @ cast(p["wo"], dt)
+    return out, (k, v)
+
+
+def attn_decode(p, spec: AttnSpec, x, cache: dict, pos):
+    """One-token decode. x: (B,1,D); pos: scalar int32 (uniform batch).
+
+    Full cache: k/v written at index pos; ring cache: at pos % window.
+    Returns (out, new_cache)."""
+    dt = x.dtype
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if spec.sections is not None:
+        positions = jnp.repeat(positions[..., None], len(spec.sections), -1)
+    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
+    k = _split_heads(x @ cast(p["wk"], dt), spec.n_kv, spec.head_dim)
+    v = _split_heads(x @ cast(p["wv"], dt), spec.n_kv, spec.head_dim)
+    if spec.use_rope:
+        ang = rope_angles(positions, spec.head_dim, spec.theta, spec.sections)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+    ring = "pos" in cache
+    slot = (pos % cache["k"].shape[1]) if ring else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    new_cache = dict(cache, k=ck, v=cv)
+    if ring:
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((b, 1), pos, jnp.int32), (0, slot))
+        new_cache["pos"] = cpos
+        k_pos, k_valid = cpos, cpos >= 0
+    else:
+        idx = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        k_pos = jnp.broadcast_to(idx, (b, ck.shape[1]))
+        k_valid = k_pos <= pos
+    qpos2 = positions if positions.ndim == 2 else positions[..., 0]
+    mask = _score_mask(qpos2, k_pos, spec.causal, spec.window, k_valid)
+    kvs = _kv_spec(spec.n_kv, spec.head_dim)
+    if b == 1:
+        # batch-1 long-context decode: sequence-parallel KV (flash-decoding;
+        # the softmax reduction over shards is GSPMD's to all-reduce)
+        ck_s = shard(ck.astype(dt), None, "kv_seq", *kvs[1:])
+        cv_s = shard(cv.astype(dt), None, "kv_seq", *kvs[1:])
+    else:
+        ck_s = shard(ck.astype(dt), "batch", *kvs)
+        cv_s = shard(cv.astype(dt), "batch", *kvs)
+    o = sdpa(q, ck_s, cv_s, mask)
+    out = o.reshape(b, 1, -1) @ cast(p["wo"], dt)
+    return out, new_cache
+
+
+def cross_decode(p, spec: AttnSpec, x, cache: dict):
+    """Decoder cross-attention against a fixed encoder cache {k, v}."""
+    dt = x.dtype
+    b = x.shape[0]
+    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
+    k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+    mask = jnp.ones((b, 1, k.shape[1]), bool)
+    o = sdpa(q, k, v, mask)
+    return o.reshape(b, 1, -1) @ cast(p["wo"], dt)

@@ -1,0 +1,176 @@
+"""Shared LM building blocks: norms, MLP, RoPE/M-RoPE, embedding, chunked CE.
+
+All parameters are plain dict pytrees of float32 arrays; activations are cast
+to the config compute dtype at use. Sharding is expressed through
+`repro.models.sharding.shard` logical-axis constraints (no-ops outside an
+active mesh-rules context, so CPU tests run unchanged).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+
+def cast(x, dtype: str):
+    return x.astype(dtype)
+
+
+def truncated_normal(key, shape, std, dtype="float32"):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": truncated_normal(k1, (d, f), d ** -0.5),
+        "wi_up": truncated_normal(k2, (d, f), d ** -0.5),
+        "wo": truncated_normal(k3, (f, d), f ** -0.5),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    dt = x.dtype
+    gate = ACTS[act](x @ cast(p["wi_gate"], dt))
+    up = x @ cast(p["wi_up"], dt)
+    # intra-block: hidden dim over "model"; seq is unsharded here (Megatron
+    # sequence parallelism applies to the residual stream between blocks)
+    h = shard(gate * up, "batch", None, "ff")
+    return h @ cast(p["wo"], dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_inv_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def rope_angles(positions, head_dim: int, theta: float,
+                sections: Optional[tuple] = None) -> jnp.ndarray:
+    """positions: (B, S) int or (B, S, C) for M-RoPE with len(sections)==C
+    frequency groups. Returns angles (B, S, head_dim // 2) float32."""
+    inv = rope_inv_freqs(head_dim, theta)
+    if sections is None:
+        return positions[..., None].astype(jnp.float32) * inv
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    parts, start = [], 0
+    for c, sec in enumerate(sections):
+        p = positions[..., c].astype(jnp.float32)
+        parts.append(p[..., None] * inv[start:start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, Dh); angles: (B, S, Dh//2). Split-half rotation."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": truncated_normal(key, (vocab, d), 1.0)}
+
+
+def embed(p, tokens, dtype: str):
+    y = jnp.take(cast(p["table"], dtype), tokens, axis=0)
+    return shard(y, "batch", "seq", None)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal embeddings, (n, d) float32."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    t = jnp.arange(n, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def lm_loss_chunked(x, table, labels, mask=None, chunk: int = 512,
+                    z_loss: float = 0.0):
+    """Mean next-token CE without materializing (B, S, V) logits.
+
+    x: (B, S, D) final hidden states; table: (V, D) (tied) output embedding;
+    labels: (B, S) int32; mask: (B, S) 0/1. Scans sequence chunks; the chunk
+    body is rematerialized in backward so only one chunk of logits is ever
+    alive.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    wt = table.astype(x.dtype)
+
+    @jax.checkpoint
+    def chunk_nll(xc, yc, mc):
+        logits = jax.lax.dot_general(                  # (B, c, V), f32 accum
+            xc, wt, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        if z_loss:
+            nll = nll + z_loss * (lse ** 2) * mc
+        return nll.sum()
+
+    def body(acc, inp):
+        xc, yc, mc = inp
+        return acc + chunk_nll(xc, yc, mc), None
+
+    xs = (x[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, d).swapaxes(0, 1),
+          labels[:, :n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1),
+          mask[:, :n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    if rem:
+        total = total + chunk_nll(x[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def logits_last(x_last, table):
+    """Decode-step logits: (B, D) @ (V, D)^T -> (B, V) float32."""
+    return jax.lax.dot_general(
+        x_last, table.astype(x_last.dtype), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)

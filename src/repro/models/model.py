@@ -1,0 +1,513 @@
+"""Model assembly: init / train forward / prefill / decode for every
+assigned architecture family.
+
+Layers follow `cfg.pattern` cycled over n_layers. Full pattern periods are
+stacked and executed with lax.scan (O(1) HLO size for 80-layer models);
+remainder layers are unrolled. Each scanned period is rematerialized
+(jax.checkpoint) so backward recomputes activations per period.
+
+Caches:
+  'global' mixers -> full KV cache (B, max_len, K, Dh)
+  'local'  mixers -> ring KV cache (B, window, K, Dh) + slot positions
+  'mamba'/'rglru' -> O(1) recurrent state
+so sub-quadratic archs decode 500k-token contexts with bounded memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import recurrent as rec
+from repro.models.config import ModelConfig, RGLRUConfig, SSMConfig
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    lm_loss_chunked,
+    logits_last,
+    mlp,
+    rmsnorm,
+    sinusoidal_positions,
+)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.sharding import shard
+
+KINDS_ATTN = ("global", "local")
+KINDS_REC = ("mamba", "rglru")
+
+# parameters that must stay float32 regardless of compute dtype (recurrence
+# decay rates, norm scales, dt bias — bf16 here visibly hurts numerics)
+_NO_CAST = ("a_log", "lambda", "scale", "d_skip")
+
+
+def cast_params_for_compute(params, dtype: str):
+    """One upfront f32 -> compute-dtype cast of the big weights, so the FSDP
+    all-gather moves bf16 (half the collective bytes and half the gathered
+    buffer footprint vs gathering f32 and converting at use)."""
+    if dtype in ("float32", "f32"):
+        return params
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = "".join(str(k) for k in path)
+        keep = any(f"'{n}'" in pstr for n in _NO_CAST) or \
+            ("dt_proj" in pstr and pstr.endswith("['b']"))
+        out.append(leaf if keep or leaf.dtype != jnp.float32
+                   else leaf.astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig, kind: str, q_chunk=None,
+               encoder: bool = False, cross: bool = False) -> attn.AttnSpec:
+    return attn.AttnSpec(
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        causal=not (encoder or cross),
+        window=cfg.window if kind == "local" else None,
+        theta=cfg.rope_theta,
+        sections=cfg.mrope_sections,
+        use_rope=cfg.encoder is None,     # whisper: absolute sinusoid instead
+        q_chunk=q_chunk,
+    )
+
+
+def init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": init_rmsnorm(d)}
+    if kind in KINDS_ATTN:
+        p["mixer"] = attn.init_attention(ks[0], d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.resolved_head_dim)
+    elif kind == "mamba":
+        p["mixer"] = rec.init_mamba(ks[0], d, cfg.ssm or SSMConfig())
+    elif kind == "rglru":
+        p["mixer"] = rec.init_rglru(ks[0], d, cfg.rglru or RGLRUConfig())
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = init_rmsnorm(d)
+        p["cross"] = attn.init_attention(ks[3], d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.resolved_head_dim)
+    if kind != "mamba":
+        p["norm2"] = init_rmsnorm(d)
+        if cfg.ffn == "mlp":
+            p["ffn"] = init_mlp(ks[1], d, cfg.d_ff)
+        elif cfg.ffn == "moe":
+            p["ffn"] = init_moe(ks[1], d, cfg.d_ff, cfg.moe)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (training / prefill): returns (x, cache_entry, aux)
+# ---------------------------------------------------------------------------
+
+def layer_forward(p, cfg: ModelConfig, kind: str, x, positions,
+                  q_chunk=None, enc_out=None, train: bool = True):
+    spec = _attn_spec(cfg, kind, q_chunk)
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in KINDS_ATTN:
+        y, entry = attn.attn_forward(p["mixer"], spec, h, positions)
+    elif kind == "mamba":
+        y, entry = rec.mamba_forward(p["mixer"], h, cfg.ssm or SSMConfig())
+    else:  # rglru
+        y, entry = rec.rglru_forward(p["mixer"], h, cfg.rglru or RGLRUConfig())
+    # constrain the row-parallel projection output to the sequence-sharded
+    # residual layout BEFORE the add: the model-axis partial-sum reduction
+    # then lowers to reduce-scatter (half the ring bytes of all-reduce) —
+    # §Perf iteration r2
+    y = shard(y, "batch", "seq", None)
+    x = x + y
+
+    if "cross" in p and enc_out is not None:
+        hq = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None],
+            enc_out.shape[:2])
+        cspec = dataclasses.replace(spec, causal=False, window=None,
+                                    use_rope=False)
+        yx, centry = attn.attn_forward(p["cross"], cspec, hq,
+                                       positions, k_pos=enc_pos, xkv=enc_out)
+        x = x + yx
+    else:
+        centry = None
+
+    if kind != "mamba":
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.ffn == "moe":
+            y2, aux = moe_ffn(p["ffn"], h2, cfg.moe, cfg.act, train)
+        else:
+            y2 = mlp(p["ffn"], h2, cfg.act)
+        y2 = shard(y2, "batch", "seq", None)
+        x = x + y2
+    return x, entry, centry, aux
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode: returns (x, new_cache_entry)
+# ---------------------------------------------------------------------------
+
+def layer_decode(p, cfg: ModelConfig, kind: str, x, cache_entry, pos,
+                 cross_cache=None):
+    spec = _attn_spec(cfg, kind)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in KINDS_ATTN:
+        y, new_entry = attn.attn_decode(p["mixer"], spec, h, cache_entry, pos)
+    elif kind == "mamba":
+        y, new_entry = rec.mamba_step(p["mixer"], h, cfg.ssm or SSMConfig(),
+                                      cache_entry)
+    else:
+        y, new_entry = rec.rglru_step(p["mixer"], h,
+                                      cfg.rglru or RGLRUConfig(), cache_entry)
+    x = x + y
+    if "cross" in p and cross_cache is not None:
+        hq = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        cspec = dataclasses.replace(spec, causal=False, window=None,
+                                    use_rope=False)
+        x = x + attn.cross_decode(p["cross"], cspec, hq, cross_cache)
+    if kind != "mamba":
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.ffn == "moe":
+            y2, _ = moe_ffn(p["ffn"], h2, cfg.moe, cfg.act, train=False)
+        else:
+            y2 = mlp(p["ffn"], h2, cfg.act)
+        x = x + y2
+    return x, new_entry
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 8)
+        params: dict[str, Any] = {
+            "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_embedding(keys[1], cfg.vocab_size,
+                                               cfg.d_model)
+        cross = cfg.is_encoder_decoder
+        period = len(cfg.pattern)
+        if cfg.scan_layers and cfg.n_periods > 1:
+            subs = {}
+            for j, kind in enumerate(cfg.pattern):
+                stacked = [init_layer(keys[2 + i * period + j], cfg, kind,
+                                      cross)
+                           for i in range(cfg.n_periods)]
+                subs[f"sub{j}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *stacked)
+            params["scan"] = subs
+        else:
+            params["layers"] = [
+                init_layer(keys[2 + i], cfg, cfg.layer_kinds[i], cross)
+                for i in range(cfg.n_periods * period)]
+        params["rem"] = [
+            init_layer(keys[2 + cfg.n_periods * period + r], cfg, kind, cross)
+            for r, kind in enumerate(cfg.remainder_kinds)]
+        if cfg.is_encoder_decoder:
+            ek = jax.random.split(keys[-1], cfg.encoder.n_layers)
+            params["encoder"] = {
+                "layers": [init_layer(ek[i], cfg, "global", cross=False)
+                           for i in range(cfg.encoder.n_layers)],
+                "final_norm": init_rmsnorm(cfg.d_model),
+            }
+        return params
+
+    # ---- encoder (whisper; frames are precomputed stub embeddings) ----------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.dtype)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                               x.shape[:2])
+        for p in params["encoder"]["layers"]:
+            spec = _attn_spec(cfg, "global", encoder=True)
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            y, _ = attn.attn_forward(p["mixer"], spec, h, pos)
+            x = x + y
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            x = x + mlp(p["ffn"], h2, cfg.act)
+        return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    # ---- backbone forward ----------------------------------------------------
+    def _inputs_to_x(self, params, batch):
+        """tokens (+ stub frontend embeddings) -> initial hidden states."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, cfg.dtype)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(cfg.dtype)
+            n = pe.shape[1]
+            x = jnp.concatenate([x[:, :n] + pe, x[:, n:]], axis=1)
+        if cfg.is_encoder_decoder:
+            x = x + sinusoidal_positions(x.shape[1],
+                                         cfg.d_model).astype(x.dtype)
+        if "positions" in batch:
+            positions = batch["positions"]
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+            if cfg.mrope_sections is not None:
+                positions = jnp.repeat(positions[..., None],
+                                       len(cfg.mrope_sections), -1)
+        return x, positions
+
+    def forward(self, params, batch, collect_cache: bool = False,
+                train: bool = True):
+        """Returns (final hidden states, aux_loss, cache_entries)."""
+        cfg = self.cfg
+        params = cast_params_for_compute(params, cfg.dtype)
+        x, positions = self._inputs_to_x(params, batch)
+        s = x.shape[1]
+        q_chunk = cfg.attn_q_chunk or (1024 if s >= 4096 else None)
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, batch["frames"])
+        aux_total = jnp.zeros((), jnp.float32)
+        entries: dict[str, Any] = {}
+
+        def run_layer(p, kind, x):
+            return layer_forward(p, cfg, kind, x, positions, q_chunk,
+                                 enc_out, train)
+
+        if "scan" in params:
+            def body(x, period_params):
+                ys = {}
+                aux_p = jnp.zeros((), jnp.float32)
+                for j, kind in enumerate(cfg.pattern):
+                    x, e, ce, aux = run_layer(period_params[f"sub{j}"], kind, x)
+                    ys[f"sub{j}"] = (e, ce) if collect_cache else 0.0
+                    aux_p = aux_p + aux
+                return x, (ys, aux_p)
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            x, (ys, aux_s) = jax.lax.scan(body, x, params["scan"])
+            aux_total = aux_total + aux_s.sum()
+            if collect_cache:
+                entries["scan"] = ys
+        else:
+            maybe_ckpt = jax.checkpoint if cfg.remat else (lambda f: f)
+            for i, p in enumerate(params.get("layers", [])):
+                kind = cfg.layer_kinds[i]
+                x, e, ce, aux = maybe_ckpt(
+                    functools.partial(run_layer, p, kind))(x)
+                aux_total = aux_total + aux
+                if collect_cache:
+                    entries[f"layer{i}"] = (e, ce)
+        for r, p in enumerate(params["rem"]):
+            kind = cfg.remainder_kinds[r]
+            x, e, ce, aux = run_layer(p, kind, x)
+            aux_total = aux_total + aux
+            if collect_cache:
+                entries[f"rem{r}"] = (e, ce)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux_total, entries
+
+    # ---- training loss --------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, aux, _ = self.forward(params, batch, train=True)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["lm_head"]["table"])
+        nll = lm_loss_chunked(x, table, batch["labels"],
+                              batch.get("loss_mask"), cfg.loss_chunk)
+        return nll + aux
+
+    # ---- serving ---------------------------------------------------------------
+    def _entry_to_cache(self, kind, entry, max_len, cache_dtype):
+        """Convert a prefill (k, v) / state entry into a decode cache entry.
+        Works on unstacked (B, S, ...) or scan-stacked (P, B, S, ...) trees."""
+        cfg = self.cfg
+        if kind in KINDS_REC:
+            return entry  # (h_last, conv_buf) already the decode state
+        k, v = entry
+        lead = k.shape[:-4]
+        b, s = k.shape[-4], k.shape[-3]
+        if kind == "local":
+            w = min(cfg.window, max_len)
+            pos0 = jnp.arange(s, dtype=jnp.int32)
+            if s >= w:
+                # keep the last w positions; ring slot of position p is p % w,
+                # so the contiguous tail is rolled by (s - w) % w.
+                kk, vv = k[..., s - w:, :, :], v[..., s - w:, :, :]
+                ppos = jnp.broadcast_to(pos0[s - w:], (*lead, b, w))
+                shift = (s - w) % w
+                kk = jnp.roll(kk, shift, axis=-3)
+                vv = jnp.roll(vv, shift, axis=-3)
+                ppos = jnp.roll(ppos, shift, axis=-1)
+            else:
+                pad = [(0, 0)] * (k.ndim - 3) + [(0, w - s), (0, 0), (0, 0)]
+                kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+                ppos = jnp.concatenate(
+                    [jnp.broadcast_to(pos0, (*lead, b, s)),
+                     jnp.full((*lead, b, w - s), -1, jnp.int32)], -1)
+            return {"k": kk.astype(cache_dtype), "v": vv.astype(cache_dtype),
+                    "pos": ppos}
+        # global: place [0:s] into a max_len buffer
+        shape = (*lead, b, max_len, *k.shape[-2:])
+        kk = jnp.zeros(shape, cache_dtype)
+        vv = jnp.zeros(shape, cache_dtype)
+        idx = (0,) * len(lead) + (0, 0, 0, 0)
+        kk = jax.lax.dynamic_update_slice(kk, k.astype(cache_dtype), idx)
+        vv = jax.lax.dynamic_update_slice(vv, v.astype(cache_dtype), idx)
+        return {"k": kk, "v": vv}
+
+    def prefill(self, params, batch, max_len: int):
+        """Run the prompt; return (cache, last-position logits)."""
+        cfg = self.cfg
+        x, _, entries = self.forward(params, batch, collect_cache=True,
+                                     train=False)
+        cache: dict[str, Any] = {"step": jnp.asarray(
+            batch["tokens"].shape[1], jnp.int32)}
+        cdt = cfg.dtype
+        if "scan" in entries:
+            cache["scan"] = {
+                f"sub{j}": self._entry_to_cache(
+                    kind, entries["scan"][f"sub{j}"][0], max_len, cdt)
+                for j, kind in enumerate(cfg.pattern)}
+            if cfg.is_encoder_decoder:
+                cache["scan_cross"] = {
+                    f"sub{j}": {"k": entries["scan"][f"sub{j}"][1][0],
+                                "v": entries["scan"][f"sub{j}"][1][1]}
+                    for j in range(len(cfg.pattern))}
+        for key in list(entries.keys()):
+            if key.startswith(("layer", "rem")):
+                i = int(key.replace("layer", "").replace("rem", ""))
+                kind = (cfg.layer_kinds[i] if key.startswith("layer")
+                        else cfg.remainder_kinds[i])
+                cache[key] = self._entry_to_cache(kind, entries[key][0],
+                                                  max_len, cdt)
+                if cfg.is_encoder_decoder and entries[key][1] is not None:
+                    cache[key + "_cross"] = {"k": entries[key][1][0],
+                                             "v": entries[key][1][1]}
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["lm_head"]["table"])
+        return cache, logits_last(x[:, -1], table)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
+        """Empty decode cache (the dry-run decode cells start here)."""
+        cfg = self.cfg
+        cdt = dtype or cfg.dtype
+        hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+
+        def one(kind):
+            if kind == "global":
+                return attn.init_full_cache(batch, max_len, nkv, hd, cdt)
+            if kind == "local":
+                return attn.init_ring_cache(batch, min(cfg.window, max_len),
+                                            nkv, hd, cdt)
+            if kind == "mamba":
+                return rec.init_mamba_state(batch, cfg.d_model,
+                                            cfg.ssm or SSMConfig())
+            return rec.init_rglru_state(batch, cfg.d_model,
+                                        cfg.rglru or RGLRUConfig())
+
+        cache: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        if self.cfg.scan_layers and cfg.n_periods > 1:
+            stack = lambda t: jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)), t)
+            cache["scan"] = {f"sub{j}": stack(one(kind))
+                             for j, kind in enumerate(cfg.pattern)}
+            if cfg.is_encoder_decoder:
+                ne = cfg.encoder.n_frames
+                cache["scan_cross"] = {
+                    f"sub{j}": stack(attn.init_full_cache(batch, ne, nkv, hd,
+                                                          cdt))
+                    for j in range(len(cfg.pattern))}
+        else:
+            for i, kind in enumerate(cfg.layer_kinds[:cfg.n_periods *
+                                                     len(cfg.pattern)]):
+                cache[f"layer{i}"] = one(kind)
+                if cfg.is_encoder_decoder:
+                    cache[f"layer{i}_cross"] = attn.init_full_cache(
+                        batch, cfg.encoder.n_frames, nkv, hd, cdt)
+        for r, kind in enumerate(cfg.remainder_kinds):
+            cache[f"rem{r}"] = one(kind)
+            if cfg.is_encoder_decoder:
+                cache[f"rem{r}_cross"] = attn.init_full_cache(
+                    batch, cfg.encoder.n_frames, nkv, hd, cdt)
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos=None):
+        """One token for the whole batch. tokens: (B, 1). Returns
+        (logits (B, V) f32, new cache)."""
+        cfg = self.cfg
+        pos = cache["step"] if pos is None else pos
+        params = cast_params_for_compute(params, cfg.dtype)
+        x = embed(params["embed"], tokens, cfg.dtype)
+        if cfg.is_encoder_decoder:
+            # absolute sinusoid at the runtime position
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)
+        new_cache: dict[str, Any] = {"step": pos + 1}
+
+        if "scan" in cache:
+            def body(x, inp):
+                period_params, entries, cross_entries = inp
+                new_entries = {}
+                for j, kind in enumerate(cfg.pattern):
+                    cc = (cross_entries[f"sub{j}"]
+                          if cross_entries is not None else None)
+                    x, ne = layer_decode(period_params[f"sub{j}"], cfg, kind,
+                                         x, entries[f"sub{j}"], pos, cc)
+                    new_entries[f"sub{j}"] = ne
+                return x, new_entries
+
+            cross = cache.get("scan_cross")
+            if cross is None:
+                x, new_entries = jax.lax.scan(
+                    lambda c, i: body(c, (i[0], i[1], None)),
+                    x, (params["scan"], cache["scan"]))
+            else:
+                x, new_entries = jax.lax.scan(
+                    lambda c, i: body(c, i),
+                    x, (params["scan"], cache["scan"], cross))
+                new_cache["scan_cross"] = cross
+            new_cache["scan"] = new_entries
+        else:
+            for i, p in enumerate(params.get("layers", [])):
+                kind = cfg.layer_kinds[i]
+                cc = cache.get(f"layer{i}_cross")
+                x, ne = layer_decode(p, cfg, kind, x, cache[f"layer{i}"],
+                                     pos, cc)
+                new_cache[f"layer{i}"] = ne
+                if cc is not None:
+                    new_cache[f"layer{i}_cross"] = cc
+        for r, p in enumerate(params["rem"]):
+            kind = cfg.remainder_kinds[r]
+            cc = cache.get(f"rem{r}_cross")
+            x, ne = layer_decode(p, cfg, kind, x, cache[f"rem{r}"], pos, cc)
+            new_cache[f"rem{r}"] = ne
+            if cc is not None:
+                new_cache[f"rem{r}_cross"] = cc
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["lm_head"]["table"])
+        return logits_last(x[:, 0], table), new_cache
+
+
+def _sinusoid_at(pos, d: int):
+    """Single-position sinusoidal embedding at runtime index `pos`."""
+    import math as _m
+    half = d // 2
+    freq = jnp.exp(-_m.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    t = pos.astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)])[None, None, :]

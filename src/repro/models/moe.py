@@ -1,0 +1,156 @@
+"""GShard-style mixture-of-experts FFN: top-k routing with capacity,
+einsum dispatch/combine (MXU- and GSPMD-friendly), optional shared expert.
+
+Sharding: expert weights carry a leading E axis annotated "experts"; when E
+divides the model axis the dispatched activations reshard g->e via an
+all-to-all that GSPMD derives from the einsum (expert parallelism). When E
+does not divide any axis (granite's 40 experts on a 16-way axis) the rules
+map "experts" to None: experts stay replicated and the per-expert FFN is
+tensor-parallel over "ff" instead (see DESIGN.md §MoE-sharding).
+
+Tokens are processed in groups of `group_size` so the dense one-hot dispatch
+tensor (G, Sg, E, C) stays bounded: its bytes are tokens * Sg * top_k * cf
+regardless of E.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.layers import ACTS, cast, truncated_normal
+from repro.models.sharding import axis_size, shard
+
+
+def init_moe(key, d: int, f: int, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    e = cfg.n_experts
+    p = {
+        "router": truncated_normal(ks[0], (d, e), d ** -0.5),
+        "wi_gate": truncated_normal(ks[1], (e, d, f), d ** -0.5),
+        "wi_up": truncated_normal(ks[2], (e, d, f), d ** -0.5),
+        "wo": truncated_normal(ks[3], (e, f, d), f ** -0.5),
+    }
+    if cfg.shared_expert:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, f)
+    return p
+
+
+def _capacity(sg: int, cfg: MoEConfig) -> int:
+    c = int(sg * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p, x, cfg: MoEConfig, act: str = "silu", train: bool = True):
+    """x: (B, S, D) -> (y, aux_loss). Group, route, dispatch, expert MLP,
+    combine."""
+    dt = x.dtype
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    sg = min(cfg.group_size, t)
+    pad = (-t) % sg
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = (t + pad) // sg
+    xg = tokens.reshape(g, sg, d)
+    xg = shard(xg, "batch", None, None)
+
+    logits = (xg @ cast(p["router"], dt)).astype(jnp.float32)  # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    e, c = cfg.n_experts, _capacity(sg, cfg)
+    # top-k selection -> positions within each expert's capacity buffer
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)               # (G,Sg,K)
+    gates = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # choice-major priority (all 1st choices before any 2nd choice), token
+    # order within a choice; per-choice loop keeps peak memory independent
+    # of top_k.
+    ep = cfg.n_experts % max(axis_size("experts"), 1) == 0
+    e_ax = "experts" if ep else None
+    f_ax = None if ep else "ff"
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)        # (G,Sg,K,E)
+    counts = jnp.zeros((g, 1, e), jnp.float32)
+    pos_k, within_k = [], []
+    for k in range(cfg.top_k):
+        oh = onehot[:, :, k, :]                                # (G,Sg,E)
+        pos = counts + jnp.cumsum(oh, axis=1) - oh             # (G,Sg,E)
+        pos_k.append((pos * oh).sum(-1))                       # (G,Sg) slot
+        within_k.append(((pos < c) * oh).sum(-1))              # (G,Sg) kept?
+        counts = counts + oh.sum(axis=1, keepdims=True)
+
+    if cfg.dispatch == "gather":
+        # ---- gather/scatter dispatch: ~zero FLOPs (the einsum one-hot
+        # matmuls were 84% of granite's compiled FLOPs — §Perf iteration g1)
+        garange = jnp.arange(g, dtype=jnp.int32)[:, None]
+        sarange = jnp.broadcast_to(jnp.arange(sg, dtype=jnp.int32), (g, sg))
+        buf = jnp.full((g, e, c), sg, jnp.int32)   # sentinel -> zero row
+        for k in range(cfg.top_k):
+            ek = topi[:, :, k]
+            slot = jnp.clip(pos_k[k].astype(jnp.int32), 0, c - 1)
+            keep = within_k[k] > 0
+            # kept slots are unique per expert by construction; overflow
+            # entries (clipped to slot c-1) carry the sentinel, and `min`
+            # makes them no-ops even when they collide with a kept write
+            buf = buf.at[garange, ek, slot].min(
+                jnp.where(keep, sarange, sg))
+        xg_pad = jnp.concatenate(
+            [xg, jnp.zeros((g, 1, d), dt)], axis=1)            # (G,Sg+1,D)
+        xe = jnp.take_along_axis(
+            xg_pad, buf.reshape(g, e * c)[..., None], axis=1)
+        xe = xe.reshape(g, e, c, d).transpose(1, 0, 2, 3)      # (E,G,C,D)
+    else:
+        # ---- GShard einsum dispatch (baseline; kept for ablation)
+        disp = jnp.zeros((g, sg, e, c), jnp.float32)
+        for k in range(cfg.top_k):
+            slot_oh = jax.nn.one_hot(pos_k[k].astype(jnp.int32) *
+                                     (within_k[k] > 0), c, dtype=jnp.float32)
+            disp = disp + (within_k[k])[..., None, None] * \
+                slot_oh[:, :, None, :] * onehot[:, :, k, :, None]
+        xe = jnp.einsum("gsd,gsec->egcd", xg, disp.astype(dt))
+
+    xe = shard(xe, e_ax, "batch", None, None)
+    h = ACTS[act](jnp.einsum("egcd,edf->egcf", xe, cast(p["wi_gate"], dt)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, cast(p["wi_up"], dt))
+    h = shard(h, e_ax, "batch", None, f_ax)
+    ye = jnp.einsum("egcf,efd->egcd", h, cast(p["wo"], dt))
+    ye = shard(ye, e_ax, "batch", None, None)
+
+    if cfg.dispatch == "gather":
+        # combine: per (token, choice) gather from the expert outputs
+        ye_flat = ye.transpose(1, 0, 2, 3).reshape(g, e * c, d)
+        ye_flat = jnp.concatenate(
+            [ye_flat, jnp.zeros((g, 1, d), ye.dtype)], axis=1)
+        y = jnp.zeros((g, sg, d), dt)
+        for k in range(cfg.top_k):
+            ek = topi[:, :, k]
+            slot = jnp.clip(pos_k[k].astype(jnp.int32), 0, c - 1)
+            flat = jnp.where(within_k[k] > 0, ek * c + slot, e * c)
+            yk = jnp.take_along_axis(ye_flat, flat[..., None], axis=1)
+            y = y + yk * gates[:, :, k, None].astype(dt)
+    else:
+        combine = jnp.zeros((g, sg, e, c), jnp.float32)
+        for k in range(cfg.top_k):
+            slot_oh = jax.nn.one_hot(pos_k[k].astype(jnp.int32) *
+                                     (within_k[k] > 0), c, dtype=jnp.float32)
+            dk = (within_k[k])[..., None, None] * \
+                slot_oh[:, :, None, :] * onehot[:, :, k, :, None]
+            combine = combine + dk * gates[:, :, k, None, None]
+        y = jnp.einsum("egcd,gsec->gsd", ye, combine.astype(dt))
+
+    if cfg.shared_expert:
+        from repro.models.layers import mlp
+        y = y + mlp(p["shared"], xg, act)
+
+    # load-balancing aux loss (Switch/GShard)
+    me = probs.mean(axis=1)                                    # (G,E)
+    kept = sum((within_k[k])[..., None] * onehot[:, :, k, :]
+               for k in range(cfg.top_k))                      # (G,Sg,E)
+    ce_frac = kept.mean(axis=1)                                # (G,E)
+    aux = (me * ce_frac).sum(-1).mean() * e * cfg.aux_loss_weight
+    y = y.reshape(-1, d)[:t] if pad else y.reshape(-1, d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,283 @@
+"""Recurrent mixers: Mamba-1 selective SSM and RG-LRU (Griffin/RecurrentGemma).
+
+TPU adaptation note (DESIGN.md §Arch-applicability): both recurrences are
+input-gated (time-varying), so the FFT-convolution path of LTI SSMs — where
+the paper's fused spectral kernel would apply — does NOT apply. The TPU-native
+formulation is a log-depth `jax.lax.associative_scan` for training/prefill
+and an O(1) state update for decode.
+
+Memory: Mamba's hidden state is (d_inner, n_state) per position; the training
+scan materializes it only per time-chunk (lax.scan over chunks carrying h),
+the standard hardware-aware trade the CUDA kernel makes, expressed in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import RGLRUConfig, SSMConfig
+from repro.models.layers import cast, truncated_normal
+from repro.models.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (shared by both mixers)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, width: int, channels: int):
+    return {"w": truncated_normal(key, (width, channels), width ** -0.5),
+            "b": jnp.zeros((channels,), jnp.float32)}
+
+
+def conv1d(p, x):
+    """Causal depthwise conv. x: (B, S, C) -> (B, S, C)."""
+    dt = x.dtype
+    w = cast(p["w"], dt)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return y + cast(p["b"], dt)
+
+
+def conv1d_step(p, x, buf):
+    """Single-step causal conv. x: (B, 1, C); buf: (B, width-1, C) holds the
+    previous width-1 inputs. Returns (y, new_buf)."""
+    dt = x.dtype
+    w = cast(p["w"], dt)
+    width = w.shape[0]
+    xs = jnp.concatenate([buf.astype(dt), x], axis=1)      # (B, width, C)
+    y = jnp.einsum("bwc,wc->bc", xs, w)[:, None, :] + cast(p["b"], dt)
+    return y, xs[:, 1:, :].astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear recurrence h_t = a_t * h_{t-1} + b_t  (associative scan + chunking)
+# ---------------------------------------------------------------------------
+
+def _assoc(op_a, op_b):
+    a1, b1 = op_a
+    a2, b2 = op_b
+    return a1 * a2, b1 * a2 + b2
+
+
+def linear_scan(a, b, h0=None, axis: int = 1):
+    """Solve h_t = a_t h_{t-1} + b_t along `axis`; a, b same shape.
+    h0: initial state (shape = a with `axis` removed). Returns all h_t."""
+    acc_a, acc_b = jax.lax.associative_scan(_assoc, (a, b), axis=axis)
+    if h0 is not None:
+        acc_b = acc_b + acc_a * jnp.expand_dims(h0, axis)
+    return acc_b
+
+
+def chunked_linear_scan(a, b, chunk: int, h0):
+    """Scan over time chunks carrying the state; within a chunk use the
+    log-depth associative scan. a, b: (B, S, ...); h0: (B, ...)."""
+    bsz, s = a.shape[0], a.shape[1]
+    if s <= chunk:
+        h = linear_scan(a, b, h0)
+        return h, h[:, -1]
+    n = s // chunk
+    assert s == n * chunk, "sequence not divisible by ssm chunk"
+    ar = a.reshape(bsz, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    br = b.reshape(bsz, n, chunk, *b.shape[2:]).swapaxes(0, 1)
+
+    def body(h, inp):
+        ac, bc = inp
+        hc = linear_scan(ac, bc, h)
+        return hc[:, -1], hc
+
+    hlast, hs = jax.lax.scan(body, h0, (ar, br))
+    h = hs.swapaxes(0, 1).reshape(bsz, s, *a.shape[2:])
+    return h, hlast
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, d: int, cfg: SSMConfig):
+    di = cfg.expand * d
+    dtr = cfg.resolved_dt_rank(d)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, cfg.state_dim + 1, dtype=jnp.float32),
+                      (di, 1))
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * di), d ** -0.5),
+        "conv": init_conv1d(ks[1], cfg.conv_width, di),
+        "x_proj": truncated_normal(ks[2], (di, dtr + 2 * cfg.state_dim),
+                                   di ** -0.5),
+        "dt_proj": {"w": truncated_normal(ks[3], (dtr, di), dtr ** -0.5),
+                    "b": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+                        jax.random.uniform(ks[4], (di,), jnp.float32,
+                                           1e-3, 1e-1)))},
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": truncated_normal(ks[5], (di, d), di ** -0.5),
+    }
+
+
+def _mamba_terms(p, x, cfg: SSMConfig):
+    """Input projection shared by scan/step: x -> (ssm-path input, gate)."""
+    del cfg
+    xz = x @ cast(p["in_proj"], x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    return xin, z
+
+
+def _mamba_ssm_params(p, xc, cfg: SSMConfig):
+    dt_ = xc.dtype
+    dtr = p["dt_proj"]["w"].shape[0]
+    n = cfg.state_dim
+    proj = xc @ cast(p["x_proj"], dt_)
+    dt_in, b_in, c_out = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus((dt_in @ cast(p["dt_proj"]["w"], dt_)
+                          ).astype(jnp.float32) + p["dt_proj"]["b"])
+    return dt, b_in.astype(jnp.float32), c_out.astype(jnp.float32)
+
+
+def mamba_forward(p, x, cfg: SSMConfig, chunk: int = 128, h0=None):
+    """x: (B, S, D) -> (y (B, S, D), (h_last, conv_buf)). Training/prefill.
+
+    The (B, S, d_inner, n_state) hidden state is never materialized for the
+    whole sequence: discretization, the associative scan, and the C-readout
+    all happen inside a per-chunk lax.scan body (the Mamba CUDA kernel's
+    memory trade, expressed in JAX); only the (B, S, d_inner) readout
+    survives the chunk."""
+    dt_ = x.dtype
+    b, s, d = x.shape
+    xin, z = _mamba_terms(p, x, cfg)
+    xin = shard(xin, "batch", None, "ff")
+    xc = jax.nn.silu(conv1d(p["conv"], xin))
+    dt, b_in, c_out = _mamba_ssm_params(p, xc, cfg)
+    a = -jnp.exp(p["a_log"])                                  # (di, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, a.shape[0], cfg.state_dim), jnp.float32)
+
+    xcf = xc.astype(jnp.float32)
+    nc = max(1, s // chunk)
+    assert s % nc == 0, (s, chunk)
+    cs = s // nc
+    resh = lambda t: t.reshape(b, nc, cs, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(h, inp):
+        xck, dtk, bk, ck = inp                    # (B,cs,di), ..., (B,cs,n)
+        abar = jnp.exp(dtk[..., None] * a)        # (B,cs,di,n) transient
+        bx = (dtk * xck)[..., None] * bk[:, :, None, :]
+        hc = linear_scan(abar, bx, h)
+        yk = jnp.einsum("bsdn,bsn->bsd", hc, ck).astype(dt_)
+        return hc[:, -1], yk
+
+    hlast, ys = jax.lax.scan(body, h0, (resh(xcf), resh(dt), resh(b_in),
+                                        resh(c_out)))
+    y = ys.swapaxes(0, 1).reshape(b, s, -1)
+    y = (y.astype(jnp.float32) + xcf * p["d_skip"]).astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ cast(p["out_proj"], dt_)
+    conv_buf = xin[:, -(cfg.conv_width - 1):, :].astype(jnp.float32)
+    return out, (hlast, conv_buf)
+
+
+def mamba_step(p, x, cfg: SSMConfig, state):
+    """Decode step. x: (B, 1, D); state = (h (B,di,n) f32, conv_buf)."""
+    dt_ = x.dtype
+    h, buf = state
+    xin, z = _mamba_terms(p, x, cfg)
+    xc_, new_buf = conv1d_step(p["conv"], xin, buf)
+    xc = jax.nn.silu(xc_)
+    dt, b_in, c_out = _mamba_ssm_params(p, xc, cfg)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[:, 0, :, None] * a)                     # (B,di,n)
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b_in[:, 0, None, :]
+    h = abar * h + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_out[:, 0])
+    y = (y + xc[:, 0].astype(jnp.float32) * p["d_skip"]).astype(dt_)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None, :]
+    return y @ cast(p["out_proj"], dt_), (h, new_buf)
+
+
+def init_mamba_state(batch: int, d: int, cfg: SSMConfig):
+    di = cfg.expand * d
+    return (jnp.zeros((batch, di, cfg.state_dim), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, d: int, cfg: RGLRUConfig):
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(L)^c spreads over (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1.0 / cfg.c)) / (1.0 - u ** (1.0 / cfg.c)))
+    return {
+        "gate_proj": truncated_normal(ks[0], (d, w), d ** -0.5),   # gelu branch
+        "rec_proj": truncated_normal(ks[1], (d, w), d ** -0.5),    # rec branch
+        "conv": init_conv1d(ks[2], cfg.conv_width, w),
+        "wa": truncated_normal(ks[3], (w, w), w ** -0.5),          # recur gate
+        "wx": truncated_normal(ks[5], (w, w), w ** -0.5),          # input gate
+        "lambda": lam,
+        "out_proj": truncated_normal(jax.random.fold_in(key, 7), (w, d),
+                                     w ** -0.5),
+    }
+
+
+def _rglru_core(p, xc, cfg: RGLRUConfig):
+    """Gate computations shared by scan and step. xc: (B,S,W).
+
+    The gate matmul outputs are constrained ff-sharded BEFORE the f32 cast:
+    without this GSPMD partial-sums the (W,W) contraction and all-reduces
+    the f32 (B,S,W) outputs — 68% of the train-step collective bytes in the
+    baseline dry-run (EXPERIMENTS.md §Perf iteration r1). With the
+    constraint it all-gathers the bf16 input once instead."""
+    ra = shard(xc @ cast(p["wa"], xc.dtype), "batch", None, "ff")
+    ia = shard(xc @ cast(p["wx"], xc.dtype), "batch", None, "ff")
+    r = jax.nn.sigmoid(ra.astype(jnp.float32))
+    i = jax.nn.sigmoid(ia.astype(jnp.float32))
+    log_a = -cfg.c * r * jax.nn.softplus(p["lambda"])          # (B,S,W) f32
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_forward(p, x, cfg: RGLRUConfig, h0=None, chunk: int = 512):
+    """x: (B,S,D) -> (y, (h_last, conv_buf))."""
+    dt_ = x.dtype
+    b_, s, d = x.shape
+    gate = jax.nn.gelu(x @ cast(p["gate_proj"], dt_))
+    xr = x @ cast(p["rec_proj"], dt_)
+    gate = shard(gate, "batch", None, "ff")
+    xr = shard(xr, "batch", None, "ff")
+    xc = conv1d(p["conv"], xr)
+    a, bterm = _rglru_core(p, xc, cfg)
+    if h0 is None:
+        h0 = jnp.zeros((b_, a.shape[-1]), jnp.float32)
+    h, hlast = chunked_linear_scan(a, bterm, chunk, h0)
+    y = (h.astype(dt_) * gate) @ cast(p["out_proj"], dt_)
+    conv_buf = xr[:, -(cfg.conv_width - 1):, :].astype(jnp.float32)
+    return y, (hlast, conv_buf)
+
+
+def rglru_step(p, x, cfg: RGLRUConfig, state):
+    dt_ = x.dtype
+    h, buf = state
+    gate = jax.nn.gelu(x @ cast(p["gate_proj"], dt_))
+    xr = x @ cast(p["rec_proj"], dt_)
+    xc, new_buf = conv1d_step(p["conv"], xr, buf)
+    a, bterm = _rglru_core(p, xc, cfg)
+    h = a[:, 0] * h + bterm[:, 0]
+    y = (h[:, None, :].astype(dt_) * gate) @ cast(p["out_proj"], dt_)
+    return y, (h, new_buf)
+
+
+def init_rglru_state(batch: int, d: int, cfg: RGLRUConfig):
+    w = cfg.lru_width or d
+    return (jnp.zeros((batch, w), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32))

@@ -1,0 +1,93 @@
+"""Logical-axis sharding constraints for model code.
+
+Model code annotates activations with *logical* axis names
+(`shard(x, "batch", "seq", "heads")`). A launch-layer context maps logical
+names to mesh axes; outside any context the calls are identity, so unit
+tests and CPU smoke runs are unaffected.
+
+Default production rules (see launch/mesh.py):
+  batch   -> ("pod", "data")     data parallel
+  seq     -> "model"             Megatron-style sequence parallelism for the
+                                 residual stream between layers
+  heads   -> "model"             tensor parallel attention
+  ff      -> "model"             tensor parallel MLP
+  vocab   -> "model"             vocab-parallel embedding/loss
+  experts -> "model"             expert parallel (when E % axis == 0)
+  kv_seq  -> "data"              sequence-parallel KV cache (long decode)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _active():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: dict):
+    """Activate logical->mesh axis mapping for model sharding constraints."""
+    prev = _active()
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_rules() -> Optional[tuple]:
+    return _active()
+
+
+def resolve_spec(rules: dict, *logical) -> P:
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def axis_size(logical: str) -> int:
+    """Mesh size behind a logical axis in the active context (1 if none)."""
+    ctx = _active()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    axis = rules.get(logical)
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def shard(x, *logical):
+    """Constrain x's sharding by logical axis names (None = replicated dim).
+
+    Inside an active context: jax.lax.with_sharding_constraint with the
+    resolved PartitionSpec. Outside: identity.
+    """
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(rules, *logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_seq": "data",
+    "embed": "data",
+}

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    cosine_schedule,
+    global_norm,
+    init,
+    make_train_step,
+    update,
+)
+from repro.optim import compress  # noqa: F401

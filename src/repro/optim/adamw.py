@@ -1,0 +1,105 @@
+"""AdamW with global-norm clipping, cosine schedule, grad accumulation.
+
+States are pytrees mirroring params, so whatever sharding the launcher puts
+on the parameters applies verbatim to mu/nu (ZeRO-style: with FSDP'd params
+the optimizer states are sharded identically for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = cfg.lr_peak * jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr
+
+
+def init(params) -> dict:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = cosine_schedule(cfg)(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * step_).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, stats
+
+
+def make_train_step(loss_fn, cfg: AdamWConfig, accum_steps: int = 1):
+    """Builds train_step(params, opt_state, batch) -> (params, state, stats).
+
+    accum_steps > 1: the global batch is split along axis 0 into microbatches
+    scanned sequentially with gradient accumulation (the standard
+    memory/throughput trade at large batch)."""
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(_, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return None, (l, g)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            _, (losses, grads) = jax.lax.scan(micro, None, mbs)
+            loss = losses.mean()
+            grads = jax.tree.map(lambda g: g.mean(0), grads)
+        new_params, new_state, stats = update(params, grads, opt_state, cfg)
+        stats = dict(stats, loss=loss)
+        return new_params, new_state, stats
+
+    return train_step

@@ -1,0 +1,48 @@
+"""FFTConvMixer: the paper's fused kernel inside an LM block (LTI long conv)
+matches the unfused jnp.fft oracle, and the convolution is causal."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.fftconv import (fftconv_forward, fftconv_reference,
+                                  init_fftconv)
+
+
+def test_fused_matches_reference():
+    b, s, d = 2, 64, 16
+    p = init_fftconv(jax.random.PRNGKey(0), d, s)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((b, s, d)),
+                    jnp.float32)
+    got = fftconv_forward(p, x)
+    want = fftconv_reference(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4)
+
+
+def test_causality():
+    """Changing x at position t only affects outputs at positions >= t."""
+    b, s, d = 1, 32, 8
+    p = init_fftconv(jax.random.PRNGKey(1), d, s)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    t = 20
+    x2 = x.at[:, t].add(1.0)
+    # compare the conv branch only (gate is pointwise — still causal)
+    y1 = np.asarray(fftconv_reference(p, x))
+    y2 = np.asarray(fftconv_reference(p, x2))
+    assert np.abs(y2[:, :t] - y1[:, :t]).max() < 1e-5
+    assert np.abs(y2[:, t:] - y1[:, t:]).max() > 1e-4
+
+
+def test_gradients_flow():
+    b, s, d = 2, 32, 8
+    p = init_fftconv(jax.random.PRNGKey(2), d, s)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((b, s, d)),
+                    jnp.float32)
+
+    def loss(p):
+        return jnp.sum(fftconv_forward(p, x) ** 2)
+
+    g = jax.grad(loss)(p)
+    gn = jnp.sqrt(sum(jnp.sum(v ** 2) for v in jax.tree.leaves(g)))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0

@@ -1,0 +1,183 @@
+"""Per-kernel allclose sweeps + hypothesis property tests vs the jnp oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.transpose import transpose
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def assert_close(got, want, tol=2e-4):
+    gr, gi = got
+    wr, wi = want
+    scale = max(float(jnp.max(jnp.abs(wr))), float(jnp.max(jnp.abs(wi))), 1e-30)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                               atol=tol * scale, rtol=0)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi),
+                               atol=tol * scale, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Shape / impl / axis sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["matmul", "stockham"])
+@pytest.mark.parametrize("n", [16, 64, 256, 1024])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_fft_sweep(impl, n, axis):
+    lines = 6
+    shape = (lines, n) if axis == 1 else (n, lines)
+    xr, xi = rand(*shape), rand(*shape)
+    got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi), fwd=True,
+                          inv=False, axis=axis, fft_impl=impl, block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=axis))
+
+
+@pytest.mark.parametrize("impl", ["matmul", "stockham"])
+@pytest.mark.parametrize("n", [64, 512])
+def test_ifft_sweep(impl, n):
+    xr, xi = rand(4, n), rand(4, n)
+    got = ops.ifft_rows(jnp.asarray(xr), jnp.asarray(xi), fft_impl=impl,
+                        block=4)
+    assert_close(got, ref.ifft_ref(xr, xi, axis=1))
+
+
+@pytest.mark.parametrize("mode", ["shared", "full", "outer", "shared_outer"])
+def test_fused_filter_modes(mode):
+    n, lines = 128, 8
+    xr, xi = rand(lines, n), rand(lines, n)
+    kw = dict(fwd=True, inv=True, axis=1, block=4, filter_mode=mode)
+    if mode in ("shared", "full"):
+        shape = (n,) if mode == "shared" else (lines, n)
+        hr, hi = rand(*shape), rand(*shape)
+        got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi),
+                              hr=jnp.asarray(hr), hi=jnp.asarray(hi), **kw)
+        hb = (hr[None, :], hi[None, :]) if mode == "shared" else (hr, hi)
+        want = ref.spectral_ref(xr, xi, axis=1, fwd=True, inv=True,
+                                hr=hb[0], hi=hb[1])
+    elif mode == "outer":
+        u, v = rand(lines, 2), rand(n, 2)
+        got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi),
+                              u=jnp.asarray(u), v=jnp.asarray(v), **kw)
+        want = ref.spectral_ref(xr, xi, axis=1, fwd=True, inv=True, u=u, v=v)
+    else:
+        hr, hi = rand(n), rand(n)
+        u, v = rand(lines), rand(n)
+        got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi),
+                              hr=jnp.asarray(hr), hi=jnp.asarray(hi),
+                              u=jnp.asarray(u), v=jnp.asarray(v), **kw)
+        want = ref.spectral_ref(xr, xi, axis=1, fwd=True, inv=True,
+                                hr=hr[None, :], hi=hi[None, :], u=u, v=v)
+    assert_close(got, want)
+
+
+@pytest.mark.parametrize("n1,n2", [(8, 8), (16, 4), (32, 32), (128, 8)])
+def test_factorizations(n1, n2):
+    n = n1 * n2
+    xr, xi = rand(4, n), rand(4, n)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), n1=n1, n2=n2,
+                       block=4)
+    assert_close(got, ref.fft_ref(xr, xi, axis=1))
+
+
+def test_karatsuba_and_bf16():
+    xr, xi = rand(4, 512), rand(4, 512)
+    want = ref.fft_ref(xr, xi, axis=1)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), karatsuba=True,
+                       block=4)
+    assert_close(got, want)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), compute_dtype="bf16",
+                       block=4)
+    assert_close(got, want, tol=5e-2)
+
+
+def test_line_padding():
+    xr, xi = rand(5, 64), rand(5, 64)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=4)
+    assert_close(got, ref.fft_ref(xr, xi, axis=1))
+
+
+@pytest.mark.parametrize("r,c", [(64, 64), (128, 256), (96, 32)])
+def test_transpose(r, c):
+    x = rand(r, c)
+    np.testing.assert_array_equal(np.asarray(transpose(jnp.asarray(x), tile=32)),
+                                  x.T)
+
+
+def test_paper_n4096():
+    """The paper's exact FFT size (N = 4096, the 32 KiB line)."""
+    xr, xi = rand(2, 4096), rand(2, 4096)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=1), tol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+shapes = st.sampled_from([(2, 16), (4, 64), (2, 256)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1),
+       a=st.floats(-3, 3), b=st.floats(-3, 3))
+def test_linearity(shape, seed, a, b):
+    r = np.random.default_rng(seed)
+    x = r.standard_normal(shape).astype(np.float32)
+    y = r.standard_normal(shape).astype(np.float32)
+    z = np.zeros(shape, np.float32)
+    fx = ops.fft_rows(jnp.asarray(x), jnp.asarray(z), block=2)
+    fy = ops.fft_rows(jnp.asarray(y), jnp.asarray(z), block=2)
+    fxy = ops.fft_rows(jnp.asarray(a * x + b * y), jnp.asarray(z), block=2)
+    want = (a * fx[0] + b * fy[0], a * fx[1] + b * fy[1])
+    assert_close(fxy, want, tol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_parseval(shape, seed):
+    r = np.random.default_rng(seed)
+    xr = r.standard_normal(shape).astype(np.float32)
+    xi = r.standard_normal(shape).astype(np.float32)
+    fr, fi = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    e_t = np.sum(xr**2 + xi**2)
+    e_f = float(jnp.sum(fr**2 + fi**2)) / shape[1]
+    np.testing.assert_allclose(e_f, e_t, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_ifft_inverts_fft(shape, seed):
+    r = np.random.default_rng(seed)
+    xr = r.standard_normal(shape).astype(np.float32)
+    xi = r.standard_normal(shape).astype(np.float32)
+    fr, fi = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    br, bi = ops.ifft_rows(fr, fi, block=2)
+    assert_close((br, bi), (xr, xi), tol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, seed=st.integers(0, 2**31 - 1))
+def test_fused_equals_composed(shape, seed):
+    """The paper's core claim: one fused dispatch == the 3-dispatch chain."""
+    r = np.random.default_rng(seed)
+    lines, n = shape
+    xr = r.standard_normal(shape).astype(np.float32)
+    xi = r.standard_normal(shape).astype(np.float32)
+    hr = r.standard_normal(n).astype(np.float32)
+    hi = r.standard_normal(n).astype(np.float32)
+    fused = ops.fused_fft_mult_ifft_rows(
+        jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(hr), jnp.asarray(hi),
+        block=2)
+    fr, fi = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    mr, mi = fr * hr - fi * hi, fr * hi + fi * hr
+    want = ops.ifft_rows(mr, mi, block=2)
+    assert_close(fused, (np.asarray(want[0]), np.asarray(want[1])), tol=1e-3)

@@ -1,0 +1,189 @@
+"""Data pipeline, optimizer, gradient compression, checkpointing."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenStream
+from repro.optim import AdamWConfig, adamw, compress
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, seed=3)
+    s1, s2 = TokenStream(cfg), TokenStream(cfg)
+    b5 = s1.batch(5)
+    # fresh stream seeks straight to step 5 — exact resume
+    for step, b in s2.batches(start_step=5):
+        np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                      np.asarray(b5["tokens"]))
+        break
+    assert not np.array_equal(np.asarray(s1.batch(6)["tokens"]),
+                              np.asarray(b5["tokens"]))
+
+
+def test_data_is_learnable_structure():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4, noise=0.0)
+    b = TokenStream(cfg).batch(0)
+    t = np.asarray(b["tokens"])
+    d = np.diff(t, axis=1) % 128
+    # affine progressions: constant step per row
+    assert (d == d[:, :1]).all()
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(params)
+    cfg = AdamWConfig(lr_peak=0.2, warmup_steps=0, decay_steps=200,
+                      weight_decay=0.0, clip_norm=None)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        return adamw.update(p, g, s, cfg)
+
+    for _ in range(150):
+        params, state, _ = step(params, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_accumulation_equivalence():
+    """accum_steps microbatching == full-batch gradients (linear loss)."""
+    w0 = {"w": jnp.ones((4,))}
+
+    def loss(p, batch):
+        return jnp.mean(batch["x"] @ p["w"])
+
+    cfg = AdamWConfig(warmup_steps=0, clip_norm=None, weight_decay=0.0)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 4)),
+                    jnp.float32)
+    s1 = adamw.make_train_step(loss, cfg, accum_steps=1)
+    s4 = adamw.make_train_step(loss, cfg, accum_steps=4)
+    p1, _, st1 = s1(w0, adamw.init(w0), {"x": x})
+    p4, _, st4 = s4(w0, adamw.init(w0), {"x": x})
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(float(st1["loss"]), float(st4["loss"]),
+                               atol=1e-6)
+
+
+def test_clip_norm():
+    params = {"w": jnp.zeros((3,))}
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    g = {"w": jnp.asarray([30.0, 40.0, 0.0])}
+    _, _, stats = adamw.update(params, g, adamw.init(params), cfg)
+    assert abs(float(stats["grad_norm"]) - 50.0) < 1e-3
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                      decay_steps=100)
+    lr = adamw.cosine_schedule(cfg)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1e-3, rtol=1e-5)
+    np.testing.assert_allclose(float(lr(jnp.asarray(100))), 1e-4, rtol=1e-3)
+    np.testing.assert_allclose(float(lr(jnp.asarray(1000))), 1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Int8 compression with error feedback
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_bound(seed, scale):
+    x = np.random.default_rng(seed).standard_normal(256).astype(np.float32)
+    x = x * scale
+    q, s = compress.quantize_int8(jnp.asarray(x))
+    err = np.abs(compress.dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of compressed updates tracks the sum of true gradients: the
+    residual never escapes (it is bounded by one quantization step)."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros((64,))
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        total_true += np.asarray(g)
+        x = g + err
+        q, s = compress.quantize_int8(x)
+        deq = compress.dequantize_int8(q, s)
+        err = x - deq
+        total_sent += np.asarray(deq)
+    resid = np.abs(total_true - total_sent).max()
+    assert resid <= float(np.abs(np.asarray(err)).max()) + 1e-5
+
+
+def test_compressed_bytes():
+    p = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+    assert compress.compressed_bytes(p) == 100 + 4 + 5 + 4
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def make_tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(r.standard_normal((8, 4)), jnp.float32),
+                   "scale": jnp.asarray(r.standard_normal(4), jnp.float32)},
+        "opt": {"mu": {"w": jnp.zeros((8, 4))}, "step": jnp.asarray(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = make_tree()
+    mgr.save(3, tree)
+    out, step = mgr.restore(jax.tree.map(np.zeros_like, tree))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, make_tree(s))
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+    out, _ = mgr.restore(make_tree(), step=3)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(make_tree(3)["params"]["w"]))
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, make_tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, make_tree())
+    names = os.listdir(tmp_path)
+    assert names == ["step_000000005"]
+    assert "manifest.json" in os.listdir(tmp_path / "step_000000005")
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(make_tree())
