@@ -1,0 +1,165 @@
+"""Per-(B, n) autotuner for the fused spectral dispatch.
+
+The throughput of the four-step kernel is dominated by the factorization
+choice (which matmul shapes hit the MXU sweet spot) and the line block
+(VMEM residency vs grid overhead) — see "Beating vDSP: A 138 GFLOPS Radix-8
+Stockham FFT on Apple Silicon" for the same effect on simdgroup MMA. This
+module sweeps ``(block, n1, n2[, n3], karatsuba)`` for a given batch size
+and FFT length, times the fused forward+inverse dispatch, and caches the
+fastest config in a JSON file so benchmarks and examples reuse it without
+re-sweeping.
+
+  PYTHONPATH=src python -m benchmarks.autotune --n 512 4096 --batch 1 4
+
+API:
+  best_config(n, batch)     -> cached-or-tuned kwargs for ops.spectral_op
+  autotune(n, batch, ...)   -> force a sweep, update the cache
+  spectral_kwargs(cfg)      -> the subset usable as **kwargs (block/n1/n2/
+                               n3/karatsuba)
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, timeit
+from repro.kernels import ops
+from repro.kernels.fft4step import MAX_FACTOR, default_factorization
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__), ".autotune_cache.json")
+
+_TUNE_KEYS = ("block", "n1", "n2", "n3", "karatsuba")
+
+
+def _load_cache(path: str) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _save_cache(cache: dict, path: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _key(n: int, batch: int) -> str:
+    # keyed by backend too: interpret-mode CPU timings must never be
+    # mistaken for a tuned TPU (Mosaic) config
+    return f"{jax.default_backend()}_B{batch}_n{n}"
+
+
+def factorizations(n: int) -> list[tuple[int, ...]]:
+    """Candidate mixed-radix splits: every 2-factor (and, past 128*128,
+    3-factor) decomposition into powers of two <= 128, largest first."""
+    p = n.bit_length() - 1
+    out: list[tuple[int, ...]] = []
+    if n <= MAX_FACTOR * MAX_FACTOR:
+        for p1 in range(p // 2, p + 1):
+            n1, n2 = 1 << p1, 1 << (p - p1)
+            if n1 <= MAX_FACTOR and n2 <= MAX_FACTOR and n2 >= 1:
+                out.append((n1, n2))
+    else:
+        for p1 in range(1, p - 1):
+            for p2 in range(1, p - p1):
+                fs = (1 << p1, 1 << p2, 1 << (p - p1 - p2))
+                if all(f <= MAX_FACTOR for f in fs) and fs[0] >= fs[1] >= fs[2]:
+                    out.append(fs)
+    return out or [default_factorization(n)]
+
+
+def candidates(n: int, blocks=(4, 8, 16)) -> list[dict]:
+    cands = []
+    for fs, blk, kara in itertools.product(
+            factorizations(n), blocks, (False, True)):
+        c = {"block": blk, "karatsuba": kara,
+             "n1": fs[0], "n2": fs[1], "n3": fs[2] if len(fs) > 2 else None}
+        cands.append(c)
+    return cands
+
+
+def spectral_kwargs(cfg: dict) -> dict:
+    """The tuned entries usable directly as ops.spectral_op kwargs."""
+    return {k: cfg.get(k) for k in _TUNE_KEYS}
+
+
+def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
+             cache_path: str = CACHE_PATH, verbose: bool = False) -> dict:
+    """Sweep candidates for the fused fwd+inv dispatch on (batch, lines, n)
+    scenes; persist and return the fastest config."""
+    rng = np.random.default_rng(0)
+    shape = (batch, lines, n)
+    xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    hr = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    hi = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    best: Optional[dict] = None
+    for cand in candidates(n):
+        if lines % cand["block"] and cand["block"] > lines:
+            continue
+        kw = spectral_kwargs(cand)
+        try:
+            t = timeit(lambda: ops.fused_fft_mult_ifft_rows(
+                xr, xi, hr, hi, **kw), warmup=1, iters=iters)
+        except Exception:                      # shape/VMEM-infeasible config
+            continue
+        if verbose:
+            emit(f"autotune_B{batch}_n{n}_"
+                 f"{cand['n1']}x{cand['n2']}"
+                 f"{'x%d' % cand['n3'] if cand['n3'] else ''}"
+                 f"_blk{cand['block']}{'_kara' if cand['karatsuba'] else ''}",
+                 t)
+        if best is None or t < best["seconds"]:
+            best = dict(cand, seconds=t)
+    assert best is not None, f"no feasible config for n={n}"
+    cache = _load_cache(cache_path)
+    cache[_key(n, batch)] = best
+    _save_cache(cache, cache_path)
+    return best
+
+
+def best_config(n: int, batch: int = 1, cache_path: str = CACHE_PATH,
+                tune_missing: bool = True) -> dict:
+    """Cached best config for (n, batch); sweeps on first use. Falls back
+    to the library default factorization if tuning is disabled."""
+    cache = _load_cache(cache_path)
+    hit = cache.get(_key(n, batch))
+    if hit is not None:
+        return hit
+    if tune_missing:
+        return autotune(n, batch, cache_path=cache_path)
+    fs = default_factorization(n)
+    return {"block": 8, "n1": fs[0], "n2": fs[1],
+            "n3": fs[2] if len(fs) > 2 else None, "karatsuba": False}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, nargs="+", default=[512, 4096])
+    ap.add_argument("--batch", type=int, nargs="+", default=[1, 4])
+    ap.add_argument("--lines", type=int, default=16)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for n in args.n:
+        for b in args.batch:
+            header(f"autotune n={n} B={b}")
+            best = autotune(n, b, lines=args.lines, verbose=args.verbose)
+            emit(f"autotune_best_B{b}_n{n}", best["seconds"],
+                 f"n1={best['n1']};n2={best['n2']};n3={best['n3']};"
+                 f"block={best['block']};karatsuba={best['karatsuba']}")
+
+
+if __name__ == "__main__":
+    main()

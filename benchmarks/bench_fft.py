@@ -46,3 +46,25 @@ def run(n: int = 4096, batch: int = 32, full: bool = False):
     t = timeit(lambda: ops.fused_fft_mult_ifft_rows(xr, xi, hr, hi, block=8))
     emit("fused_fft_mult_ifft", t / batch,
          f"gflops={(2 * flops + 6 * n * batch) / t / 1e9:.2f}")
+
+    # batched multi-scene dispatch: per-scene latency amortization (B scenes
+    # of `batch` lines each share ONE dispatch and one set of DFT constants)
+    header(f"table_1b: batched scenes N={n} lines={batch}")
+    t1 = None
+    for b in (1, 4):
+        xb = jnp.asarray(rng.standard_normal((b, batch, n)), jnp.float32)
+        yb = jnp.asarray(rng.standard_normal((b, batch, n)), jnp.float32)
+        t = timeit(lambda: ops.fused_fft_mult_ifft_rows(xb, yb, hr, hi,
+                                                        block=8))
+        t1 = t if b == 1 else t1
+        emit(f"fused_batched_B{b}_per_scene", t / b,
+             f"total_us={t * 1e6:.1f};amortization_vs_B1="
+             f"{t1 / (t / b):.2f}x")
+
+    # mixed-radix: a three-factor length past the 128*128 two-factor limit
+    n3 = 32768
+    x3 = jnp.asarray(rng.standard_normal((4, n3)), jnp.float32)
+    y3 = jnp.asarray(rng.standard_normal((4, n3)), jnp.float32)
+    t = timeit(lambda: ops.fft_rows(x3, y3, block=4))
+    emit("fft_matmul_3factor_n32768", t / 4,
+         f"gflops={5.0 * n3 * math.log2(n3) * 4 / t / 1e9:.2f}")

@@ -1,0 +1,85 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, the ``jax.enable_x64`` context manager). The
+pinned runtime in this container is jax 0.4.37, where those spellings either
+live under ``jax.experimental`` or do not exist yet. Everything that touches
+one of those APIs goes through this module so the rest of the code reads as
+if it were on current jax.
+
+Exports
+-------
+``shard_map(f, mesh, in_specs, out_specs, check_vma=...)``
+    Dispatches to ``jax.shard_map`` when present, else
+    ``jax.experimental.shard_map.shard_map`` (mapping the renamed
+    ``check_vma`` kwarg back to ``check_rep``).
+``enable_x64(enabled=True)``
+    Context manager toggling the ``jax_enable_x64`` config flag and
+    restoring the previous value on exit (the removed ``jax.enable_x64``).
+``make_mesh(shape, axis_names, axis_types=None)``
+    ``jax.make_mesh`` that silently drops ``axis_types`` on versions whose
+    signature predates it.
+``AXIS_TYPE_AUTO``
+    ``jax.sharding.AxisType.Auto`` when it exists, else ``None`` (callers
+    pass it straight to ``make_mesh`` above, which ignores it on old jax).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+
+import jax
+
+__all__ = ["shard_map", "enable_x64", "make_mesh", "AXIS_TYPE_AUTO"]
+
+
+# -- shard_map ---------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+    _CHECK_KWARG = "check_vma"
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` spelling that works on both old and new jax."""
+    kw = {}
+    if check_vma is not None:
+        kw[_CHECK_KWARG] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+# -- enable_x64 --------------------------------------------------------------
+
+@contextlib.contextmanager
+def enable_x64(enabled: bool = True):
+    """Replacement for the removed ``jax.enable_x64`` context manager."""
+    prev = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", bool(enabled))
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+# -- make_mesh / AxisType ----------------------------------------------------
+
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+@functools.wraps(jax.make_mesh)
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    # Callers pass (AXIS_TYPE_AUTO,) * k unconditionally; when AxisType is
+    # missing (old jax) those entries are None AND the kwarg is unsupported,
+    # so the tuple is dropped here rather than guarded at every call site.
+    if (axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES
+            and not any(t is None for t in axis_types)):
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)

@@ -9,6 +9,11 @@ That structure makes CSA *entirely* expressible with the paper's fused
 spectral kernel — every step is [FFT] * phase * [IFFT]; `build_csa_fused`
 runs it in 4 fused dispatches (a beyond-paper demonstration that the fusion
 idea covers the competitor algorithm too).
+
+Like the RDA pipelines, both builders accept one scene (na, nr) or a batch
+(B, na, nr) sharing the SceneConfig; the phase screens are computed once
+and broadcast across the batch, and the fused variant runs each stage as a
+single batched Pallas dispatch.
 """
 from __future__ import annotations
 
@@ -80,16 +85,16 @@ def build_csa(cfg: SceneConfig, r_ref: Optional[float] = None) -> Pipeline:
     h1, h2, h3 = (jnp.asarray(h) for h in csa_phases(cfg, r_ref))
 
     def az_fft(x):
-        return jnp.fft.fft(x, axis=0)
+        return jnp.fft.fft(x, axis=-2)
 
     def chirp_scale(x):
         return x * h1
 
     def range_fft_mult_ifft(x):
-        return jnp.fft.ifft(jnp.fft.fft(x, axis=1) * h2, axis=1)
+        return jnp.fft.ifft(jnp.fft.fft(x, axis=-1) * h2, axis=-1)
 
     def az_compress(x):
-        return jnp.fft.ifft(x * h3, axis=0)
+        return jnp.fft.ifft(x * h3, axis=-2)
 
     return Pipeline("csa", cfg, [
         Step("azimuth_fft", az_fft, 1, 1, False),

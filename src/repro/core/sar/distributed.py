@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.sar import filters
 from repro.core.sar.geometry import SceneConfig
 from repro.core.sar.rda import split, unsplit
@@ -102,7 +103,7 @@ def build_corner2(cfg: SceneConfig, mesh: Mesh, axes=("data",),
         return xr, xi
 
     shard = functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(None, axes), P(None, axes), P(axes), P(axes, None)),
         out_specs=(P(None, axes), P(None, axes)), check_vma=False)
 
@@ -121,7 +122,8 @@ def build_corner2(cfg: SceneConfig, mesh: Mesh, axes=("data",),
 # Schedule 2: one corner turn + halo-exchange RCMC
 # ---------------------------------------------------------------------------
 
-def _halo_rcmc(xr, xi, cfg: SceneConfig, axes, halo: int, taps: int = 8):
+def _halo_rcmc(xr, xi, cfg: SceneConfig, axes, halo: int, p: int,
+               taps: int = 8):
     """Sinc-interp RCMC on an (na, nr/P) column slab with ring halo exchange.
 
     Every row's shift is <= halo - taps//2 cells, so each device only needs
@@ -139,8 +141,8 @@ def _halo_rcmc(xr, xi, cfg: SceneConfig, axes, halo: int, taps: int = 8):
     w = w / jnp.sum(w, axis=-1, keepdims=True)
 
     # halo exchange with both ring neighbours (the shift is non-negative, but
-    # the sinc taps reach taps//2 - 1 cells to the left)
-    p = jax.lax.axis_size(axes)
+    # the sinc taps reach taps//2 - 1 cells to the left). p is the static
+    # device count along `axes` (jax.lax.axis_size is newer-jax-only).
     lh = taps // 2
     perm_r = [((i + 1) % p, i) for i in range(p)]  # right neighbour -> me
     perm_l = [((i - 1) % p, i) for i in range(p)]  # left neighbour -> me
@@ -191,13 +193,13 @@ def build_halo(cfg: SceneConfig, mesh: Mesh, axes=("data",),
         xr = jax.lax.all_to_all(xr, axes, 1, 0, tiled=True)
         xi = jax.lax.all_to_all(xi, axes, 1, 0, tiled=True)
         xr, xi = ops.fft_cols(xr, xi, **ckw)                              # 2
-        xr, xi = _halo_rcmc(xr, xi, cfg, axes, halo)                      # 3
+        xr, xi = _halo_rcmc(xr, xi, cfg, axes, halo, p)                   # 3
         xr, xi = ops.fused_mult_ifft_cols_outer(
             xr, xi, az_u2_blk, az_v2, **ckw)                              # 4
         return xr, xi
 
     shard = functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axes, None), P(axes, None), P(axes)),
         out_specs=(P(None, axes), P(None, axes)), check_vma=False)
 

@@ -3,6 +3,22 @@
 Data layout: (na, nr) = (azimuth, range), complex64 at the public boundary,
 split re/im float32 inside the fused paths (the Pallas kernels' layout).
 
+Batched multi-scene focusing (beyond-paper): every pipeline accepts either
+one scene (na, nr) or a batch (B, na, nr) sharing the same SceneConfig.
+The fused variants process the whole batch per stage as a SINGLE Pallas
+dispatch whose grid spans B x line-blocks (kernels/ops.py), so dispatch
+overhead and the broadcast DFT-constant loads amortize across scenes —
+`focus(raw_batch, cfg)` is the one-call entry, `examples/batch_scenes.py`
+the demo, and benchmarks/bench_rda.py (table_2b) the amortization
+measurement. Filters are computed once from cfg and shared by every scene.
+
+Kernel tuning: the pipeline builders' `block`/`col_block` kwargs and the
+kernels' mixed-radix factorization (n = n1*n2[*n3], factors <= 128; see
+kernels/fft4step.py) are swept per (batch, FFT length) by
+benchmarks/autotune.py — `autotune.best_config(n, B)` returns the cached
+fastest `(block, n1, n2, n3, karatsuba)` config, and
+`autotune.spectral_kwargs(cfg)` turns it into ops.spectral_op kwargs.
+
 Variants
 --------
 ``unfused``      The paper's baseline: one XLA op per stage (jnp.fft FFT,
@@ -54,8 +70,9 @@ def rcmc_sinc(x: jnp.ndarray, cfg: SceneConfig, taps: int = 8,
               range_variant: bool = False) -> jnp.ndarray:
     """8-tap windowed-sinc RCMC in the range-Doppler domain (paper step 3).
 
-    x: (na, nr) complex, rows = Doppler bins. Row f_a is shifted by
-    -s(f_a) samples, i.e. y[row, col] = x[row, col + s] interpolated.
+    x: (na, nr) or (B, na, nr) complex, rows = Doppler bins. Row f_a is
+    shifted by -s(f_a) samples, i.e. y[..., row, col] = x[..., row, col + s]
+    interpolated (the shift table broadcasts across any batch dim).
     """
     if range_variant:
         s = jnp.asarray(filters.rcmc_shift_samples_variant(cfg), jnp.float32)
@@ -74,7 +91,8 @@ def rcmc_sinc(x: jnp.ndarray, cfg: SceneConfig, taps: int = 8,
     w = w / jnp.sum(w, axis=-1, keepdims=True)
     for k in range(taps):
         idx = jnp.mod(cols + base.astype(jnp.int32) + offs[k], cfg.nr)
-        gathered = jnp.take_along_axis(x, jnp.broadcast_to(idx, x.shape), axis=1)
+        gathered = jnp.take_along_axis(x, jnp.broadcast_to(idx, x.shape),
+                                       axis=-1)
         y = y + gathered * w[..., k].astype(x.dtype)
     return y
 
@@ -128,22 +146,23 @@ def build_unfused(cfg: SceneConfig, rcmc_mode: str = "sinc") -> Pipeline:
 
     def range_compress(x):
         # 3 separate dispatches: FFT, multiply, IFFT (each an HBM round trip)
-        xf = jnp.fft.fft(x, axis=1)
-        xf = xf * hr_c[None, :]
-        return jnp.fft.ifft(xf, axis=1)
+        xf = jnp.fft.fft(x, axis=-1)
+        xf = xf * hr_c
+        return jnp.fft.ifft(xf, axis=-1)
 
     def azimuth_fft(x):
-        return jnp.fft.fft(x, axis=0)
+        return jnp.fft.fft(x, axis=-2)
 
     def rcmc(x):
         if rcmc_mode == "sinc":
             return rcmc_sinc(x, cfg)
         u, v = filters.rcmc_phase_uv(cfg)
         ph = jnp.asarray(u)[:, None] * jnp.asarray(v)[None, :]
-        return jnp.fft.ifft(jnp.fft.fft(x, axis=1) * jnp.exp(1j * ph), axis=1)
+        return jnp.fft.ifft(jnp.fft.fft(x, axis=-1) * jnp.exp(1j * ph),
+                            axis=-1)
 
     def azimuth_compress(x):
-        return jnp.fft.ifft(x * ha_c, axis=0)
+        return jnp.fft.ifft(x * ha_c, axis=-2)
 
     return Pipeline("unfused", cfg, [
         Step("range_compression", range_compress, 3, 3, False),
@@ -156,25 +175,37 @@ def build_unfused(cfg: SceneConfig, rcmc_mode: str = "sinc") -> Pipeline:
 # -- paper-faithful fused -----------------------------------------------------
 
 def build_fused(cfg: SceneConfig, interpret: Optional[bool] = None,
-                block: int = 8, fft_impl: str = "matmul") -> Pipeline:
-    """The paper's pipeline: steps 1 & 4 fused, steps 2-3 unfused (Sec. IV-A)."""
+                block: int = 8, fft_impl: str = "matmul",
+                fft_kw: Optional[dict] = None) -> Pipeline:
+    """The paper's pipeline: steps 1 & 4 fused, steps 2-3 unfused (Sec. IV-A).
+
+    fft_kw: extra ops.spectral_op kwargs applied to the row-pipeline
+    dispatches — typically the autotuned (n1, n2, n3, karatsuba) from
+    benchmarks/autotune.py (factorizations are per FFT length, so they
+    apply to the range axis; column dispatches keep the default split).
+    """
     hr_r, hr_i = filters.range_matched_filter(cfg)
     hr_r, hr_i = jnp.asarray(hr_r), jnp.asarray(hr_i)
     ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
     # azimuth compression operates on the TRANSPOSED matrix (nr, na): filter^T
     ha_rT, ha_iT = jnp.asarray(ha_r.T).copy(), jnp.asarray(ha_i.T).copy()
-    kw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
+    # fft_kw carries the length-nr factorization: range dispatches only.
+    # The azimuth steps row-FFT the TRANSPOSED matrix (length na), so they
+    # keep the default factorization for their own length.
+    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
+               **(fft_kw or {}))
+    akw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
 
     def range_compress(x):
         xr, xi = split(x)
-        yr, yi = ops.fused_fft_mult_ifft_rows(xr, xi, hr_r, hr_i, **kw)
+        yr, yi = ops.fused_fft_mult_ifft_rows(xr, xi, hr_r, hr_i, **rkw)
         return unsplit(yr, yi)
 
     def azimuth_fft(x):
         # transpose -> row FFT -> transpose (paper keeps this unfused)
         xr, xi = split(x)
         xr, xi = transpose(xr, interpret=interpret), transpose(xi, interpret=interpret)
-        yr, yi = ops.fft_rows(xr, xi, **kw)
+        yr, yi = ops.fft_rows(xr, xi, **akw)
         yr, yi = transpose(yr, interpret=interpret), transpose(yi, interpret=interpret)
         return unsplit(yr, yi)
 
@@ -185,7 +216,7 @@ def build_fused(cfg: SceneConfig, interpret: Optional[bool] = None,
         xr, xi = split(x)
         xr, xi = transpose(xr, interpret=interpret), transpose(xi, interpret=interpret)
         yr, yi = ops.spectral_op(xr, xi, hr=ha_rT, hi=ha_iT, fwd=False, inv=True,
-                                 axis=1, filter_mode="full", **kw)
+                                 axis=1, filter_mode="full", **akw)
         yr, yi = transpose(yr, interpret=interpret), transpose(yi, interpret=interpret)
         return unsplit(yr, yi)
 
@@ -202,7 +233,8 @@ def build_fused(cfg: SceneConfig, interpret: Optional[bool] = None,
 def build_fused_tfree(cfg: SceneConfig, interpret: Optional[bool] = None,
                       block: int = 8, col_block: int = 128,
                       fft_impl: str = "matmul",
-                      synth_phase: bool = False) -> Pipeline:
+                      synth_phase: bool = False,
+                      fft_kw: Optional[dict] = None) -> Pipeline:
     """4 dispatches, no global transposes, RCMC fused via the shift theorem.
 
     synth_phase=False reads the exact precomputed 2-D azimuth filter
@@ -218,7 +250,8 @@ def build_fused_tfree(cfg: SceneConfig, interpret: Optional[bool] = None,
     az_u2, az_v2 = jnp.asarray(az_u2), jnp.asarray(az_v2)
     ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
     ha_r, ha_i = jnp.asarray(ha_r), jnp.asarray(ha_i)
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
+    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
+               **(fft_kw or {}))
     ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
 
     def range_compress(x):
@@ -258,7 +291,8 @@ def build_fused_tfree(cfg: SceneConfig, interpret: Optional[bool] = None,
 
 def build_fused3(cfg: SceneConfig, interpret: Optional[bool] = None,
                  block: int = 8, col_block: int = 128,
-                 fft_impl: str = "matmul", synth_phase: bool = True) -> Pipeline:
+                 fft_impl: str = "matmul", synth_phase: bool = True,
+                 fft_kw: Optional[dict] = None) -> Pipeline:
     """The minimum-dispatch RDA. Range compression commutes with the azimuth
     FFT (it is an identical per-row linear operator), so the pipeline reorders
     to  azimuth FFT -> [range FFT * H_r * RCMC-shift * range IFFT] ->
@@ -278,7 +312,8 @@ def build_fused3(cfg: SceneConfig, interpret: Optional[bool] = None,
     az_u2, az_v2 = jnp.asarray(az_u2), jnp.asarray(az_v2)
     ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
     ha_r, ha_i = jnp.asarray(ha_r), jnp.asarray(ha_i)
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
+    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
+               **(fft_kw or {}))
     ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
 
     def azimuth_fft(x):
@@ -320,5 +355,6 @@ def build_pipeline(cfg: SceneConfig, variant: str, **kw) -> Pipeline:
 
 def focus(raw: jnp.ndarray, cfg: SceneConfig, variant: str = "fused_tfree",
           **kw) -> jnp.ndarray:
-    """One-call RDA: raw echo (na, nr) complex64 -> focused image."""
+    """One-call RDA: raw echo (na, nr) — or a batch (B, na, nr) of scenes
+    sharing `cfg` — complex64 -> focused image(s) of the same shape."""
     return build_pipeline(cfg, variant, **kw).run(raw)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core.sar.geometry import C, PointTarget, SceneConfig
 
 
@@ -53,7 +54,7 @@ def simulate(cfg: SceneConfig, targets: list[PointTarget],
              add_noise: bool = True) -> jnp.ndarray:
     """Raw echo matrix (na, nr) complex64 for all targets (+ noise)."""
     cfg.validate()
-    with jax.enable_x64(True):
+    with enable_x64(True):
         eta, t = time_axes(cfg)
         acc = jnp.zeros((cfg.na, cfg.nr), jnp.complex64)
         for tgt in targets:

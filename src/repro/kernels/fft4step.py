@@ -21,6 +21,37 @@ TPU adaptation (see DESIGN.md SS2):
 A 'stockham' VPU implementation (radix-4/radix-2, no matmuls) is provided as
 the scalar baseline for the paper's Table I comparison.
 
+Batched multi-scene dispatch (beyond-paper)
+-------------------------------------------
+Every kernel takes a leading batch dimension: x is (B, lines, N) for the
+rows pipeline and (B, N, lines) for the columns pipeline. The Pallas grid
+spans ``batch-blocks x line-blocks`` and each grid step holds a
+(Bb, L, N) slab — the SAME line-block of Bb scenes — which the transform
+folds into one (Bb*L, N) line batch. Scenes therefore share one dispatch,
+one set of broadcast DFT-constant blocks per step, and larger (better
+MXU-shaped) matmuls; none of that happens with a Python-level vmap, which
+re-issues the whole dispatch per scene. Filters are batch-shared (one
+(lines, N) filter / (N,) vector / rank-K phase for all B scenes), matching
+multi-scene SAR where every scene uses the same SceneConfig. The unbatched
+public API in kernels/ops.py is the B=1 special case (2-D inputs are
+expanded and squeezed transparently).
+
+Mixed-radix factorization rules
+-------------------------------
+``SpectralSpec.factors()`` returns a two- OR three-factor decomposition
+``n = n1*n2[*n3]`` with every factor a power of two <= 128 (the MXU edge):
+
+  * n <= 16384: the ~sqrt two-factor split (n1 >= n2), e.g. 4096 = 64*64,
+    8192 = 128*64, 512 = 32*16.
+  * 16384 < n <= 2^21: a three-factor split, e.g. 32768 = 32*32*32 —
+    the four-step formulation applies recursively (stage-A matmul,
+    twiddle, then a four-step FFT of the remaining length), so lengths
+    beyond 128*128 still map onto dense MXU matmuls instead of erroring.
+
+Explicit ``n1``/``n2``/``n3`` override the default (the autotuner in
+benchmarks/autotune.py sweeps them per (B, n) together with ``block`` and
+``karatsuba`` and caches the fastest config).
+
 Everything is validated in interpret mode against kernels/ref.py (pure jnp).
 """
 from __future__ import annotations
@@ -50,14 +81,29 @@ FILTER_SHARED_OUTER = "shared_outer"  # H[sample] * exp(i sum_k u v): range
                           # (the 3-dispatch RDA; beyond-paper)
 
 
-def default_factorization(n: int) -> tuple[int, int]:
-    """Split n = n1 * n2 with n1 >= n2, both powers of two <= 128 when possible."""
+MAX_FACTOR = 128  # MXU edge: every DFT matmul factor must be <= 128
+
+
+def default_factorization(n: int) -> tuple[int, ...]:
+    """Mixed-radix split of n into 2 or 3 power-of-two factors, each <= 128.
+
+    n <= 128*128:  the ~sqrt two-factor split with n1 >= n2 (the paper's
+                   regime: 4096 = 64*64; plus 8192 = 128*64, 512 = 32*16).
+    n <= 128^3:    three factors f1 >= f2 >= f3 (e.g. 32768 = 32*32*32) —
+                   the four-step recursion keeps every stage on the MXU.
+    """
     if n & (n - 1):
         raise ValueError(f"FFT length must be a power of two, got {n}")
     p = n.bit_length() - 1
-    n1 = 1 << ((p + 1) // 2)
-    n2 = n // n1
-    return n1, n2
+    if n <= MAX_FACTOR * MAX_FACTOR:
+        n1 = 1 << ((p + 1) // 2)
+        return n1, n // n1
+    if n > MAX_FACTOR ** 3:
+        raise ValueError(
+            f"n={n} exceeds the three-factor limit {MAX_FACTOR ** 3}")
+    p1 = (p + 2) // 3
+    p2 = (p - p1 + 1) // 2
+    return 1 << p1, 1 << p2, 1 << (p - p1 - p2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,42 +116,77 @@ class SpectralSpec:
     inv: bool                   # inverse FFT last?
     axis: int = 1               # 1 = rows pipeline (last axis), 0 = columns
     block: int = 8              # lines (rows kernel) / columns (cols kernel) per grid step
-    n1: Optional[int] = None    # four-step factorization (defaults to ~sqrt split)
-    n2: Optional[int] = None
+    batch_block: Optional[int] = None  # scenes per grid step (None = all)
+    n1: Optional[int] = None    # mixed-radix factorization (defaults to
+    n2: Optional[int] = None    # default_factorization's 2- or 3-way split)
+    n3: Optional[int] = None
     fft_impl: str = "matmul"    # 'matmul' (MXU) | 'stockham' (VPU scalar baseline)
     karatsuba: bool = False     # 3-matmul complex product instead of 4
     compute_dtype: str = "f32"  # 'f32' | 'bf16' (bf16 inputs, f32 accumulation)
     fold_scale: bool = True     # fold the IFFT 1/N into the filter/final store
     outer_rank: int = 1         # K of the rank-K FILTER_OUTER phase
 
-    def factors(self) -> tuple[int, int]:
+    def factors(self) -> tuple[int, ...]:
+        """The mixed-radix decomposition n = n1 * n2 [* n3], every factor
+        a power of two <= 128 (see the module docstring for the rules)."""
         if self.n1 is not None:
-            n1 = self.n1
-            n2 = self.n2 if self.n2 is not None else self.n // n1
+            fs = [self.n1]
+            if self.n2 is not None:
+                fs.append(self.n2)
+            if self.n3 is not None:
+                fs.append(self.n3)
+            if len(fs) == 1:
+                fs.append(self.n // self.n1)
+            fs = tuple(fs)
         else:
-            n1, n2 = default_factorization(self.n)
-        if n1 * n2 != self.n:
-            raise ValueError(f"n1*n2 != n: {n1}*{n2} != {self.n}")
-        return n1, n2
+            fs = default_factorization(self.n)
+        if int(np.prod(fs)) != self.n:
+            raise ValueError(f"factors {fs} do not multiply to n={self.n}")
+        for f in fs:
+            if f < 1 or f & (f - 1):
+                raise ValueError(f"factor {f} is not a power of two: {fs}")
+            if f > MAX_FACTOR:
+                raise ValueError(
+                    f"factor {f} exceeds the MXU edge {MAX_FACTOR}: {fs}")
+        return fs
+
+    @property
+    def num_dft_consts(self) -> int:
+        """Operand count for the DFT constants: one (re, im) matrix pair per
+        factor plus one (re, im) twiddle pair per inter-stage boundary."""
+        k = len(self.factors())
+        return 4 * k - 2
 
 
 # ---------------------------------------------------------------------------
 # DFT constants (host-side numpy; passed to the kernel as broadcast operands)
 # ---------------------------------------------------------------------------
 
-def dft_constants(n1: int, n2: int) -> tuple[np.ndarray, ...]:
-    """F1 (n1,n1), F2 (n2,n2) DFT matrices and the (n1,n2) twiddle, split re/im."""
+def dft_constants(*factors: int) -> tuple[np.ndarray, ...]:
+    """DFT matrices and inter-stage twiddles for a mixed-radix factor list.
+
+    Returns, split re/im and in order: one (f_i, f_i) DFT matrix per factor,
+    then one (f_i, prod(f_{i+1:})) twiddle per non-final stage, where the
+    stage-i twiddle is exp(-2j pi k_i j / prod(f_{i:})) — the classic
+    four-step twiddle, applied recursively. For two factors this is exactly
+    (F1, F2, tw(n1, n2)); three factors add F3 and a (f2, f3) twiddle.
+    """
     def dft(n):
         k = np.arange(n)
         m = np.exp(-2j * np.pi * np.outer(k, k) / n)
         return m.real.astype(np.float32), m.imag.astype(np.float32)
 
-    f1r, f1i = dft(n1)
-    f2r, f2i = dft(n2)
-    k1 = np.arange(n1)[:, None]
-    m2 = np.arange(n2)[None, :]
-    tw = np.exp(-2j * np.pi * k1 * m2 / (n1 * n2))
-    return f1r, f1i, f2r, f2i, tw.real.astype(np.float32), tw.imag.astype(np.float32)
+    out: list[np.ndarray] = []
+    for f in factors:
+        out.extend(dft(f))
+    for i in range(len(factors) - 1):
+        rest = int(np.prod(factors[i + 1:]))
+        k = np.arange(factors[i])[:, None]
+        j = np.arange(rest)[None, :]
+        tw = np.exp(-2j * np.pi * k * j / (factors[i] * rest))
+        out.append(tw.real.astype(np.float32))
+        out.append(tw.imag.astype(np.float32))
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -165,44 +246,83 @@ def _cdot_rhs(xr, xi, fr, fi, dims, *, karatsuba: bool, compute_dtype: str):
 # Four-step matmul FFT, in-kernel (rows: transform the last axis of (L, N))
 # ---------------------------------------------------------------------------
 
+def _split_consts(consts, factors):
+    """(per-stage DFT matrix pairs, per-boundary twiddle pairs)."""
+    k = len(factors)
+    mats = [(consts[2 * i], consts[2 * i + 1]) for i in range(k)]
+    tws = [(consts[2 * k + 2 * i], consts[2 * k + 2 * i + 1])
+           for i in range(k - 1)]
+    return mats, tws
+
+
 def _fft_rows_matmul(xr, xi, consts, spec: SpectralSpec):
-    f1r, f1i, f2r, f2i, twr, twi = consts
-    n1, n2 = spec.factors()
-    L = xr.shape[0]
-    xr = xr.reshape(L, n1, n2)
-    xi = xi.reshape(L, n1, n2)
-    # Stage A: contract n1 with F1 -> (n1, L, n2)
-    ar, ai = _cdot(f1r, f1i, xr, xi, ((1,), (1,)),
-                   karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
-    # Twiddle (n1, 1, n2)
-    br, bi = _cmul(ar, ai, twr[:, None, :], twi[:, None, :])
-    # Stage C: contract n2 with F2 -> (n1, L, n2)
-    cr, ci = _cdot_rhs(br, bi, f2r, f2i, ((2,), (0,)),
-                       karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
-    # out[l, k2*n1 + k1] = C[k1, l, k2]
-    cr = jnp.transpose(cr, (1, 2, 0)).reshape(L, spec.n)
-    ci = jnp.transpose(ci, (1, 2, 0)).reshape(L, spec.n)
-    return cr, ci
+    """Mixed-radix four-step FFT along the last axis of (L, N).
+
+    Recursive Cooley-Tukey over spec.factors(): at stage i the length-m
+    block (m = prod of the remaining factors) is reshaped to (f_i, m/f_i),
+    contracted with the f_i-point DFT matrix on the MXU, twiddled, and the
+    remainder transformed recursively. Two factors reproduce the classic
+    four-step (stage A matmul, twiddle, stage C matmul) exactly.
+    """
+    factors = spec.factors()
+    mats, tws = _split_consts(consts, factors)
+    kw = dict(karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+
+    def rec(xr, xi, i):
+        # xr/xi: (M, m) — transform the last axis, m = prod(factors[i:])
+        M, m = xr.shape
+        f = factors[i]
+        fr, fi = mats[i]
+        if i == len(factors) - 1:
+            # base: one dense DFT matmul (DFT matrices are symmetric)
+            return _cdot_rhs(xr, xi, fr, fi, ((1,), (0,)), **kw)
+        rest = m // f
+        x3r = xr.reshape(M, f, rest)
+        x3i = xi.reshape(M, f, rest)
+        # stage A: contract f with F_i -> (f, M, rest), index k_i first
+        ar, ai = _cdot(fr, fi, x3r, x3i, ((1,), (1,)), **kw)
+        twr, twi = tws[i]
+        br, bi = _cmul(ar, ai, twr[:, None, :], twi[:, None, :])
+        # recurse on the remaining length
+        zr, zi = rec(br.reshape(f * M, rest), bi.reshape(f * M, rest), i + 1)
+        zr = zr.reshape(f, M, rest)
+        zi = zi.reshape(f, M, rest)
+        # out[l, k_rest * f + k_i] = z[k_i, l, k_rest]
+        return (jnp.transpose(zr, (1, 2, 0)).reshape(M, m),
+                jnp.transpose(zi, (1, 2, 0)).reshape(M, m))
+
+    return rec(xr, xi, 0)
 
 
 def _fft_cols_matmul(xr, xi, consts, spec: SpectralSpec):
-    """Transform axis 0 of an (N, C) column slab — no global transpose needed."""
-    f1r, f1i, f2r, f2i, twr, twi = consts
-    n1, n2 = spec.factors()
-    C = xr.shape[1]
-    xr = xr.reshape(n1, n2, C)
-    xi = xi.reshape(n1, n2, C)
-    # Stage A: contract n1 with F1 -> (n1, n2, C)
-    ar, ai = _cdot(f1r, f1i, xr, xi, ((1,), (0,)),
-                   karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
-    br, bi = _cmul(ar, ai, twr[:, :, None], twi[:, :, None])
-    # Stage C: contract n2 with F2 -> (n1, C, n2)
-    cr, ci = _cdot_rhs(br, bi, f2r, f2i, ((1,), (0,)),
-                       karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
-    # out[k2*n1 + k1, c] = C[k1, c, k2]
-    cr = jnp.transpose(cr, (2, 0, 1)).reshape(spec.n, C)
-    ci = jnp.transpose(ci, (2, 0, 1)).reshape(spec.n, C)
-    return cr, ci
+    """Mixed-radix four-step FFT along axis 0 of an (N, C) column slab —
+    no global transpose needed (same recursion as rows, column layout)."""
+    factors = spec.factors()
+    mats, tws = _split_consts(consts, factors)
+    kw = dict(karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+
+    def rec(xr, xi, i):
+        # xr/xi: (m, C) — transform axis 0, m = prod(factors[i:])
+        m, C = xr.shape
+        f = factors[i]
+        fr, fi = mats[i]
+        if i == len(factors) - 1:
+            return _cdot(fr, fi, xr, xi, ((1,), (0,)), **kw)
+        rest = m // f
+        x3r = xr.reshape(f, rest, C)
+        x3i = xi.reshape(f, rest, C)
+        # stage A: contract f with F_i -> (f, rest, C)
+        ar, ai = _cdot(fr, fi, x3r, x3i, ((1,), (0,)), **kw)
+        twr, twi = tws[i]
+        br, bi = _cmul(ar, ai, twr[:, :, None], twi[:, :, None])
+        # recurse along the remaining length: (rest, f*C)
+        cr = jnp.transpose(br, (1, 0, 2)).reshape(rest, f * C)
+        ci = jnp.transpose(bi, (1, 0, 2)).reshape(rest, f * C)
+        zr, zi = rec(cr, ci, i + 1)
+        # out[k_rest * f + k_i, c] = z[k_rest, k_i, c] — a plain reshape
+        return zr.reshape(m, C), zi.reshape(m, C)
+
+    return rec(xr, xi, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -266,33 +386,57 @@ def _fft_stockham(xr, xi, spec: SpectralSpec, axis: int):
 # ---------------------------------------------------------------------------
 
 def _run_fft(xr, xi, consts, spec: SpectralSpec, inverse: bool):
-    """Forward or inverse (conj-FFT-conj) transform along spec.axis."""
+    """Forward or inverse (conj-FFT-conj) transform along spec.axis.
+
+    x is a (Bb, L, n) / (Bb, n, L) batch block: the batch dim folds into
+    the line dim for the transform (scenes are independent lines), so one
+    grid step's matmuls span Bb * L lines — THE amortization: DFT constants
+    are loaded once per step and shared by every scene in the block.
+    """
+    bb = xr.shape[0]
+    if spec.axis == 1:
+        # (Bb, L, n) -> (Bb*L, n): contiguous, a free reshape
+        xr2 = xr.reshape(bb * xr.shape[1], xr.shape[2])
+        xi2 = xi.reshape(bb * xi.shape[1], xi.shape[2])
+    else:
+        # (Bb, n, L) -> (n, Bb*L): the scene axis must stay leading
+        xr2 = jnp.moveaxis(xr, 0, 1).reshape(xr.shape[1], bb * xr.shape[2])
+        xi2 = jnp.moveaxis(xi, 0, 1).reshape(xi.shape[1], bb * xi.shape[2])
     if inverse:
-        xi = -xi
+        xi2 = -xi2
     if spec.fft_impl == "matmul":
         fft = _fft_rows_matmul if spec.axis == 1 else _fft_cols_matmul
-        yr, yi = fft(xr, xi, consts, spec)
+        yr, yi = fft(xr2, xi2, consts, spec)
     elif spec.fft_impl == "stockham":
-        yr, yi = _fft_stockham(xr, xi, spec, spec.axis)
+        yr, yi = _fft_stockham(xr2, xi2, spec, spec.axis)
     else:
         raise ValueError(f"unknown fft_impl {spec.fft_impl}")
     if inverse:
         # conj + 1/N, folded into the final store (paper SSII-C)
         scale = 1.0 / spec.n
-        return yr * scale, yi * (-scale)
+        yr, yi = yr * scale, yi * (-scale)
+    if spec.axis == 1:
+        return yr.reshape(xr.shape), yi.reshape(xi.shape)
+    yr = jnp.moveaxis(yr.reshape(xr.shape[1], bb, xr.shape[2]), 1, 0)
+    yi = jnp.moveaxis(yi.reshape(xi.shape[1], bb, xi.shape[2]), 1, 0)
     return yr, yi
 
 
 def _spectral_kernel(spec: SpectralSpec, *refs):
     """Pallas kernel body. Ref layout (in order):
 
-    xr, xi, [f1r,f1i,f2r,f2i,twr,twi if matmul], [filter refs...], or, oi
+    xr, xi, [DFT matrices + twiddles if matmul], [filter refs...], or, oi
+
+    The x/output refs are (Bb, L, n) rows / (Bb, n, L) cols batch blocks:
+    each grid step holds the SAME line-block of every scene in the batch
+    block, so the DFT constants and filters are shared across scenes (the
+    2-D filters broadcast right-aligned over the leading batch dim).
     """
     it = iter(refs)
     xr_ref, xi_ref = next(it), next(it)
     consts = None
     if spec.fft_impl == "matmul" and (spec.fwd or spec.inv):
-        consts = tuple(next(it)[...] for _ in range(6))
+        consts = tuple(next(it)[...] for _ in range(spec.num_dft_consts))
     filt = ()
     if spec.filter_mode in (FILTER_SHARED, FILTER_FULL):
         filt = (next(it), next(it))          # hr, hi
@@ -311,7 +455,8 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     def _apply_outer(xr, xi, u_ref, v_ref):
         u = u_ref[...]      # rows: (L, K); cols: (K, C)  — per-line parameters
         v = v_ref[...]      # rows: (K, N); cols: (N, K)  — per-sample parameters
-        # rank-K phase synthesized in VMEM (no 2-D filter I/O)
+        # rank-K phase synthesized in VMEM (no 2-D filter I/O); the 2-D
+        # phase broadcasts across the leading batch-block dim
         if spec.axis == 1:
             phase = jax.lax.dot_general(
                 u, v, (((1,), (0,)), ((), ())),
@@ -334,8 +479,8 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     if spec.inv:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=True)
 
-    or_ref[...] = xr
-    oi_ref[...] = xi
+    or_ref[...] = xr.reshape(or_ref.shape)
+    oi_ref[...] = xi.reshape(oi_ref.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -355,50 +500,51 @@ def _flops_per_line(spec: SpectralSpec) -> float:
     return f
 
 
-def build_spectral_call(spec: SpectralSpec, lines: int, interpret: bool = False):
+def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
+                        interpret: bool = False):
     """Returns fn(xr, xi, *filter_args) -> (yr, yi) as a single pallas_call.
 
-    Rows pipeline: x is (lines, N), grid over line blocks.
-    Cols pipeline: x is (N, lines), grid over column blocks.
+    Rows pipeline: x is (B, lines, N), cols pipeline: x is (B, N, lines).
+    The grid runs over (batch-blocks, line-blocks) with each grid step
+    holding a (Bb, L, N) slab — the same line-block of Bb scenes at once —
+    so the DFT-constant loads and the per-step dispatch overhead amortize
+    across the batch (spec.batch_block defaults to the whole batch; cap it
+    when Bb * L * N would overflow VMEM). Filters are 2-D and batch-shared
+    (every scene uses the same SceneConfig filters).
     """
     n = spec.n
     L = spec.block
     if lines % L:
         raise ValueError(f"lines={lines} not divisible by block={L}")
-    grid = (lines // L,)
+    Bb = spec.batch_block or batch
+    if batch % Bb:
+        raise ValueError(f"batch={batch} not divisible by batch_block={Bb}")
+    grid = (batch // Bb, lines // L)
 
     K = spec.outer_rank
     if spec.axis == 1:
-        x_shape = (lines, n)
-        x_spec = pl.BlockSpec((L, n), lambda i: (i, 0))
-        shared_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
-        full_spec = x_spec
-        u_spec = pl.BlockSpec((L, K), lambda i: (i, 0))   # (lines, K)
-        v_spec = pl.BlockSpec((K, n), lambda i: (0, 0))   # (K, n)
+        x_shape = (batch, lines, n)
+        x_spec = pl.BlockSpec((Bb, L, n), lambda b, i: (b, i, 0))
+        shared_spec = pl.BlockSpec((1, n), lambda b, i: (0, 0))
+        full_spec = pl.BlockSpec((L, n), lambda b, i: (i, 0))
+        u_spec = pl.BlockSpec((L, K), lambda b, i: (i, 0))   # (lines, K)
+        v_spec = pl.BlockSpec((K, n), lambda b, i: (0, 0))   # (K, n)
     else:
-        x_shape = (n, lines)
-        x_spec = pl.BlockSpec((n, L), lambda i: (0, i))
-        shared_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
-        full_spec = x_spec
-        u_spec = pl.BlockSpec((K, L), lambda i: (0, i))   # (K, lines)
-        v_spec = pl.BlockSpec((n, K), lambda i: (0, 0))   # (n, K)
+        x_shape = (batch, n, lines)
+        x_spec = pl.BlockSpec((Bb, n, L), lambda b, i: (b, 0, i))
+        shared_spec = pl.BlockSpec((n, 1), lambda b, i: (0, 0))
+        full_spec = pl.BlockSpec((n, L), lambda b, i: (0, i))
+        u_spec = pl.BlockSpec((K, L), lambda b, i: (0, i))   # (K, lines)
+        v_spec = pl.BlockSpec((n, K), lambda b, i: (0, 0))   # (n, K)
 
     in_specs = [x_spec, x_spec]
     extra_args: list[jnp.ndarray] = []
 
     needs_consts = spec.fft_impl == "matmul" and (spec.fwd or spec.inv)
     if needs_consts:
-        n1, n2 = spec.factors()
-        consts = dft_constants(n1, n2)
-        const_specs = [
-            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
-            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
-            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
-            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
-            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
-            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
-        ]
-        in_specs += const_specs
+        consts = dft_constants(*spec.factors())
+        in_specs += [pl.BlockSpec(c.shape, lambda b, i: (0, 0))
+                     for c in consts]
         extra_args += [jnp.asarray(c) for c in consts]
 
     if spec.filter_mode == FILTER_SHARED:
@@ -430,5 +576,5 @@ def build_spectral_call(spec: SpectralSpec, lines: int, interpret: bool = False)
         args = [xr, xi] + extra_args + list(filter_args)
         return call(*args)
 
-    fn.flops = _flops_per_line(spec) * lines  # nominal, for benchmark CSV
+    fn.flops = _flops_per_line(spec) * lines * batch  # nominal, for benches
     return fn

@@ -4,6 +4,13 @@ All functions take/return split re/im float32 arrays. `interpret=None`
 auto-selects interpret mode off-TPU (this container is CPU-only; on a real
 TPU fleet the same code lowers to Mosaic).
 
+Batching: every wrapper accepts either one scene — (lines, N) rows layout /
+(N, lines) cols layout — or a batch of scenes with a leading batch
+dimension, (B, lines, N) / (B, N, lines). Batched inputs run as ONE fused
+dispatch with the Pallas grid spanning B x line-blocks (see fft4step.py);
+2-D inputs are transparently treated as B=1 and squeezed on return. Filter
+arguments are always unbatched (scenes share the SceneConfig filters).
+
 The wrappers handle line-count padding so callers never worry about the
 block size; the kernel itself assumes divisibility.
 """
@@ -37,7 +44,7 @@ def _pad_lines(x, axis, mult):
     pad = (-lines) % mult
     if pad == 0:
         return x, lines
-    widths = [(0, 0), (0, 0)]
+    widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths), lines
 
@@ -46,7 +53,8 @@ def _pad_lines(x, axis, mult):
     jax.jit,
     static_argnames=(
         "axis", "fwd", "inv", "filter_mode", "block", "fft_impl",
-        "karatsuba", "compute_dtype", "interpret", "n1", "n2",
+        "karatsuba", "compute_dtype", "interpret", "n1", "n2", "n3",
+        "batch_block",
     ),
 )
 def spectral_op(
@@ -68,18 +76,29 @@ def spectral_op(
     interpret: Optional[bool] = None,
     n1: Optional[int] = None,
     n2: Optional[int] = None,
+    n3: Optional[int] = None,
+    batch_block: Optional[int] = None,
 ):
     """One fused dispatch: [FFT] -> [filter multiply] -> [IFFT] along `axis`.
 
-    x: (lines, N) when axis=1, (N, lines) when axis=0.
-    filter args by mode:
+    x: (lines, N) when axis=1, (N, lines) when axis=0 — or a batch of
+    scenes, (B, lines, N) / (B, N, lines), fused into the same single
+    dispatch (`axis` always names the scene axis, batch excluded).
+    filter args by mode (unbatched; shared across any batch):
       shared: hr/hi (N,)       — e.g. the range matched filter
-      full:   hr/hi same shape as x
+      full:   hr/hi one scene's shape
       outer:  u (lines,) or (lines, K), v (N,) or (N, K) —
               filter = exp(i * sum_k u[line,k] * v[sample,k])
+    n1/n2/n3: optional mixed-radix factorization override (n = n1*n2[*n3],
+    powers of two <= 128); default per fft4step.default_factorization.
     """
-    line_axis = 0 if axis == 1 else 1
-    n = xr.shape[axis]
+    batched = xr.ndim == 3
+    if not batched:
+        xr = xr[None]
+        xi = xi[None]
+    b = xr.shape[0]
+    line_axis = 1 if axis == 1 else 2
+    n = xr.shape[axis + 1]
     xr, lines = _pad_lines(xr, line_axis, block)
     xi, _ = _pad_lines(xi, line_axis, block)
 
@@ -91,19 +110,21 @@ def spectral_op(
 
     spec = SpectralSpec(
         n=n, fwd=fwd, inv=inv, filter_mode=filter_mode, axis=axis,
-        block=block, fft_impl=fft_impl, karatsuba=karatsuba,
-        compute_dtype=compute_dtype, n1=n1, n2=n2, outer_rank=outer_rank,
+        block=block, batch_block=batch_block, fft_impl=fft_impl,
+        karatsuba=karatsuba, compute_dtype=compute_dtype, n1=n1, n2=n2,
+        n3=n3, outer_rank=outer_rank,
     )
-    call = build_spectral_call(spec, xr.shape[line_axis],
+    call = build_spectral_call(spec, xr.shape[line_axis], batch=b,
                                interpret=_auto_interpret(interpret))
 
+    filt_line_axis = 0 if axis == 1 else 1   # filters stay 2-D
     filter_args = []
     if filter_mode == FILTER_SHARED:
         fshape = (1, n) if axis == 1 else (n, 1)
         filter_args = [hr.reshape(fshape), hi.reshape(fshape)]
     elif filter_mode == FILTER_FULL:
-        hr, _ = _pad_lines(hr, line_axis, block)
-        hi, _ = _pad_lines(hi, line_axis, block)
+        hr, _ = _pad_lines(hr, filt_line_axis, block)
+        hi, _ = _pad_lines(hi, filt_line_axis, block)
         filter_args = [hr, hi]
     elif filter_mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
         pad = (-lines) % block
@@ -117,9 +138,13 @@ def spectral_op(
             filter_args = [hr.reshape(fshape), hi.reshape(fshape)] + filter_args
 
     yr, yi = call(xr, xi, *filter_args)
-    if line_axis == 0:
-        return yr[:lines], yi[:lines]
-    return yr[:, :lines], yi[:, :lines]
+    if line_axis == 1:
+        yr, yi = yr[:, :lines], yi[:, :lines]
+    else:
+        yr, yi = yr[:, :, :lines], yi[:, :, :lines]
+    if not batched:
+        return yr[0], yi[0]
+    return yr, yi
 
 
 # ---- Convenience entry points (named for the SAR pipeline steps) ----------

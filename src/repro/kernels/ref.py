@@ -30,7 +30,10 @@ def spectral_ref(xr, xi, *, axis: int, fwd: bool, inv: bool,
 
     hr/hi: explicit filter (broadcastable to x). u/v: rank-K phase filter
     exp(i * sum_k u[line,k] v[sample,k]) matching FILTER_OUTER
-    (u: (lines,) or (lines, K); v: (n,) or (n, K))."""
+    (u: (lines,) or (lines, K); v: (n,) or (n, K)).
+
+    Batched oracles: pass x with a leading batch dim and axis=-1/-2 — the
+    2-D filter/phase broadcasts across the batch like the kernels do."""
     x = to_complex(xr, xi)
     if fwd:
         x = jnp.fft.fft(x, axis=axis)
@@ -40,7 +43,7 @@ def spectral_ref(xr, xi, *, axis: int, fwd: bool, inv: bool,
         u2 = u.reshape(u.shape[0], -1)
         v2 = v.reshape(v.shape[0], -1)
         phase = jnp.einsum("lk,sk->ls", u2, v2)   # (lines, samples)
-        if axis == 0:
+        if axis in (0, -2):
             phase = phase.T
         x = x * jnp.exp(1j * phase.astype(jnp.complex64))
     if inv:

@@ -19,21 +19,37 @@ def _transpose_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...].T
 
 
+def _transpose_kernel_b(x_ref, o_ref):
+    o_ref[...] = jnp.swapaxes(x_ref[...], -1, -2)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def transpose(x, *, tile: int = 256, interpret: Optional[bool] = None):
-    """Tiled (R, C) -> (C, R) transpose. Tile must divide both dims."""
+    """Tiled (R, C) -> (C, R) transpose; (B, R, C) -> (B, C, R) batched
+    (one dispatch, grid over B x row-tiles x col-tiles). Tile must divide
+    both scene dims."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    r, c = x.shape
+    *lead, r, c = x.shape
     t = min(tile, r, c)
     if r % t or c % t:
         # fall back to XLA for ragged shapes (tests exercise the tiled path)
-        return x.T
+        return jnp.swapaxes(x, -1, -2)
+    if not lead:
+        return pl.pallas_call(
+            _transpose_kernel,
+            grid=(r // t, c // t),
+            in_specs=[pl.BlockSpec((t, t), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((t, t), lambda i, j: (j, i)),
+            out_shape=jax.ShapeDtypeStruct((c, r), x.dtype),
+            interpret=interpret,
+        )(x)
+    b = lead[0]
     return pl.pallas_call(
-        _transpose_kernel,
-        grid=(r // t, c // t),
-        in_specs=[pl.BlockSpec((t, t), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((t, t), lambda i, j: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((c, r), x.dtype),
+        _transpose_kernel_b,
+        grid=(b, r // t, c // t),
+        in_specs=[pl.BlockSpec((1, t, t), lambda k, i, j: (k, i, j))],
+        out_specs=pl.BlockSpec((1, t, t), lambda k, i, j: (k, j, i)),
+        out_shape=jax.ShapeDtypeStruct((b, c, r), x.dtype),
         interpret=interpret,
     )(x)

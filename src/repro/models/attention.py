@@ -163,10 +163,10 @@ def attn_forward(p, spec: AttnSpec, x, positions, k_pos=None, xkv=None):
     """Training/prefill forward. x: (B,S,D). Returns (out, (k, v)) with k/v
     rotated (ready for caching)."""
     dt = x.dtype
-    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
+    q = _split_heads(x @ cast(p["wq"], dt, None, "heads"), spec.n_heads, spec.head_dim)
     src = x if xkv is None else xkv
-    k = _split_heads(src @ cast(p["wk"], dt), spec.n_kv, spec.head_dim)
-    v = _split_heads(src @ cast(p["wv"], dt), spec.n_kv, spec.head_dim)
+    k = _split_heads(src @ cast(p["wk"], dt, None, "heads"), spec.n_kv, spec.head_dim)
+    v = _split_heads(src @ cast(p["wv"], dt, None, "heads"), spec.n_kv, spec.head_dim)
     kp = positions if k_pos is None else k_pos
     if spec.use_rope:
         q = apply_rope(q, rope_angles(positions, spec.head_dim, spec.theta,
@@ -196,9 +196,9 @@ def attn_decode(p, spec: AttnSpec, x, cache: dict, pos):
     positions = jnp.full((b, 1), pos, jnp.int32)
     if spec.sections is not None:
         positions = jnp.repeat(positions[..., None], len(spec.sections), -1)
-    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
-    k = _split_heads(x @ cast(p["wk"], dt), spec.n_kv, spec.head_dim)
-    v = _split_heads(x @ cast(p["wv"], dt), spec.n_kv, spec.head_dim)
+    q = _split_heads(x @ cast(p["wq"], dt, None, "heads"), spec.n_heads, spec.head_dim)
+    k = _split_heads(x @ cast(p["wk"], dt, None, "heads"), spec.n_kv, spec.head_dim)
+    v = _split_heads(x @ cast(p["wv"], dt, None, "heads"), spec.n_kv, spec.head_dim)
     if spec.use_rope:
         ang = rope_angles(positions, spec.head_dim, spec.theta, spec.sections)
         q, k = apply_rope(q, ang), apply_rope(k, ang)
@@ -239,7 +239,7 @@ def cross_decode(p, spec: AttnSpec, x, cache: dict):
     """Decoder cross-attention against a fixed encoder cache {k, v}."""
     dt = x.dtype
     b = x.shape[0]
-    q = _split_heads(x @ cast(p["wq"], dt), spec.n_heads, spec.head_dim)
+    q = _split_heads(x @ cast(p["wq"], dt, None, "heads"), spec.n_heads, spec.head_dim)
     k, v = cache["k"].astype(dt), cache["v"].astype(dt)
     mask = jnp.ones((b, 1, k.shape[1]), bool)
     o = sdpa(q, k, v, mask)

@@ -13,11 +13,19 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.sharding import shard
+from repro.models.sharding import gather_for_compute, shard
 
 
-def cast(x, dtype: str):
-    return x.astype(dtype)
+def cast(x, dtype: str, *keep):
+    """Cast a parameter to the compute dtype at its use site.
+
+    Every weight flows through here, so this is also where the ZeRO-3
+    use-site gather lives: FSDP-sharded dims are un-sharded before the
+    matmul (see sharding.gather_for_compute for why bf16 partial-sum
+    contractions over the sharded "embed" dim would otherwise drift the
+    loss). `keep` optionally names the logical axes of tensor-parallel
+    output dims to leave sharded (e.g. cast(p["wq"], dt, None, "heads"))."""
+    return gather_for_compute(x.astype(dtype), *keep)
 
 
 def truncated_normal(key, shape, std, dtype="float32"):
@@ -59,8 +67,8 @@ def init_mlp(key, d: int, f: int):
 
 def mlp(p, x, act: str = "silu"):
     dt = x.dtype
-    gate = ACTS[act](x @ cast(p["wi_gate"], dt))
-    up = x @ cast(p["wi_up"], dt)
+    gate = ACTS[act](x @ cast(p["wi_gate"], dt, None, "ff"))
+    up = x @ cast(p["wi_up"], dt, None, "ff")
     # intra-block: hidden dim over "model"; seq is unsharded here (Megatron
     # sequence parallelism applies to the residual stream between blocks)
     h = shard(gate * up, "batch", None, "ff")
@@ -112,7 +120,7 @@ def init_embedding(key, vocab: int, d: int):
 
 
 def embed(p, tokens, dtype: str):
-    y = jnp.take(cast(p["table"], dtype), tokens, axis=0)
+    y = jnp.take(cast(p["table"], dtype, "vocab", None), tokens, axis=0)
     return shard(y, "batch", "seq", None)
 
 
@@ -141,7 +149,7 @@ def lm_loss_chunked(x, table, labels, mask=None, chunk: int = 512,
         mask = jnp.ones((b, s), jnp.float32)
     mask = mask.astype(jnp.float32)
 
-    wt = table.astype(x.dtype)
+    wt = cast(table, x.dtype, "vocab", None)
 
     @jax.checkpoint
     def chunk_nll(xc, yc, mc):

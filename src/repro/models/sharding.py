@@ -22,6 +22,7 @@ import threading
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -79,6 +80,48 @@ def shard(x, *logical):
     mesh, rules = ctx
     spec = resolve_spec(rules, *logical)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_for_compute(x, *keep):
+    """ZeRO-3 use-site gather: un-shard a weight's FSDP dims inside jit,
+    optionally keeping its tensor-parallel dims sharded.
+
+    Without this constraint GSPMD is free to contract a matmul over the
+    FSDP-sharded "embed" dimension as per-shard partial sums + all-reduce.
+    That is numerically fine in f32 but NOT in bf16 compute: each partial
+    product is rounded to bf16 before the reduce, drifting the loss by
+    whole units vs the single-device run. Constraining the FSDP dims to
+    replicated makes XLA all-gather the exact shards first (the gather is
+    bit-exact), so sharded and unsharded training match to reduction-order
+    error.
+
+    `keep` (one logical name or None per dim) marks dims whose model-axis
+    sharding is safe to preserve — the NON-contraction dims of
+    column-parallel weights (wq/wk/wv output heads, MLP hidden, the vocab
+    dim of the embedding/loss table), where keeping the shard costs no
+    extra arithmetic rounding. Contraction dims must always gather
+    (bf16 partial sums are exactly the drift this prevents), so pass
+    nothing for row-parallel weights like wo. Dims that do not divide
+    their mesh axis fall back to gathered. Identity outside an active
+    mesh context.
+    """
+    ctx = _active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if not keep:
+        keep = (None,) * x.ndim
+    spec = []
+    for name, dim in zip(keep, x.shape):
+        axis = rules.get(name) if name else None
+        if axis is not None:
+            sizes = [mesh.shape[a] for a in
+                     (axis if isinstance(axis, tuple) else (axis,))]
+            if dim % int(np.prod(sizes)) != 0:
+                axis = None
+        spec.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
 
 
 DEFAULT_RULES = {

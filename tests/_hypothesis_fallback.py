@@ -1,0 +1,66 @@
+"""Deterministic stand-in for the tiny hypothesis subset the tests use.
+
+``hypothesis`` is declared in requirements-dev.txt, but some runtimes (this
+container included) cannot install extra packages. Rather than skip the
+property tests there, this module re-implements just `given`, `settings`,
+and the three strategies the suite draws from, with a fixed per-test seed so
+every run exercises the same examples. Real hypothesis is preferred whenever
+it is importable (see the try/except at each import site); shrinkage and
+example databases are the only features lost in the fallback.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def given(**strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 10)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # NOT functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and demand fixtures for the drawn arguments.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._fallback_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

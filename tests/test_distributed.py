@@ -55,6 +55,7 @@ def test_compressed_psum_matches_mean():
     out = run_sub("""
 import numpy as np, jax, jax.numpy as jnp, functools
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.optim import compress
 
 mesh = jax.make_mesh((8,), ("dp",))
@@ -62,7 +63,7 @@ rng = np.random.default_rng(0)
 g = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
 e = jnp.zeros((8, 64), jnp.float32)
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
+@functools.partial(shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
                    out_specs=(P("dp"), P("dp")))
 def f(gl, el):
     m, ne = compress.compressed_psum({"g": gl}, {"g": el}, "dp")
@@ -101,19 +102,25 @@ data = TokenStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                               global_batch=8))
 batch = data.batch(0)
 ocfg = AdamWConfig(warmup_steps=0)
-step = steps_mod.build_train_step(model, ocfg)
 
 # single device
+step = steps_mod.build_train_step(model, ocfg)
 p1, s1, st1 = jax.jit(step)(params, opt, batch)
 
-# sharded
+# sharded. The jitted callable MUST be a fresh function object traced inside
+# the mesh-rules context (exactly how launch/train.py builds it): jax's
+# trace cache is keyed on the function object, so re-jitting the same
+# `step` would silently reuse the jaxpr traced OUTSIDE the context — no
+# sharding constraints, no ZeRO-3 use-site gather, and bf16 partial-sum
+# contractions over the FSDP-sharded dims that drift the loss by units.
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 rules = activation_rules(mesh)
 p_sh = shd.param_shardings(params, cfg, mesh, rules)
 params_s = jax.device_put(params, p_sh)
 opt_s = adamw.init(params_s)
 with use_mesh_rules(mesh, rules):
-    p2, s2, st2 = jax.jit(step)(params_s, opt_s, batch)
+    step_s = steps_mod.build_train_step(model, ocfg)
+    p2, s2, st2 = jax.jit(step_s)(params_s, opt_s, batch)
 
 l1, l2 = float(st1["loss"]), float(st2["loss"])
 assert abs(l1 - l2) < 5e-3, (l1, l2)

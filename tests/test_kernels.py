@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.transpose import transpose
@@ -117,6 +120,93 @@ def test_paper_n4096():
     xr, xi = rand(2, 4096), rand(2, 4096)
     got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
     assert_close(got, ref.fft_ref(xr, xi, axis=1), tol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-scene dispatch + mixed-radix three-factor decompositions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("n", [512, 4096, 8192])
+def test_batched_fused_pipeline_vs_ref(B, n):
+    """The batched fused dispatch (FFT * H * IFFT over (B, L, n)) matches
+    the unfused per-scene jnp.fft reference at the seed tolerance."""
+    lines = 4
+    xr, xi = rand(B, lines, n), rand(B, lines, n)
+    hr, hi = rand(n), rand(n)
+    got = ops.fused_fft_mult_ifft_rows(
+        jnp.asarray(xr), jnp.asarray(xi), jnp.asarray(hr), jnp.asarray(hi),
+        block=2)
+    assert got[0].shape == (B, lines, n)
+    want = ref.spectral_ref(xr, xi, axis=-1, fwd=True, inv=True, hr=hr, hi=hi)
+    assert_close(got, want, tol=5e-4)
+
+
+@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("n", [512, 4096, 8192])
+def test_batched_fft_rows_and_cols(B, n):
+    lines = 4
+    xr, xi = rand(B, lines, n), rand(B, lines, n)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=-1), tol=5e-4)
+    xr, xi = rand(B, n, lines), rand(B, n, lines)
+    got = ops.fft_cols(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=-2), tol=5e-4)
+
+
+@pytest.mark.parametrize("B", [1, 3])
+@pytest.mark.parametrize("n1,n2,n3", [(8, 8, 8), (16, 8, 4), (32, 16, 16)])
+def test_three_factor_explicit(B, n1, n2, n3):
+    n = n1 * n2 * n3
+    xr, xi = rand(B, 4, n), rand(B, 4, n)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), n1=n1, n2=n2, n3=n3,
+                       block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=-1), tol=5e-4)
+
+
+def test_three_factor_default_32768():
+    """Lengths past 128*128 decompose to three factors instead of erroring."""
+    from repro.kernels.fft4step import default_factorization
+    fs = default_factorization(32768)
+    assert len(fs) == 3 and all(f <= 128 for f in fs)
+    xr, xi = rand(2, 32768), rand(2, 32768)
+    got = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    assert_close(got, ref.fft_ref(xr, xi, axis=1), tol=1e-3)
+
+
+def test_batched_outer_and_full_filters():
+    B, lines, n = 2, 4, 128
+    xr, xi = rand(B, lines, n), rand(B, lines, n)
+    u, v = rand(lines, 2), rand(n, 2)
+    got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi),
+                          u=jnp.asarray(u), v=jnp.asarray(v),
+                          fwd=True, inv=True, axis=1, block=2,
+                          filter_mode="outer")
+    want = ref.spectral_ref(xr, xi, axis=-1, fwd=True, inv=True, u=u, v=v)
+    assert_close(got, want, tol=5e-4)
+    hr, hi = rand(lines, n), rand(lines, n)
+    got = ops.spectral_op(jnp.asarray(xr), jnp.asarray(xi),
+                          hr=jnp.asarray(hr), hi=jnp.asarray(hi),
+                          fwd=True, inv=True, axis=1, block=2,
+                          filter_mode="full")
+    want = ref.spectral_ref(xr, xi, axis=-1, fwd=True, inv=True, hr=hr, hi=hi)
+    assert_close(got, want, tol=5e-4)
+
+
+def test_unbatched_equals_b1():
+    """The 2-D public API is exactly the B=1 slice of the batched path."""
+    xr, xi = rand(4, 256), rand(4, 256)
+    a = ops.fft_rows(jnp.asarray(xr), jnp.asarray(xi), block=2)
+    b = ops.fft_rows(jnp.asarray(xr)[None], jnp.asarray(xi)[None], block=2)
+    assert a[0].shape == (4, 256) and b[0].shape == (1, 4, 256)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0][0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1][0]))
+
+
+def test_batched_transpose():
+    x = rand(3, 64, 64)
+    got = np.asarray(transpose(jnp.asarray(x), tile=32))
+    np.testing.assert_array_equal(got, np.swapaxes(x, -1, -2))
 
 
 # ---------------------------------------------------------------------------

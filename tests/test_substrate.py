@@ -5,7 +5,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, TokenStream
