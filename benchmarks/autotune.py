@@ -1,25 +1,39 @@
 """Per-(B, n) autotuner for the fused spectral dispatch.
 
 The throughput of the four-step kernel is dominated by the factorization
-choice (which matmul shapes hit the MXU sweet spot) and the line block
+choice (which matmul shapes hit the MXU sweet spot), the line block
 (VMEM residency vs grid overhead) — see "Beating vDSP: A 138 GFLOPS Radix-8
-Stockham FFT on Apple Silicon" for the same effect on simdgroup MMA. This
-module sweeps ``(block, n1, n2[, n3], karatsuba)`` for a given batch size
-and FFT length, times the fused forward+inverse dispatch, and caches the
-fastest config in a JSON file so benchmarks and examples reuse it without
-re-sweeping.
+Stockham FFT on Apple Silicon" for the same effect on simdgroup MMA — and
+the matmul-operand precision ("Range, Not Precision", arXiv 2605.28451:
+block-scaled FP16 doubles FFT throughput at SAR-acceptable quality). This
+module sweeps ``(block, n1, n2[, n3], karatsuba[, precision])`` for a given
+batch size and FFT length, times the fused forward+inverse dispatch, and
+caches the fastest config in a JSON file so the plan compiler
+(repro.core.plan), benchmarks and examples reuse it without re-sweeping.
+
+Non-f32 precisions are admitted only if they pass the SNR-deviation gate:
+bench_quality.precision_snr_deviation must stay <= --snr-gate-db (0.1 dB
+default) on the point-target scene, so the tuner can never trade image
+quality for speed silently.
+
+The cache lives at $REPRO_AUTOTUNE_CACHE if set, else under the user cache
+directory ($XDG_CACHE_HOME or ~/.cache)/repro/autotune_cache.json — never
+inside the repo (and *.autotune_cache.json is gitignored regardless).
 
   PYTHONPATH=src python -m benchmarks.autotune --n 512 4096 --batch 1 4
+  PYTHONPATH=src python -m benchmarks.autotune --n 4096 \
+      --precisions f32 bf16 bs16
 
 API:
   best_config(n, batch)     -> cached-or-tuned kwargs for ops.spectral_op
   autotune(n, batch, ...)   -> force a sweep, update the cache
   spectral_kwargs(cfg)      -> the subset usable as **kwargs (block/n1/n2/
-                               n3/karatsuba)
+                               n3/karatsuba/precision)
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import itertools
 import json
 import os
@@ -33,9 +47,19 @@ from benchmarks.common import emit, header, timeit
 from repro.kernels import ops
 from repro.kernels.fft4step import MAX_FACTOR, default_factorization
 
-CACHE_PATH = os.path.join(os.path.dirname(__file__), ".autotune_cache.json")
 
-_TUNE_KEYS = ("block", "n1", "n2", "n3", "karatsuba")
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return os.path.join(base, "repro", "autotune_cache.json")
+
+
+CACHE_PATH = default_cache_path()
+
+_TUNE_KEYS = ("block", "n1", "n2", "n3", "karatsuba", "precision")
 
 
 def _load_cache(path: str) -> dict:
@@ -46,6 +70,9 @@ def _load_cache(path: str) -> dict:
 
 
 def _save_cache(cache: dict, path: str) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(cache, f, indent=2, sort_keys=True)
@@ -77,12 +104,14 @@ def factorizations(n: int) -> list[tuple[int, ...]]:
     return out or [default_factorization(n)]
 
 
-def candidates(n: int, blocks=(4, 8, 16)) -> list[dict]:
+def candidates(n: int, blocks=(4, 8, 16),
+               precisions=("f32",)) -> list[dict]:
     cands = []
-    for fs, blk, kara in itertools.product(
-            factorizations(n), blocks, (False, True)):
+    for fs, blk, kara, prec in itertools.product(
+            factorizations(n), blocks, (False, True), precisions):
         c = {"block": blk, "karatsuba": kara,
-             "n1": fs[0], "n2": fs[1], "n3": fs[2] if len(fs) > 2 else None}
+             "n1": fs[0], "n2": fs[1], "n3": fs[2] if len(fs) > 2 else None,
+             "precision": prec}
         cands.append(c)
     return cands
 
@@ -92,10 +121,23 @@ def spectral_kwargs(cfg: dict) -> dict:
     return {k: cfg.get(k) for k in _TUNE_KEYS}
 
 
+@functools.lru_cache(maxsize=None)
+def _precision_snr_dev_db(precision: str) -> float:
+    """SNR-deviation of focusing the point-target scene with `precision`
+    vs f32 (the quality gate; measured once per precision per process)."""
+    if precision in (None, "f32"):
+        return 0.0
+    from benchmarks import bench_quality
+    return bench_quality.precision_snr_deviation(precision)
+
+
 def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
-             cache_path: str = CACHE_PATH, verbose: bool = False) -> dict:
+             cache_path: str = CACHE_PATH, verbose: bool = False,
+             precisions=("f32",), snr_gate_db: float = 0.1) -> dict:
     """Sweep candidates for the fused fwd+inv dispatch on (batch, lines, n)
-    scenes; persist and return the fastest config."""
+    scenes; persist and return the fastest config. Candidates with a
+    non-f32 precision must pass the SNR-deviation gate (<= snr_gate_db on
+    the point-target scene) before they may win."""
     rng = np.random.default_rng(0)
     shape = (batch, lines, n)
     xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
@@ -104,9 +146,21 @@ def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
     hi = jnp.asarray(rng.standard_normal(n), jnp.float32)
 
     best: Optional[dict] = None
-    for cand in candidates(n):
+    gated: dict[str, bool] = {}
+    for cand in candidates(n, precisions=precisions):
         if lines % cand["block"] and cand["block"] > lines:
             continue
+        prec = cand["precision"]
+        if prec not in (None, "f32"):
+            if prec not in gated:
+                dev = _precision_snr_dev_db(prec)
+                gated[prec] = dev <= snr_gate_db
+                if verbose or not gated[prec]:
+                    emit(f"autotune_gate_{prec}", 0.0,
+                         f"snr_dev_db={dev:.4f};gate={snr_gate_db};"
+                         f"admitted={gated[prec]}")
+            if not gated[prec]:
+                continue
         kw = spectral_kwargs(cand)
         try:
             t = timeit(lambda: ops.fused_fft_mult_ifft_rows(
@@ -117,7 +171,8 @@ def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
             emit(f"autotune_B{batch}_n{n}_"
                  f"{cand['n1']}x{cand['n2']}"
                  f"{'x%d' % cand['n3'] if cand['n3'] else ''}"
-                 f"_blk{cand['block']}{'_kara' if cand['karatsuba'] else ''}",
+                 f"_blk{cand['block']}{'_kara' if cand['karatsuba'] else ''}"
+                 f"_{prec}",
                  t)
         if best is None or t < best["seconds"]:
             best = dict(cand, seconds=t)
@@ -140,7 +195,8 @@ def best_config(n: int, batch: int = 1, cache_path: str = CACHE_PATH,
         return autotune(n, batch, cache_path=cache_path)
     fs = default_factorization(n)
     return {"block": 8, "n1": fs[0], "n2": fs[1],
-            "n3": fs[2] if len(fs) > 2 else None, "karatsuba": False}
+            "n3": fs[2] if len(fs) > 2 else None, "karatsuba": False,
+            "precision": None}
 
 
 def main() -> None:
@@ -148,6 +204,11 @@ def main() -> None:
     ap.add_argument("--n", type=int, nargs="+", default=[512, 4096])
     ap.add_argument("--batch", type=int, nargs="+", default=[1, 4])
     ap.add_argument("--lines", type=int, default=16)
+    ap.add_argument("--precisions", nargs="+", default=["f32"],
+                    choices=["f32", "bf16", "f16", "bs16"],
+                    help="matmul-operand precisions to sweep (non-f32 must "
+                         "pass the SNR-deviation gate)")
+    ap.add_argument("--snr-gate-db", type=float, default=0.1)
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
@@ -155,10 +216,13 @@ def main() -> None:
     for n in args.n:
         for b in args.batch:
             header(f"autotune n={n} B={b}")
-            best = autotune(n, b, lines=args.lines, verbose=args.verbose)
+            best = autotune(n, b, lines=args.lines, verbose=args.verbose,
+                            precisions=tuple(args.precisions),
+                            snr_gate_db=args.snr_gate_db)
             emit(f"autotune_best_B{b}_n{n}", best["seconds"],
                  f"n1={best['n1']};n2={best['n2']};n3={best['n3']};"
-                 f"block={best['block']};karatsuba={best['karatsuba']}")
+                 f"block={best['block']};karatsuba={best['karatsuba']};"
+                 f"precision={best['precision']}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,10 @@ from benchmarks.common import emit, header, timeit
 from repro.kernels import ops
 
 
-def run(n: int = 4096, batch: int = 32, full: bool = False):
+def run(n: int = 4096, batch: int = 32, full: bool = False,
+        smoke: bool = False):
+    if smoke:
+        n, batch = 1024, 8
     header(f"table_1: FFT kernels N={n} batch={batch} "
            "(CPU interpret-mode; TPU numbers in EXPERIMENTS.md #Roofline)")
     if full:
@@ -29,7 +32,8 @@ def run(n: int = 4096, batch: int = 32, full: bool = False):
         "fft_matmul_mxu": dict(fft_impl="matmul"),
         "fft_matmul_mxu_karatsuba": dict(fft_impl="matmul", karatsuba=True),
         "fft_stockham_vpu": dict(fft_impl="stockham"),
-        "fft_matmul_bf16": dict(fft_impl="matmul", compute_dtype="bf16"),
+        "fft_matmul_bf16": dict(fft_impl="matmul", precision="bf16"),
+        "fft_matmul_bs16": dict(fft_impl="matmul", precision="bs16"),
     }
     for name, kw in variants.items():
         t = timeit(lambda: ops.fft_rows(xr, xi, block=8, **kw))
@@ -62,6 +66,8 @@ def run(n: int = 4096, batch: int = 32, full: bool = False):
              f"{t1 / (t / b):.2f}x")
 
     # mixed-radix: a three-factor length past the 128*128 two-factor limit
+    if smoke:
+        return
     n3 = 32768
     x3 = jnp.asarray(rng.standard_normal((4, n3)), jnp.float32)
     y3 = jnp.asarray(rng.standard_normal((4, n3)), jnp.float32)

@@ -17,7 +17,8 @@ from repro.core.sar.csa import build_csa, build_csa_fused
 from repro.core.sar.geometry import paper_scene, test_scene
 
 
-def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4)):
+def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4),
+                smoke: bool = False):
     """table_2b: per-scene latency of the batched pipeline vs B=1.
 
     The kernel-level autotuner (benchmarks/autotune.py) picks the
@@ -30,11 +31,13 @@ def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4)):
     bmax = max(batches)
     rb_max = jnp.broadcast_to(raw[None], (bmax, *raw.shape)).copy()
     # rows factorization from the kernel autotuner; scene-level blocks swept
-    # on the real pipeline below
-    tuned = autotune.best_config(cfg.nr, bmax)
+    # on the real pipeline below (smoke mode never triggers a sweep)
+    tuned = autotune.best_config(cfg.nr, bmax, tune_missing=not smoke)
     row_kw = {k: tuned.get(k) for k in ("n1", "n2", "n3", "karatsuba")}
     best = None
-    for blk, cb in ((8, 128), (16, 256), (16, cfg.na), (32, cfg.na)):
+    configs = ((8, 128),) if smoke else \
+        ((8, 128), (16, 256), (16, cfg.na), (32, cfg.na))
+    for blk, cb in configs:
         f = build_pipeline(cfg, variant, block=blk, col_block=cb,
                            fft_kw=row_kw).jitted()
         t = timeit(f, rb_max, warmup=1, iters=3)
@@ -59,7 +62,9 @@ def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4)):
     return t1
 
 
-def run(n: int = 512, full: bool = False):
+def run(n: int = 512, full: bool = False, smoke: bool = False):
+    if smoke:
+        n = 128
     cfg = paper_scene() if full else test_scene(n)
     targets = paper_targets(cfg)
     raw = jnp.asarray(simulate_cached(cfg, targets))
@@ -67,7 +72,7 @@ def run(n: int = 512, full: bool = False):
     header(f"table_2: end-to-end RDA {cfg.na}x{cfg.nr} "
            "(CPU wall; dispatch/HBM counts are the architecture story)")
     times = {}
-    variants = ["unfused", "fused", "fused_tfree", "fused3"]
+    variants = ["unfused", "fused", "fused_tfree", "fused3", "omegak"]
     for v in variants:
         p = build_pipeline(cfg, v)
         f = p.jitted()
@@ -82,10 +87,12 @@ def run(n: int = 512, full: bool = False):
              f"dispatches={p.dispatches};"
              f"speedup_vs_unfused={times['unfused'] / t:.2f}x")
 
-    run_batched(cfg, raw)
+    run_batched(cfg, raw, smoke=smoke)
+    if smoke:
+        return
 
     header(f"table_3: per-step breakdown {cfg.na}x{cfg.nr}")
-    for v in ["fused", "fused_tfree", "fused3"]:
+    for v in ["fused", "fused_tfree", "fused3", "omegak"]:
         p = build_pipeline(cfg, v)
         x = raw
         for s in p.steps:

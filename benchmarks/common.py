@@ -1,13 +1,18 @@
-"""Benchmark utilities: timing, CSV emission, CPU-vs-TPU framing.
+"""Benchmark utilities: timing, CSV emission, JSON recording.
 
 This container is CPU-only, so wall-clock numbers are CPU-XLA illustrative
 (Pallas kernels run in interpret mode); the TPU performance story is the
 roofline table derived from the compiled dry-run artifacts
 (EXPERIMENTS.md §Roofline). Every bench prints `name,us_per_call,derived`
-rows so results are machine-readable.
+rows AND records them in-process so benchmarks/run.py can write
+machine-readable BENCH_*.json artifacts (wall-ms + git SHA + backend) —
+the cross-PR perf trajectory.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -29,9 +34,61 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+# ---------------------------------------------------------------------------
+# CSV emission + in-process recording
+# ---------------------------------------------------------------------------
+
+_RECORDS: list[dict] = []
+_RECORDS_MAX = 10_000   # library callers never drain; don't grow forever
+_SECTION = [""]
+
+
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if len(_RECORDS) >= _RECORDS_MAX:
+        del _RECORDS[: _RECORDS_MAX // 2]
+    _RECORDS.append({
+        "section": _SECTION[0],
+        "name": name,
+        "wall_ms": seconds * 1e3,
+        "derived": derived,
+    })
 
 
 def header(title: str):
     print(f"# {title}", flush=True)
+    _SECTION[0] = title
+
+
+def take_records() -> list[dict]:
+    """Drain and return everything emit()ed since the last call."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(path: str, records: list[dict], **meta) -> None:
+    """One BENCH_*.json artifact: rows + provenance (SHA, backend, host)."""
+    doc = {
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "python": sys.version.split()[0],
+        "generated_unix": time.time(),
+        **meta,
+        "rows": records,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path} ({len(records)} rows)", flush=True)

@@ -3,33 +3,54 @@
   PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
   PYTHONPATH=src python -m benchmarks.run --full     # the paper's 4096^2
   PYTHONPATH=src python -m benchmarks.run --only table_2
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI smoke + artifacts
+
+Every run also writes machine-readable BENCH_fft.json / BENCH_rda.json
+(wall-ms per variant/size/batch + git SHA + backend) so the perf
+trajectory is tracked across PRs; CI uploads them as workflow artifacts.
 """
 from __future__ import annotations
 
 import argparse
-import sys
 
 from benchmarks import bench_compare, bench_fft, bench_quality, bench_rda
+from benchmarks.common import take_records, write_bench_json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-size scenes (4096^2; slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized quick pass (small scenes, no tuning "
+                         "sweeps) that still writes the BENCH_*.json "
+                         "artifacts")
     ap.add_argument("--only", default=None,
                     help="table_1|table_2|table_3|table_4|table_5")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
+    meta = dict(full=args.full, smoke=args.smoke)
 
     print("name,us_per_call,derived")
     want = lambda t: args.only is None or args.only == t
+    take_records()   # discard anything a previous in-process caller left
     if want("table_1"):
-        bench_fft.run(full=args.full)
+        bench_fft.run(full=args.full, smoke=args.smoke)
+        write_bench_json("BENCH_fft.json", take_records(), **meta)
     if want("table_2") or want("table_3"):
-        bench_rda.run(full=args.full)
+        bench_rda.run(full=args.full, smoke=args.smoke)
+        write_bench_json("BENCH_rda.json", take_records(), **meta)
     if want("table_4"):
-        bench_quality.run(full=args.full)
+        if args.smoke:
+            print("# table_4 skipped in --smoke mode", flush=True)
+        else:
+            bench_quality.run(full=args.full)
     if want("table_5"):
-        bench_compare.run(full=args.full)
+        if args.smoke:
+            print("# table_5 skipped in --smoke mode", flush=True)
+        else:
+            bench_compare.run(full=args.full)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,8 @@ def main():
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--variant", default="fused3",
-                    choices=["unfused", "fused", "fused_tfree", "fused3"])
+                    choices=["unfused", "fused", "fused_tfree", "fused3",
+                             "omegak", "csa_fused"])
     args = ap.parse_args()
 
     cfg = test_scene(args.n)

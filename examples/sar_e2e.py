@@ -38,7 +38,7 @@ def main():
         raws.append(simulate(c, targets))
     print(f"simulated {args.scenes} scene(s)")
 
-    variants = ["unfused", "fused", "fused_tfree", "fused3"]
+    variants = ["unfused", "fused", "fused_tfree", "fused3", "omegak"]
     pipes = {v: build_pipeline(cfg, v) for v in variants}
     fns = {v: p.jitted() for v, p in pipes.items()}
     images, times = {}, {}

@@ -47,7 +47,8 @@ class SpectralPipeline:
     backend: str = BACKEND_PALLAS
     block: int = 8
     fft_impl: str = "matmul"
-    compute_dtype: str = "f32"
+    precision: Optional[str] = None   # fft4step.PRECISIONS policy name
+    compute_dtype: Optional[str] = None  # deprecated alias for `precision`
     karatsuba: bool = False
     interpret: Optional[bool] = None
 
@@ -65,7 +66,8 @@ class SpectralPipeline:
             xr, xi, hr=hr, hi=hi, u=u, v=v, axis=self.axis, fwd=self.fwd,
             inv=self.inv, filter_mode=self.filter_mode, block=self.block,
             fft_impl=self.fft_impl, karatsuba=self.karatsuba,
-            compute_dtype=self.compute_dtype, interpret=self.interpret)
+            precision=self.precision or self.compute_dtype,
+            interpret=self.interpret)
 
 
 def fft_conv(x: jnp.ndarray, k_fft_r: jnp.ndarray, k_fft_i: jnp.ndarray,

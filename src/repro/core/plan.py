@@ -1,0 +1,772 @@
+"""SpectralPlan IR — the SAR focusing chain lifted into data.
+
+The paper's observation is that a whole imaging pipeline is a sequence of
+fused ``[FFT] · H · [IFFT]`` stages. This module makes that sequence a
+first-class value: a :class:`SpectralPlan` is a tuple of declarative
+:class:`Stage` records (axis, fwd/inv, named filter refs, precision), and a
+small compiler turns it into executable single-dispatch Pallas calls. RDA,
+CSA and ω-K (core/sar/{rda,csa,omegak}.py) are *only* plans — no algorithm
+owns an executor loop — so a new algorithm, precision policy, or schedule
+is a data change, not a code change (cf. Bergach et al., arXiv 1505.08067,
+on modeling the radar stage graph explicitly).
+
+Compiler/executor responsibilities:
+
+* **Fusion** — adjacent compatible stages collapse into one
+  ``ops.spectral_op`` dispatch. Stages are flattened to atoms
+  (``fft`` / ``mul`` / ``ifft`` / ``transpose`` / custom) and greedily
+  regrouped under the kernel grammar ``fft? mul* ifft?`` (same transform
+  axis; transposes and custom atoms are barriers). Multiple fused ``mul``
+  atoms compose into one kernel filter: shared×shared → shared,
+  shared×full → full, outer×outer → rank-(K₁+K₂) outer,
+  shared×outer → shared_outer, full×outer → full.
+* **Tuning** — per-dispatch ``(block, n1, n2, n3, karatsuba, precision)``
+  configs are pulled from benchmarks/autotune.py's cache at compile time
+  (never re-swept here; ``tune="off"`` skips the lookup entirely).
+* **Filter caching** — materialized+composed filter tensors are cached per
+  ``(SceneConfig, plan, fuse, backend)``, and the underlying host-side
+  float64 filter math per ``(SceneConfig, params, filter_name)``, so
+  repeated ``focus()`` calls on new scenes skip all host filter work.
+* **Streaming** — :meth:`Pipeline.run_streamed` executes the compiled plan
+  over strips of a host-resident scene too large for one device buffer:
+  each dispatch is re-issued per strip along its free (line) axis with the
+  line-indexed filter payloads sliced to match, keeping ≤2 strips in
+  flight so strip transfer overlaps compute (jax async dispatch). Because
+  the kernel processes line blocks independently, the streamed image is
+  bit-identical to the in-memory path.
+
+Filter tensors are *named and lazy*: plans reference filters by string,
+the registry maps names to host-side builders, and nothing is materialized
+until a plan that uses the name is compiled against a concrete scene.
+
+Plans serialize to/from JSON (``plan_to_json`` / ``plan_from_json``) so a
+pipeline definition can be shipped, diffed, and round-tripped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.fft4step import (
+    FILTER_FULL,
+    FILTER_NONE,
+    FILTER_OUTER,
+    FILTER_SHARED,
+    FILTER_SHARED_OUTER,
+    resolve_precision,
+)
+from repro.kernels.transpose import transpose as tiled_transpose
+
+BACKEND_PALLAS = "pallas"   # fused single-dispatch Pallas kernels
+BACKEND_XLA = "xla"         # one jnp op per atom (the unfused oracle)
+
+
+def split(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
+
+
+def unsplit(xr: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
+    return xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64)
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One declarative pipeline stage.
+
+    kind "spectral": ``[FFT if fwd] · filters · [IFFT if inv]`` along
+    ``axis`` in scene coordinates (1 = range/rows, 0 = azimuth/columns).
+    ``filters`` are registry names (see :func:`register_filter`);
+    ``precision`` overrides the matmul-operand policy for this stage
+    (None defers to the compile override, then the autotuned config).
+
+    kind "transpose": a global corner turn (fusion barrier).
+
+    Other kinds dispatch to :func:`register_stage_impl` implementations
+    (e.g. the sinc-interpolation RCMC), with ``opts`` passed through.
+    """
+
+    name: str
+    kind: str = "spectral"
+    axis: int = 1
+    fwd: bool = False
+    inv: bool = False
+    filters: tuple[str, ...] = ()
+    precision: Optional[str] = None
+    opts: tuple[tuple[str, Any], ...] = ()
+
+    def opt_dict(self) -> dict:
+        return dict(self.opts)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralPlan:
+    """A named, hashable sequence of stages plus static plan parameters
+    (e.g. CSA's reference range) that filter builders may consume."""
+
+    name: str
+    stages: tuple[Stage, ...]
+    params: tuple[tuple[str, Any], ...] = ()
+
+    def param_dict(self) -> dict:
+        return dict(self.params)
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def plan_to_dict(plan: SpectralPlan) -> dict:
+    return {
+        "name": plan.name,
+        "params": [list(p) for p in plan.params],
+        "stages": [
+            {
+                "name": s.name, "kind": s.kind, "axis": s.axis,
+                "fwd": s.fwd, "inv": s.inv, "filters": list(s.filters),
+                "precision": s.precision, "opts": [list(o) for o in s.opts],
+            }
+            for s in plan.stages
+        ],
+    }
+
+
+def plan_from_dict(d: dict) -> SpectralPlan:
+    stages = tuple(
+        Stage(
+            name=s["name"], kind=s.get("kind", "spectral"),
+            axis=s.get("axis", 1), fwd=s.get("fwd", False),
+            inv=s.get("inv", False), filters=tuple(s.get("filters", ())),
+            precision=s.get("precision"),
+            opts=tuple((k, v) for k, v in s.get("opts", ())),
+        )
+        for s in d["stages"]
+    )
+    params = tuple((k, v) for k, v in d.get("params", ()))
+    return SpectralPlan(name=d["name"], stages=stages, params=params)
+
+
+def plan_to_json(plan: SpectralPlan, **kw) -> str:
+    return json.dumps(plan_to_dict(plan), **kw)
+
+
+def plan_from_json(s: str) -> SpectralPlan:
+    return plan_from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Filter registry — named, lazily-materialized filter tensors
+# ---------------------------------------------------------------------------
+#
+# Builders run host-side (numpy, float64 where it matters) and return, per
+# mode and in scene coordinates (n = transformed-axis length, lines = the
+# other axis):
+#   shared: complex vector (n,)
+#   full:   complex matrix (na, nr)
+#   outer:  (u (lines, K) float32, v (n, K) float32) — phase exp(i Σ u v)
+
+@dataclasses.dataclass(frozen=True)
+class FilterDef:
+    name: str
+    mode: str                      # FILTER_SHARED | FILTER_FULL | FILTER_OUTER
+    build: Callable                # (cfg, params: dict) -> arrays
+
+
+_FILTERS: dict[str, FilterDef] = {}
+
+
+def register_filter(name: str, mode: str, build: Callable) -> None:
+    if mode not in (FILTER_SHARED, FILTER_FULL, FILTER_OUTER):
+        raise ValueError(f"unsupported filter mode {mode!r}")
+    _FILTERS[name] = FilterDef(name, mode, build)
+
+
+def filter_names() -> tuple[str, ...]:
+    return tuple(sorted(_FILTERS))
+
+
+# host-side filter-math cache: (cfg, params, name) -> built arrays.
+# Bounded FIFO: full 2-D filters are O(scene) host bytes, so a server
+# focusing many distinct geometries must not accumulate them forever.
+_BUILD_CACHE: dict = {}
+_BUILD_CACHE_MAX = 64
+_BUILD_STATS = {"hits": 0, "misses": 0}
+
+
+def _fifo_put(cache: dict, key, value, limit: int) -> None:
+    while len(cache) >= limit:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
+def _built(name: str, cfg, params: tuple) -> tuple[str, Any]:
+    fd = _FILTERS.get(name)
+    if fd is None:
+        raise KeyError(f"unknown filter {name!r}; registered: {filter_names()}")
+    key = (cfg, params, name)
+    if key in _BUILD_CACHE:
+        _BUILD_STATS["hits"] += 1
+    else:
+        _BUILD_STATS["misses"] += 1
+        _fifo_put(_BUILD_CACHE, key, fd.build(cfg, dict(params)),
+                  _BUILD_CACHE_MAX)
+    return fd.mode, _BUILD_CACHE[key]
+
+
+def filter_cache_stats() -> dict:
+    return dict(_BUILD_STATS)
+
+
+def clear_filter_caches() -> None:
+    _BUILD_CACHE.clear()
+    _PAYLOAD_CACHE.clear()
+    _BUILD_STATS.update(hits=0, misses=0)
+
+
+# ---------------------------------------------------------------------------
+# Custom stage implementations (non-spectral kinds)
+# ---------------------------------------------------------------------------
+#
+# impl(x, cfg, opts, lo, hi) -> x: complex in/out, batch-polymorphic.
+# lo/hi select a row range for the streaming executor (None = whole scene);
+# stream_axis names the scene axis the stage can be stripped along.
+
+_STAGE_IMPLS: dict[str, tuple[Callable, Optional[int]]] = {}
+
+
+def register_stage_impl(kind: str, impl: Callable,
+                        stream_axis: Optional[int] = 0) -> None:
+    _STAGE_IMPLS[kind] = (impl, stream_axis)
+
+
+# ---------------------------------------------------------------------------
+# Stage flattening + fusion grouping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Atom:
+    kind: str                 # "fft" | "ifft" | "mul" | "transpose" | custom
+    axis: int                 # scene-coordinate transform/orientation axis
+    filter: Optional[str]     # for "mul"
+    stage: Stage
+
+
+def _flatten(plan: SpectralPlan) -> list[_Atom]:
+    atoms: list[_Atom] = []
+    for s in plan.stages:
+        if s.kind == "spectral":
+            if s.fwd:
+                atoms.append(_Atom("fft", s.axis, None, s))
+            for f in s.filters:
+                atoms.append(_Atom("mul", s.axis, f, s))
+            if s.inv:
+                atoms.append(_Atom("ifft", s.axis, None, s))
+            if not (s.fwd or s.inv or s.filters):
+                raise ValueError(f"empty spectral stage {s.name!r}")
+        else:
+            atoms.append(_Atom(s.kind, s.axis, None, s))
+    return atoms
+
+
+def _fusable(group: list[_Atom], atom: _Atom) -> bool:
+    """May `atom` join `group` under the kernel grammar fft? mul* ifft? on
+    one axis?  (Transposes and custom kinds never fuse.)"""
+    if atom.kind not in ("fft", "ifft", "mul"):
+        return False
+    if not group:
+        return True
+    if group[0].kind not in ("fft", "ifft", "mul"):
+        return False
+    if any(a.kind == "ifft" for a in group):
+        return False                       # the inverse transform closes a group
+    if atom.axis != group[0].axis:
+        return False
+    if atom.kind == "fft":
+        return False                       # a forward FFT only opens a group
+    return True
+
+
+def _group_atoms(atoms: list[_Atom], fuse: bool) -> list[list[_Atom]]:
+    if not fuse:
+        return [[a] for a in atoms]
+    groups: list[list[_Atom]] = []
+    cur: list[_Atom] = []
+    for a in atoms:
+        if cur and _fusable(cur, a):
+            cur.append(a)
+        else:
+            if cur:
+                groups.append(cur)
+            cur = [a]
+    if cur:
+        groups.append(cur)
+    return groups
+
+
+def plan_dispatch_count(plan: SpectralPlan, fuse: bool = True) -> int:
+    """Dispatches the compiler will emit — the fusion-legality invariant
+    tests assert this equals each variant's documented count."""
+    return len(_group_atoms(_flatten(plan), fuse))
+
+
+# ---------------------------------------------------------------------------
+# Filter composition (host side, scene coordinates)
+# ---------------------------------------------------------------------------
+
+def _compose_group_filters(group: list[_Atom], cfg, params: tuple,
+                           axis: int) -> tuple[str, tuple]:
+    """Compose the group's mul atoms into ONE kernel filter payload.
+
+    Returns (filter_mode, arrays) in scene coordinates:
+      shared       -> (h complex (n,),)
+      full         -> (h complex (na, nr),)
+      outer        -> (u (lines, K) f32, v (n, K) f32)
+      shared_outer -> (h (n,), u, v)
+    """
+    muls = [a for a in group if a.kind == "mul"]
+    if not muls:
+        return FILTER_NONE, ()
+    shared = None
+    full = None
+    us, vs = [], []
+    for a in muls:
+        mode, arrs = _built(a.filter, cfg, params)
+        if mode == FILTER_SHARED:
+            h = np.asarray(arrs)
+            shared = h if shared is None else shared * h
+        elif mode == FILTER_FULL:
+            h = np.asarray(arrs)
+            full = h if full is None else full * h
+        else:  # outer
+            u, v = arrs
+            us.append(np.asarray(u, np.float32).reshape(u.shape[0], -1))
+            vs.append(np.asarray(v, np.float32).reshape(v.shape[0], -1))
+    if full is not None:
+        if shared is not None:
+            full = full * (shared[None, :] if axis == 1 else shared[:, None])
+        if us:
+            u = np.concatenate(us, axis=1)
+            v = np.concatenate(vs, axis=1)
+            # fold the rank-K phase into the explicit filter (float32 phase,
+            # matching the kernel's in-VMEM synthesis)
+            phase = (u @ v.T).astype(np.float32) if axis == 1 \
+                else (v @ u.T).astype(np.float32)
+            full = full * np.exp(1j * phase.astype(np.float64)).astype(
+                full.dtype)
+        return FILTER_FULL, (full,)
+    if us:
+        u = np.concatenate(us, axis=1)
+        v = np.concatenate(vs, axis=1)
+        if shared is not None:
+            return FILTER_SHARED_OUTER, (shared, u, v)
+        return FILTER_OUTER, (u, v)
+    return FILTER_SHARED, (shared,)
+
+
+# composed per-dispatch payload cache: (cfg, plan, fuse, backend) -> payloads
+# (bounded like _BUILD_CACHE — composed full filters are scene-sized too)
+_PAYLOAD_CACHE: dict = {}
+_PAYLOAD_CACHE_MAX = 64
+
+
+def _group_payloads(plan: SpectralPlan, cfg, fuse: bool,
+                    backend: str) -> list:
+    key = (cfg, plan, fuse, backend)
+    if key not in _PAYLOAD_CACHE:
+        atoms = _flatten(plan)
+        groups = _group_atoms(atoms, fuse)
+        payloads = []
+        for g in groups:
+            if g[0].kind in ("fft", "ifft", "mul"):
+                payloads.append(
+                    _compose_group_filters(g, cfg, plan.params, g[0].axis))
+            else:
+                payloads.append((FILTER_NONE, ()))
+        _fifo_put(_PAYLOAD_CACHE, key, (groups, payloads),
+                  _PAYLOAD_CACHE_MAX)
+    return _PAYLOAD_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# Compiled pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Step:
+    """One compiled dispatch (or one oracle op in the xla backend)."""
+
+    name: str
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    dispatches: int
+    hbm_roundtrips: int
+    fused: bool
+    stream_axis: Optional[int] = None     # data axis strips run along
+    strip_fn: Optional[Callable] = None   # fn(x_strip, lo, hi)
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """A compiled plan: a named sequence of dispatch steps. `run` executes
+    in-memory; `run_streamed` executes strip-wise from host memory."""
+
+    name: str
+    cfg: Any
+    steps: list[Step]
+    plan: Optional[SpectralPlan] = None
+
+    @property
+    def dispatches(self) -> int:
+        return sum(s.dispatches for s in self.steps)
+
+    @property
+    def hbm_roundtrips(self) -> int:
+        return sum(s.hbm_roundtrips for s in self.steps)
+
+    def run(self, raw: jnp.ndarray) -> jnp.ndarray:
+        x = raw
+        for s in self.steps:
+            x = s.fn(x)
+        return x
+
+    def jitted(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        @jax.jit
+        def f(raw):
+            return self.run(raw)
+        return f
+
+    def run_streamed(self, raw, strips: int = 4,
+                     inflight: int = 2) -> np.ndarray:
+        """Execute over host memory in `strips` tiles per stage.
+
+        Each dispatch runs strip-by-strip along its free (line) axis with
+        the line-indexed filter payloads sliced to the strip, so a scene
+        that cannot fit in one device buffer still flows through the same
+        compiled stages. Up to `inflight` strips are kept un-synchronized
+        so jax's async dispatch overlaps the next strip's host->device
+        transfer with the current strip's compute. Output is bit-identical
+        to `run` (the kernel treats line blocks independently).
+        """
+        x = np.ascontiguousarray(np.asarray(raw))
+        if x.ndim != 2:
+            raise ValueError("run_streamed expects one (na, nr) scene")
+        for step in self.steps:
+            if step.stream_axis is None or step.strip_fn is None:
+                raise ValueError(
+                    f"step {step.name!r} does not support streaming "
+                    "(global transposes need the whole scene)")
+            ax = step.stream_axis
+            n = x.shape[ax]
+            sizes = [n // strips + (1 if i < n % strips else 0)
+                     for i in range(strips)]
+            out = np.empty(x.shape, x.dtype)
+            pending: deque = deque()
+            lo = 0
+            for size in sizes:
+                if size == 0:
+                    continue
+                hi = lo + size
+                sl = ((slice(lo, hi), slice(None)) if ax == 0
+                      else (slice(None), slice(lo, hi)))
+                xs = jax.device_put(x[sl])
+                pending.append((sl, step.strip_fn(xs, lo, hi)))
+                while len(pending) >= max(1, inflight):
+                    s2, y2 = pending.popleft()
+                    out[s2] = np.asarray(y2)   # blocks; later strips overlap
+                lo = hi
+            while pending:
+                s2, y2 = pending.popleft()
+                out[s2] = np.asarray(y2)
+            x = out
+        return x
+
+
+# ---------------------------------------------------------------------------
+# The compiler
+# ---------------------------------------------------------------------------
+
+def _tuned_config(n: int, batch: int) -> dict:
+    """Best-known kernel config for (n, batch) from the autotune cache.
+    Never triggers a sweep; returns {} when the cache (or the benchmarks
+    package) is unavailable."""
+    try:
+        from benchmarks import autotune
+    except Exception:
+        return {}
+    try:
+        best = autotune.best_config(n, batch, tune_missing=False)
+    except Exception:
+        return {}
+    keys = ("block", "n1", "n2", "n3", "karatsuba", "precision")
+    return {k: best.get(k) for k in keys if best.get(k) is not None}
+
+
+def _payload_to_device(mode: str, arrays: tuple, axis: int,
+                       transposed: bool) -> dict:
+    """Scene-coordinate payload -> ops.spectral_op kwargs in the physical
+    orientation (full filters transpose with the data; shared vectors and
+    outer u/v are orientation-invariant given the physical axis)."""
+    if mode == FILTER_NONE:
+        return {}
+    if mode in (FILTER_SHARED, FILTER_FULL):
+        h = arrays[0]
+        if mode == FILTER_FULL and transposed:
+            h = np.ascontiguousarray(h.T)
+        return {"hr": jnp.asarray(h.real.astype(np.float32)),
+                "hi": jnp.asarray(h.imag.astype(np.float32))}
+    if mode == FILTER_OUTER:
+        u, v = arrays
+        return {"u": jnp.asarray(u), "v": jnp.asarray(v)}
+    h, u, v = arrays
+    return {"hr": jnp.asarray(h.real.astype(np.float32)),
+            "hi": jnp.asarray(h.imag.astype(np.float32)),
+            "u": jnp.asarray(u), "v": jnp.asarray(v)}
+
+
+def _slice_filter_kwargs(kw: dict, mode: str, phys_axis: int, lo: int,
+                         hi: int) -> dict:
+    """Slice the line-indexed filter payloads to a [lo, hi) line strip."""
+    out = dict(kw)
+    if mode == FILTER_FULL:
+        out["hr"] = kw["hr"][lo:hi] if phys_axis == 1 else kw["hr"][:, lo:hi]
+        out["hi"] = kw["hi"][lo:hi] if phys_axis == 1 else kw["hi"][:, lo:hi]
+    if mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+        out["u"] = kw["u"][lo:hi]
+    return out
+
+
+def _make_spectral_step(group, mode, arrays, *, cfg, transposed, backend,
+                        opts) -> Step:
+    axis = group[0].axis                       # logical (scene) axis
+    phys_axis = (1 - axis) if transposed else axis
+    fwd = any(a.kind == "fft" for a in group)
+    inv = any(a.kind == "ifft" for a in group)
+    n = cfg.nr if axis == 1 else cfg.na
+    name = group[0].stage.name
+
+    # per-dispatch kernel config: explicit compile args > stage precision >
+    # autotuned cache entry > library defaults
+    tuned = _tuned_config(n, opts["batch"]) if (
+        backend == BACKEND_PALLAS and opts["tune"] != "off") else {}
+    fkw = opts["fft_kw"] if axis == 1 else None
+    if fkw:
+        tuned = dict(tuned)
+        # an explicit factorization replaces the cached one wholesale —
+        # mixing factors from two configs would break n = n1*n2[*n3]
+        if any(k in fkw for k in ("n1", "n2", "n3")):
+            for k in ("n1", "n2", "n3"):
+                tuned[k] = fkw.get(k)
+        for k in ("block", "karatsuba", "precision"):
+            if fkw.get(k) is not None:
+                tuned[k] = fkw[k]
+    if phys_axis == 1:
+        block = opts["block"] or tuned.get("block") or 8
+    else:
+        block = opts["col_block"] or 128
+    stage_prec = next((a.stage.precision for a in group
+                       if a.stage.precision is not None), None)
+    precision = resolve_precision(
+        opts["precision"] or stage_prec or tuned.get("precision")).name
+
+    kernel_kw = dict(
+        axis=phys_axis, fwd=fwd, inv=inv, filter_mode=mode, block=block,
+        fft_impl=opts["fft_impl"], interpret=opts["interpret"],
+        precision=precision, n1=tuned.get("n1"), n2=tuned.get("n2"),
+        n3=tuned.get("n3"), karatsuba=bool(tuned.get("karatsuba")),
+    )
+    filter_kw = _payload_to_device(mode, arrays, axis, transposed)
+
+    if backend == BACKEND_PALLAS:
+        def fn(x, _fk=filter_kw):
+            xr, xi = split(x)
+            yr, yi = ops.spectral_op(xr, xi, **_fk, **kernel_kw)
+            return unsplit(yr, yi)
+    else:
+        # the unfused oracle: same math, one jnp op per piece
+        def fn(x, _fk=filter_kw):
+            return _xla_apply(x, fwd, inv, mode, _fk, phys_axis)
+
+    # streaming: strips run along the physical line axis; the scene must be
+    # in its natural orientation for host strips to be meaningful
+    stream_axis = None
+    strip_fn = None
+    if not transposed:
+        stream_axis = 0 if phys_axis == 1 else 1
+
+        def strip_fn(xs, lo, hi, _fk=filter_kw):
+            fk = _slice_filter_kwargs(_fk, mode, phys_axis, lo, hi)
+            if backend == BACKEND_PALLAS:
+                xr, xi = split(xs)
+                yr, yi = ops.spectral_op(xr, xi, **fk, **kernel_kw)
+                return unsplit(yr, yi)
+            return _xla_apply(xs, fwd, inv, mode, fk, phys_axis)
+
+    fused = backend == BACKEND_PALLAS and len(group) > 1
+    return Step(name, fn, 1, 1, fused, stream_axis, strip_fn)
+
+
+def _xla_apply(x, fwd, inv, mode, fk, phys_axis):
+    ax = -1 if phys_axis == 1 else -2
+    if fwd:
+        x = jnp.fft.fft(x, axis=ax)
+    if mode != FILTER_NONE:
+        if mode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
+            h = unsplit(fk["hr"], fk["hi"])
+            if mode == FILTER_SHARED or (mode == FILTER_SHARED_OUTER
+                                         and h.ndim == 1):
+                h = h[None, :] if phys_axis == 1 else h[:, None]
+            x = x * h
+        if mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+            phase = jnp.einsum("lk,sk->ls", fk["u"], fk["v"])
+            if phys_axis == 0:
+                phase = phase.T
+            x = x * jnp.exp(1j * phase.astype(jnp.complex64))
+    if inv:
+        x = jnp.fft.ifft(x, axis=ax)
+    return x
+
+
+def _make_transpose_step(stage: Stage, backend: str, interpret) -> Step:
+    if backend == BACKEND_PALLAS:
+        def fn(x):
+            return unsplit(tiled_transpose(jnp.real(x).astype(jnp.float32),
+                                           interpret=interpret),
+                           tiled_transpose(jnp.imag(x).astype(jnp.float32),
+                                           interpret=interpret))
+    else:
+        def fn(x):
+            return jnp.swapaxes(x, -1, -2)
+    return Step(stage.name, fn, 1, 1, False, None, None)
+
+
+def _make_custom_step(stage: Stage, cfg) -> Step:
+    if stage.kind not in _STAGE_IMPLS:
+        raise KeyError(f"no implementation registered for stage kind "
+                       f"{stage.kind!r}")
+    impl, stream_axis = _STAGE_IMPLS[stage.kind]
+    opts = stage.opt_dict()
+
+    def fn(x):
+        return impl(x, cfg, opts, None, None)
+
+    strip_fn = None
+    if stream_axis is not None:
+        def strip_fn(xs, lo, hi):
+            return impl(xs, cfg, opts, lo, hi)
+    return Step(stage.name, fn, 1, 1, False, stream_axis, strip_fn)
+
+
+def compile_plan(
+    plan: SpectralPlan,
+    cfg,
+    *,
+    backend: str = BACKEND_PALLAS,
+    fuse: bool = True,
+    batch: int = 1,
+    interpret: Optional[bool] = None,
+    block: Optional[int] = None,
+    col_block: Optional[int] = None,
+    fft_impl: str = "matmul",
+    precision: Optional[str] = None,
+    tune: str = "cached",
+    fft_kw: Optional[dict] = None,
+) -> Pipeline:
+    """Compile a plan against a concrete scene into a :class:`Pipeline`.
+
+    backend: 'pallas' (fused dispatches) or 'xla' (jnp oracle ops).
+    fuse: merge adjacent compatible atoms into single dispatches.
+    batch: scene-batch size the autotuned configs are looked up for.
+    block/col_block: line blocks for rows/columns dispatches (None = the
+      autotuned or library default).
+    precision: global matmul-operand policy override for every spectral
+      stage (see fft4step.PRECISIONS); per-stage ``Stage.precision`` wins
+      over the autotune cache but not over this.
+    tune: 'cached' pulls per-dispatch kernel configs from the autotune
+      cache; 'off' uses library defaults.
+    fft_kw: explicit config for range-axis (axis=1) dispatches — e.g. a
+      just-measured factorization from benchmarks/autotune.py.
+    """
+    if backend not in (BACKEND_PALLAS, BACKEND_XLA):
+        raise ValueError(f"unknown backend {backend!r}")
+    groups, payloads = _group_payloads(plan, cfg, fuse, backend)
+    opts = dict(batch=batch, tune=tune, fft_kw=fft_kw or {}, block=block,
+                col_block=col_block, fft_impl=fft_impl,
+                interpret=interpret, precision=precision)
+    steps: list[Step] = []
+    transposed = False
+    for group, (mode, arrays) in zip(groups, payloads):
+        kind = group[0].kind
+        if kind in ("fft", "ifft", "mul"):
+            steps.append(_make_spectral_step(
+                group, mode, arrays, cfg=cfg, transposed=transposed,
+                backend=backend, opts=opts))
+        elif kind == "transpose":
+            steps.append(_make_transpose_step(group[0].stage, backend,
+                                              interpret))
+            transposed = not transposed
+        else:
+            if transposed:
+                raise ValueError(
+                    f"custom stage {group[0].stage.name!r} inside a "
+                    "transposed section is not supported")
+            steps.append(_make_custom_step(group[0].stage, cfg))
+    if transposed:
+        raise ValueError(f"plan {plan.name!r} ends in transposed orientation")
+    return Pipeline(plan.name, cfg, steps, plan)
+
+
+# ---------------------------------------------------------------------------
+# Variant registry — named plans + their compile defaults
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A registered pipeline variant: a plan factory, how to compile it,
+    and its documented dispatch count (the fusion-legality invariant)."""
+
+    name: str
+    plan_fn: Callable[..., SpectralPlan]
+    compile_defaults: tuple[tuple[str, Any], ...] = ()
+    plan_kw: tuple[str, ...] = ()       # build kwargs routed to plan_fn
+    dispatches: int = 0                 # documented compiled dispatch count
+
+
+_VARIANTS: dict[str, Variant] = {}
+
+
+def register_variant(name: str, plan_fn, *, compile_defaults=(),
+                     plan_kw=(), dispatches=0) -> None:
+    _VARIANTS[name] = Variant(name, plan_fn, tuple(compile_defaults),
+                              tuple(plan_kw), dispatches)
+
+
+def get_variant(name: str) -> Variant:
+    if name not in _VARIANTS:
+        raise KeyError(f"unknown pipeline variant {name!r}; "
+                       f"registered: {sorted(_VARIANTS)}")
+    return _VARIANTS[name]
+
+
+def variant_names() -> tuple[str, ...]:
+    return tuple(sorted(_VARIANTS))
+
+
+def build_variant(cfg, name: str, **kw) -> Pipeline:
+    """Build + compile a registered variant. Plan-level kwargs (declared in
+    the variant's plan_kw) route to the plan factory; the rest override the
+    variant's compile defaults and go to compile_plan."""
+    var = get_variant(name)
+    plan_args = {k: kw.pop(k) for k in list(kw) if k in var.plan_kw}
+    compile_args = dict(var.compile_defaults)
+    compile_args.update(kw)
+    return compile_plan(var.plan_fn(**plan_args), cfg, **compile_args)

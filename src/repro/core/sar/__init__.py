@@ -1,4 +1,5 @@
-"""SAR substrate: geometry, simulator, filters, RDA/CSA pipelines, metrics."""
+"""SAR substrate: geometry, simulator, filters, plan-compiled RDA / CSA /
+ω-K pipelines, metrics."""
 from repro.core.sar.geometry import (  # noqa: F401
     C,
     PointTarget,
@@ -13,6 +14,8 @@ from repro.core.sar.rda import (  # noqa: F401
     Pipeline,
     Step,
     build_pipeline,
+    documented_dispatches,
     focus,
+    variant_names,
 )
-from repro.core.sar import filters, metrics  # noqa: F401
+from repro.core.sar import csa, filters, metrics, omegak  # noqa: F401

@@ -1,31 +1,38 @@
-"""Chirp Scaling Algorithm baseline (Raney et al. 1994; Cumming & Wong ch. 7).
+"""Chirp Scaling Algorithm as a SpectralPlan (Raney et al. 1994; C&W ch. 7).
 
-The embedded-GPU systems the paper compares against in Table V run CSA, so we
-implement it as a baseline: it trades RCMC interpolation for three phase
-multiplies (chirp scaling -> bulk RCMC + range compression in the 2-D spectrum
--> azimuth compression + residual phase), i.e. it is FFT-and-multiply only.
+The embedded-GPU systems the paper compares against in Table V run CSA, so
+we implement it as a baseline: it trades RCMC interpolation for three phase
+multiplies (chirp scaling -> bulk RCMC + range compression in the 2-D
+spectrum -> azimuth compression + residual phase), i.e. it is
+FFT-and-multiply only.
 
-That structure makes CSA *entirely* expressible with the paper's fused
-spectral kernel — every step is [FFT] * phase * [IFFT]; `build_csa_fused`
-runs it in 4 fused dispatches (a beyond-paper demonstration that the fusion
-idea covers the competitor algorithm too).
+That structure makes CSA *entirely* expressible as a plan — ONE stage list
+serves both baselines: compiled with the XLA backend unfused it is the
+7-dispatch textbook CSA; compiled with the Pallas backend the fusion pass
+collapses it to 3 single-dispatch stages
 
-Like the RDA pipelines, both builders accept one scene (na, nr) or a batch
-(B, na, nr) sharing the SceneConfig; the phase screens are computed once
-and broadcast across the batch, and the fused variant runs each stage as a
-single batched Pallas dispatch.
+  1. cols: FFT_az -> * H1                      (fused, FILTER_FULL)
+  2. rows: FFT_r  -> * H2 -> IFFT_r            (the paper's kernel verbatim)
+  3. cols:        -> * H3 -> IFFT_az           (fused, FILTER_FULL)
+
+with no transposes — a beyond-paper demonstration that the fusion idea
+covers the competitor algorithm too.
+
+Like the RDA plans, the compiled pipeline accepts one scene (na, nr) or a
+batch (B, na, nr) sharing the SceneConfig; the phase screens are computed
+once (and cached per (cfg, plan)) and broadcast across the batch.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as planlib
+from repro.core.plan import Pipeline, SpectralPlan, Stage
 from repro.core.sar import filters
 from repro.core.sar.geometry import C, SceneConfig
-from repro.core.sar.rda import Pipeline, Step, split, unsplit
-from repro.kernels import ops
+from repro.kernels.fft4step import FILTER_FULL
 
 
 def _csa_terms(cfg: SceneConfig, r_ref: Optional[float] = None):
@@ -80,67 +87,45 @@ def csa_phases(cfg: SceneConfig, r_ref: Optional[float] = None):
     return h1, h2, h3
 
 
-def build_csa(cfg: SceneConfig, r_ref: Optional[float] = None) -> Pipeline:
+planlib.register_filter(
+    "csa_h1", FILTER_FULL,
+    lambda cfg, p: csa_phases(cfg, p.get("r_ref"))[0])
+planlib.register_filter(
+    "csa_h2", FILTER_FULL,
+    lambda cfg, p: csa_phases(cfg, p.get("r_ref"))[1])
+planlib.register_filter(
+    "csa_h3", FILTER_FULL,
+    lambda cfg, p: csa_phases(cfg, p.get("r_ref"))[2])
+
+
+def plan_csa(r_ref: Optional[float] = None) -> SpectralPlan:
+    """One stage list for both CSA baselines (see module docstring)."""
+    params = () if r_ref is None else (("r_ref", float(r_ref)),)
+    return SpectralPlan("csa", (
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("chirp_scaling", axis=0, filters=("csa_h1",)),
+        Stage("range_comp_rcmc", axis=1, fwd=True, inv=True,
+              filters=("csa_h2",)),
+        Stage("azimuth_compression", axis=0, inv=True, filters=("csa_h3",)),
+    ), params=params)
+
+
+planlib.register_variant(
+    "csa", plan_csa,
+    compile_defaults=(("backend", planlib.BACKEND_XLA), ("fuse", False)),
+    plan_kw=("r_ref",), dispatches=7)
+planlib.register_variant(
+    "csa_fused", plan_csa, plan_kw=("r_ref",), dispatches=3)
+
+
+def build_csa(cfg: SceneConfig, r_ref: Optional[float] = None,
+              **kw) -> Pipeline:
     """Unfused CSA: 4 FFT stages + 3 phase multiplies, one XLA op each."""
-    h1, h2, h3 = (jnp.asarray(h) for h in csa_phases(cfg, r_ref))
-
-    def az_fft(x):
-        return jnp.fft.fft(x, axis=-2)
-
-    def chirp_scale(x):
-        return x * h1
-
-    def range_fft_mult_ifft(x):
-        return jnp.fft.ifft(jnp.fft.fft(x, axis=-1) * h2, axis=-1)
-
-    def az_compress(x):
-        return jnp.fft.ifft(x * h3, axis=-2)
-
-    return Pipeline("csa", cfg, [
-        Step("azimuth_fft", az_fft, 1, 1, False),
-        Step("chirp_scaling", chirp_scale, 1, 1, False),
-        Step("range_comp_rcmc", range_fft_mult_ifft, 3, 3, False),
-        Step("azimuth_compression", az_compress, 2, 2, False),
-    ])
+    return planlib.build_variant(cfg, "csa", r_ref=r_ref, **kw)
 
 
 def build_csa_fused(cfg: SceneConfig, r_ref: Optional[float] = None,
-                    interpret: Optional[bool] = None, block: int = 8,
-                    col_block: int = 128, fft_impl: str = "matmul") -> Pipeline:
-    """Beyond-paper: the competitor algorithm run through the paper's fused
-    kernel — 3 single-dispatch stages, no transposes:
-
-      1. cols: FFT_az -> * H1                      (fused, FILTER_FULL)
-      2. rows: FFT_r  -> * H2 -> IFFT_r            (the paper's kernel verbatim)
-      3. cols:        -> * H3 -> IFFT_az           (fused, FILTER_FULL)
-    """
-    h1, h2, h3 = csa_phases(cfg, r_ref)
-    h1r, h1i = jnp.asarray(h1.real), jnp.asarray(h1.imag)
-    h2r, h2i = jnp.asarray(h2.real), jnp.asarray(h2.imag)
-    h3r, h3i = jnp.asarray(h3.real), jnp.asarray(h3.imag)
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
-    ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
-
-    def az_fft_scale(x):
-        xr, xi = split(x)
-        yr, yi = ops.spectral_op(xr, xi, hr=h1r, hi=h1i, fwd=True, inv=False,
-                                 axis=0, filter_mode="full", **ckw)
-        return unsplit(yr, yi)
-
-    def range_fused(x):
-        xr, xi = split(x)
-        yr, yi = ops.spectral_op(xr, xi, hr=h2r, hi=h2i, fwd=True, inv=True,
-                                 axis=1, filter_mode="full", **rkw)
-        return unsplit(yr, yi)
-
-    def az_compress(x):
-        xr, xi = split(x)
-        yr, yi = ops.spectral_op(xr, xi, hr=h3r, hi=h3i, fwd=False, inv=True,
-                                 axis=0, filter_mode="full", **ckw)
-        return unsplit(yr, yi)
-
-    return Pipeline("csa_fused", cfg, [
-        Step("az_fft_chirp_scale", az_fft_scale, 1, 1, True),
-        Step("range_comp_rcmc", range_fused, 1, 1, True),
-        Step("azimuth_compression", az_compress, 1, 1, True),
-    ])
+                    **kw) -> Pipeline:
+    """The competitor algorithm through the paper's fused kernel:
+    3 single-dispatch stages, no transposes."""
+    return planlib.build_variant(cfg, "csa_fused", r_ref=r_ref, **kw)

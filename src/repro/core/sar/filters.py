@@ -7,6 +7,8 @@ gate and does not affect focusing) so float32 trigonometry stays accurate.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -159,3 +161,97 @@ def azimuth_matched_filter_c(cfg: SceneConfig) -> np.ndarray:
 def azimuth_matched_filter_split(cfg: SceneConfig) -> tuple[np.ndarray, np.ndarray]:
     h = azimuth_matched_filter_c(cfg)
     return h.real.astype(np.float32), h.imag.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# ω-K (range migration) terms
+# ---------------------------------------------------------------------------
+
+def range_freqs_unwrapped(cfg: SceneConfig) -> np.ndarray:
+    """Range frequency axis unwrapped to [0, fs), (nr,) float64.
+
+    The demodulated chirp is one-sided (instantaneous frequency sweeps
+    0..B with B possibly beyond fs/2), so DFT bin b physically carries
+    frequency (b/nr)·fs — NOT the signed fftfreq value. The ω-K dispersion
+    sqrt((fc+f_r)² − …) must be evaluated on this unwrapped axis to
+    compensate the right physical frequency per bin."""
+    return np.arange(cfg.nr, dtype=np.float64) / cfg.nr * cfg.fs
+
+
+def omegak_kmap(cfg: SceneConfig) -> np.ndarray:
+    """K(f_a, f_r) = sqrt((fc+f_r)² − (c f_a / 2v)²), (na, nr) float64 —
+    the 2-D wavenumber the ω-K reference function is built from."""
+    fr = range_freqs_unwrapped(cfg)[None, :]
+    fa = azimuth_freqs(cfg)[:, None]
+    arg = (cfg.fc + fr) ** 2 - (C * fa / (2.0 * cfg.v)) ** 2
+    return np.sqrt(np.maximum(arg, 1.0))
+
+
+def omegak_stolt_phase(cfg: SceneConfig, r_ref: Optional[float] = None) -> np.ndarray:
+    """Differential ω-K reference-function phase, complex64 (na, nr):
+
+        H(f_a, f_r) = exp(+i 4π r_ref/c · (K(f_a,f_r) − fc − f_r))
+
+    K − fc − f_r vanishes identically at f_a = 0, so this filter is exactly
+    the *migration* part of the reference function: multiplied with the
+    range matched filter it compensates bulk RCM and azimuth hyperbolic
+    phase at r_ref through ALL orders of f_r (the paper-fused RDA only
+    corrects the f_r-linear shift). Its own f_r-linear content is the
+    fused Fourier-shift stage of the Stolt map — the first-order Stolt
+    interpolation exp(i 2π f_r Δt(f_a)) applied in the same dispatch as
+    the range FFT/IFFT pair, leaving only the range-variant residual
+    (r − r_ref)(1/D − 1) that the RDA narrow-swath approximation also
+    accepts. Computed float64, wrapped mod 2π, stored complex64."""
+    r_ref = cfg.r0 if r_ref is None else r_ref
+    fr = range_freqs_unwrapped(cfg)[None, :]
+    k = omegak_kmap(cfg)
+    phase = (4.0 * np.pi * r_ref / C) * (k - cfg.fc - fr)
+    return np.exp(1j * np.mod(phase, 2.0 * np.pi)).astype(np.complex64)
+
+
+def stolt_azimuth_uv(cfg: SceneConfig, r_ref: Optional[float] = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Residual ω-K azimuth compression, rank-1 phase for FILTER_OUTER:
+
+        phase(f_a, r) = 4π fc (D(f_a) − 1) (r0(r) − r_ref) / c
+
+    The bulk term at r_ref is already inside omegak_stolt_phase, so unlike
+    the RDA rank-2 filter no wrapped-bulk column is needed; the residual
+    factors are small enough for float32. u: (nr,) per range gate,
+    v: (na,) per Doppler bin."""
+    r_ref = cfg.r0 if r_ref is None else r_ref
+    u = (range_gates(cfg) - r_ref).astype(np.float32)
+    v = (4.0 * np.pi * cfg.fc * (migration_factor(cfg) - 1.0) / C
+         ).astype(np.float32)
+    return u, v
+
+
+# ---------------------------------------------------------------------------
+# SpectralPlan filter registry — the names plans reference
+# ---------------------------------------------------------------------------
+
+def _register_plan_filters() -> None:
+    from repro.core import plan
+    from repro.kernels.fft4step import FILTER_FULL, FILTER_OUTER, FILTER_SHARED
+
+    plan.register_filter(
+        "range_mf", FILTER_SHARED,
+        lambda cfg, p: range_matched_filter_c(cfg))
+    plan.register_filter(
+        "azimuth_mf", FILTER_FULL,
+        lambda cfg, p: azimuth_matched_filter_c(cfg))
+    plan.register_filter(
+        "azimuth_mf_outer", FILTER_OUTER,
+        lambda cfg, p: azimuth_phase_uv2(cfg))
+    plan.register_filter(
+        "rcmc_shift", FILTER_OUTER,
+        lambda cfg, p: rcmc_phase_uv(cfg))
+    plan.register_filter(
+        "omegak_stolt", FILTER_FULL,
+        lambda cfg, p: omegak_stolt_phase(cfg, p.get("r_ref")))
+    plan.register_filter(
+        "stolt_az", FILTER_OUTER,
+        lambda cfg, p: stolt_azimuth_uv(cfg, p.get("r_ref")))
+
+
+_register_plan_filters()

@@ -1,0 +1,62 @@
+"""ω-K / range-migration algorithm — proof the SpectralPlan IR generalizes.
+
+The third focusing algorithm in this repo, and the reason the plan IR
+exists: ω-K is *only* a plan. There is no bespoke executor code here — the
+whole algorithm is three declarative stages handed to the shared compiler
+(core/plan.py), which fuses them into 3 single-dispatch Pallas stages with
+zero transposes, exactly like the reordered RDA and the fused CSA.
+
+Algorithm (Cumming & Wong ch. 8, first-order Stolt):
+
+  1. azimuth FFT                                       (cols dispatch)
+  2. range FFT -> H_mf(f_r) * H_stolt(f_a, f_r) -> range IFFT
+                                                       (rows dispatch)
+  3. residual azimuth compression * azimuth IFFT       (cols dispatch)
+
+Stage 2 is where ω-K differs from the RDA: the 2-D spectrum of a point
+target at range r is exp(-i 4π r/c · K(f_a, f_r)) with
+K = sqrt((fc+f_r)² − (c f_a/2v)²), and the reference-function multiply
+H_stolt = exp(+i 4π r_ref/c (K − fc − f_r)) compensates range-azimuth
+coupling at r_ref through ALL orders of f_r. The exact Stolt mapping would
+then resample f_r so K becomes linear for every range; its first-order
+(shift) term exp(i 2π f_r Δt(f_a)) is already inside H_stolt and is
+applied as a fused Fourier-shift in the same dispatch as the range
+FFT/IFFT pair — the plan compiler composes the shared range matched
+filter with the full 2-D Stolt phase into ONE kernel filter. The
+neglected warp term leaves the residual RCM (r − r_ref)(1/D − 1), the
+same narrow-swath remainder the RDA's range-invariant RCMC accepts, so
+ω-K peak positions match the RDA reference to within a pixel (asserted
+in tests/test_plan.py).
+
+Because H_stolt ≡ 1 at f_a = 0, stage 2 degenerates to the paper's exact
+range compression there — peaks land on the same range columns as the RDA.
+Stage 3 removes the azimuth phase left for r ≠ r_ref,
+exp(+i 4π fc (D−1)(r − r_ref)/c), a float32-safe rank-1 FILTER_OUTER
+phase synthesized in VMEM (no 2-D filter I/O).
+
+Usage::
+
+    from repro.core.sar import focus
+    image = focus(raw, cfg, variant="omegak")            # 3 fused dispatches
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import plan as planlib
+from repro.core.plan import SpectralPlan, Stage
+
+
+def plan_omegak(r_ref: Optional[float] = None) -> SpectralPlan:
+    """The ω-K plan. r_ref: Stolt reference range (default scene center)."""
+    params = () if r_ref is None else (("r_ref", float(r_ref)),)
+    return SpectralPlan("omegak", (
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("range_rfm_stolt", axis=1, fwd=True, inv=True,
+              filters=("range_mf", "omegak_stolt")),
+        Stage("azimuth_compression", axis=0, inv=True, filters=("stolt_az",)),
+    ), params=params)
+
+
+planlib.register_variant(
+    "omegak", plan_omegak, plan_kw=("r_ref",), dispatches=3)

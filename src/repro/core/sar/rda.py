@@ -1,83 +1,89 @@
-"""Range Doppler Algorithm — three pipeline variants (paper Sec. IV).
+"""Range Doppler Algorithm — every variant is a SpectralPlan (paper Sec. IV).
+
+The pipeline variants are *data*: declarative `SpectralPlan` stage lists
+(core/plan.py) compiled by the shared plan compiler into fused
+`ops.spectral_op` dispatches. No variant owns an executor loop — adding a
+pipeline is writing a plan, not code (see core/sar/omegak.py for the
+third algorithm added exactly this way).
 
 Data layout: (na, nr) = (azimuth, range), complex64 at the public boundary,
-split re/im float32 inside the fused paths (the Pallas kernels' layout).
+split re/im float32 inside the fused dispatches. Every compiled pipeline
+accepts one scene (na, nr) or a batch (B, na, nr) sharing the SceneConfig;
+batched inputs run each stage as a SINGLE Pallas dispatch whose grid spans
+B x line-blocks. `Pipeline.run_streamed` additionally executes any
+transpose-free plan over azimuth strips of a host-resident scene,
+overlapping strip transfer with compute (bit-identical to `run`).
 
-Batched multi-scene focusing (beyond-paper): every pipeline accepts either
-one scene (na, nr) or a batch (B, na, nr) sharing the same SceneConfig.
-The fused variants process the whole batch per stage as a SINGLE Pallas
-dispatch whose grid spans B x line-blocks (kernels/ops.py), so dispatch
-overhead and the broadcast DFT-constant loads amortize across scenes —
-`focus(raw_batch, cfg)` is the one-call entry, `examples/batch_scenes.py`
-the demo, and benchmarks/bench_rda.py (table_2b) the amortization
-measurement. Filters are computed once from cfg and shared by every scene.
-
-Kernel tuning: the pipeline builders' `block`/`col_block` kwargs and the
-kernels' mixed-radix factorization (n = n1*n2[*n3], factors <= 128; see
-kernels/fft4step.py) are swept per (batch, FFT length) by
-benchmarks/autotune.py — `autotune.best_config(n, B)` returns the cached
-fastest `(block, n1, n2, n3, karatsuba)` config, and
-`autotune.spectral_kwargs(cfg)` turns it into ops.spectral_op kwargs.
+Kernel tuning: the compiler pulls per-dispatch `(block, n1, n2, n3,
+karatsuba, precision)` configs from benchmarks/autotune.py's cache at
+compile time; pass `fft_kw=...` to pin the range-axis config explicitly or
+`precision="bf16"|"bs16"` to override the matmul-operand policy globally.
 
 Variants
 --------
-``unfused``      The paper's baseline: one XLA op per stage (jnp.fft FFT,
-                 multiply, jnp.fft IFFT, ...), every stage a separate
-                 HBM round-trip. 9 logical dispatches.
+``unfused``      The paper's baseline: one XLA op per atom (jnp.fft FFT,
+                 multiply, jnp.fft IFFT, ...), every op an HBM round-trip.
+                 7 logical dispatches.
 ``fused``        Paper-faithful fusion: range compression as ONE dispatch
                  (FFT * H_r * IFFT), azimuth FFT via transpose + row FFT +
                  transpose (paper keeps it unfused), RCMC as a separate
                  sinc-interpolation dispatch, azimuth compression as
                  transpose + fused(multiply * IFFT) + transpose. 8 dispatches.
 ``fused_tfree``  Beyond-paper: column-pipeline kernels transform azimuth
-                 in place (VMEM holds a full column slab), RCMC becomes a
-                 fused Fourier-shift dispatch (exact sinc interpolation via
-                 the shift theorem), azimuth compression a fused rank-1-phase
-                 column dispatch. 4 dispatches, zero global transposes.
+                 in place, RCMC becomes a fused Fourier-shift dispatch
+                 (exact sinc interpolation via the shift theorem), azimuth
+                 compression a fused column dispatch. 4 dispatches, zero
+                 global transposes.
+``fused3``       Beyond-paper minimum: range compression commutes with the
+                 azimuth FFT, so the plan reorders to azimuth FFT ->
+                 [range FFT * H_r * RCMC-shift * IFFT] -> [H_a * azimuth
+                 IFFT]. 3 dispatches (the distributed schedule's local
+                 compute, see core/sar/distributed.py).
 
-Every variant exposes per-step callables so benchmarks can reproduce the
-paper's Table III breakdown.
+Plus, registered by their own modules: ``csa``/``csa_fused``
+(core/sar/csa.py) and ``omegak`` (core/sar/omegak.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as planlib
+from repro.core.plan import (  # noqa: F401  (re-exported legacy names)
+    Pipeline,
+    SpectralPlan,
+    Stage,
+    Step,
+    split,
+    unsplit,
+)
 from repro.core.sar import filters
 from repro.core.sar.geometry import SceneConfig
-from repro.kernels import ops
-from repro.kernels.transpose import transpose
 
 
 # ---------------------------------------------------------------------------
-# Shared helpers
+# Sinc-interpolation RCMC (the one non-spectral stage kind the RDA uses)
 # ---------------------------------------------------------------------------
-
-def split(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    return jnp.real(x).astype(jnp.float32), jnp.imag(x).astype(jnp.float32)
-
-
-def unsplit(xr: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
-    return xr.astype(jnp.complex64) + 1j * xi.astype(jnp.complex64)
-
 
 def rcmc_sinc(x: jnp.ndarray, cfg: SceneConfig, taps: int = 8,
-              range_variant: bool = False) -> jnp.ndarray:
+              range_variant: bool = False, lo: Optional[int] = None,
+              hi: Optional[int] = None) -> jnp.ndarray:
     """8-tap windowed-sinc RCMC in the range-Doppler domain (paper step 3).
 
     x: (na, nr) or (B, na, nr) complex, rows = Doppler bins. Row f_a is
     shifted by -s(f_a) samples, i.e. y[..., row, col] = x[..., row, col + s]
     interpolated (the shift table broadcasts across any batch dim).
+    lo/hi restrict the shift table to a row strip (streaming executor).
     """
     if range_variant:
         s = jnp.asarray(filters.rcmc_shift_samples_variant(cfg), jnp.float32)
     else:
         s = jnp.asarray(filters.rcmc_shift_samples(cfg), jnp.float32)[:, None]
+    if lo is not None:
+        s = s[lo:hi]
     base = jnp.floor(s)
     frac = (s - base)  # in [0, 1)
     cols = jnp.arange(cfg.nr, dtype=jnp.int32)[None, :]
@@ -97,264 +103,145 @@ def rcmc_sinc(x: jnp.ndarray, cfg: SceneConfig, taps: int = 8,
     return y
 
 
+def _sinc_rcmc_impl(x, cfg, opts, lo, hi):
+    return rcmc_sinc(x, cfg, taps=opts.get("taps", 8),
+                     range_variant=opts.get("range_variant", False),
+                     lo=lo, hi=hi)
+
+
+planlib.register_stage_impl("sinc_rcmc", _sinc_rcmc_impl, stream_axis=0)
+
+
 # ---------------------------------------------------------------------------
-# Step builders — each returns fn(state) -> state on complex64 (na, nr)
+# The RDA plans
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class Step:
-    name: str
-    fn: Callable[[jnp.ndarray], jnp.ndarray]
-    dispatches: int          # logical GPU dispatches this step models
-    hbm_roundtrips: int      # full-array device-memory round trips (R+W pairs)
-    fused: bool
+def plan_unfused(rcmc_mode: str = "sinc") -> SpectralPlan:
+    """The textbook 4-step RDA. rcmc_mode 'sinc' uses the 8-tap windowed
+    sinc interpolator; 'fourier' the exact shift-theorem correction."""
+    if rcmc_mode == "sinc":
+        rcmc = Stage("rcmc", kind="sinc_rcmc")
+    elif rcmc_mode == "fourier":
+        rcmc = Stage("rcmc", axis=1, fwd=True, inv=True,
+                     filters=("rcmc_shift",))
+    else:
+        raise ValueError(f"unknown rcmc_mode {rcmc_mode!r}")
+    return SpectralPlan("unfused", (
+        Stage("range_compression", axis=1, fwd=True, inv=True,
+              filters=("range_mf",)),
+        Stage("azimuth_fft", axis=0, fwd=True),
+        rcmc,
+        Stage("azimuth_compression", axis=0, inv=True,
+              filters=("azimuth_mf",)),
+    ))
 
 
-@dataclasses.dataclass
-class Pipeline:
-    """A named sequence of steps. `run` jits the whole chain."""
-    name: str
-    cfg: SceneConfig
-    steps: list[Step]
-
-    @property
-    def dispatches(self) -> int:
-        return sum(s.dispatches for s in self.steps)
-
-    @property
-    def hbm_roundtrips(self) -> int:
-        return sum(s.hbm_roundtrips for s in self.steps)
-
-    def run(self, raw: jnp.ndarray) -> jnp.ndarray:
-        x = raw
-        for s in self.steps:
-            x = s.fn(x)
-        return x
-
-    def jitted(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
-        @jax.jit
-        def f(raw):
-            return self.run(raw)
-        return f
+def plan_fused() -> SpectralPlan:
+    """The paper's pipeline (Sec. IV-A): steps 1 & 4 fused, the azimuth
+    transform via global transposes, RCMC a separate sinc dispatch."""
+    return SpectralPlan("fused", (
+        Stage("range_compression", axis=1, fwd=True, inv=True,
+              filters=("range_mf",)),
+        Stage("azimuth_fft_turn_in", kind="transpose"),
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("azimuth_fft_turn_out", kind="transpose"),
+        Stage("rcmc", kind="sinc_rcmc"),
+        Stage("azimuth_compression_turn_in", kind="transpose"),
+        Stage("azimuth_compression", axis=0, inv=True,
+              filters=("azimuth_mf",)),
+        Stage("azimuth_compression_turn_out", kind="transpose"),
+    ))
 
 
-# -- unfused baseline --------------------------------------------------------
-
-def build_unfused(cfg: SceneConfig, rcmc_mode: str = "sinc") -> Pipeline:
-    hr_c = jnp.asarray(filters.range_matched_filter_c(cfg))
-    ha_c = jnp.asarray(filters.azimuth_matched_filter_c(cfg))
-
-    def range_compress(x):
-        # 3 separate dispatches: FFT, multiply, IFFT (each an HBM round trip)
-        xf = jnp.fft.fft(x, axis=-1)
-        xf = xf * hr_c
-        return jnp.fft.ifft(xf, axis=-1)
-
-    def azimuth_fft(x):
-        return jnp.fft.fft(x, axis=-2)
-
-    def rcmc(x):
-        if rcmc_mode == "sinc":
-            return rcmc_sinc(x, cfg)
-        u, v = filters.rcmc_phase_uv(cfg)
-        ph = jnp.asarray(u)[:, None] * jnp.asarray(v)[None, :]
-        return jnp.fft.ifft(jnp.fft.fft(x, axis=-1) * jnp.exp(1j * ph),
-                            axis=-1)
-
-    def azimuth_compress(x):
-        return jnp.fft.ifft(x * ha_c, axis=-2)
-
-    return Pipeline("unfused", cfg, [
-        Step("range_compression", range_compress, 3, 3, False),
-        Step("azimuth_fft", azimuth_fft, 1, 1, False),
-        Step("rcmc", rcmc, 1, 1, False),
-        Step("azimuth_compression", azimuth_compress, 2, 2, False),
-    ])
-
-
-# -- paper-faithful fused -----------------------------------------------------
-
-def build_fused(cfg: SceneConfig, interpret: Optional[bool] = None,
-                block: int = 8, fft_impl: str = "matmul",
-                fft_kw: Optional[dict] = None) -> Pipeline:
-    """The paper's pipeline: steps 1 & 4 fused, steps 2-3 unfused (Sec. IV-A).
-
-    fft_kw: extra ops.spectral_op kwargs applied to the row-pipeline
-    dispatches — typically the autotuned (n1, n2, n3, karatsuba) from
-    benchmarks/autotune.py (factorizations are per FFT length, so they
-    apply to the range axis; column dispatches keep the default split).
-    """
-    hr_r, hr_i = filters.range_matched_filter(cfg)
-    hr_r, hr_i = jnp.asarray(hr_r), jnp.asarray(hr_i)
-    ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
-    # azimuth compression operates on the TRANSPOSED matrix (nr, na): filter^T
-    ha_rT, ha_iT = jnp.asarray(ha_r.T).copy(), jnp.asarray(ha_i.T).copy()
-    # fft_kw carries the length-nr factorization: range dispatches only.
-    # The azimuth steps row-FFT the TRANSPOSED matrix (length na), so they
-    # keep the default factorization for their own length.
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
-               **(fft_kw or {}))
-    akw = dict(interpret=interpret, block=block, fft_impl=fft_impl)
-
-    def range_compress(x):
-        xr, xi = split(x)
-        yr, yi = ops.fused_fft_mult_ifft_rows(xr, xi, hr_r, hr_i, **rkw)
-        return unsplit(yr, yi)
-
-    def azimuth_fft(x):
-        # transpose -> row FFT -> transpose (paper keeps this unfused)
-        xr, xi = split(x)
-        xr, xi = transpose(xr, interpret=interpret), transpose(xi, interpret=interpret)
-        yr, yi = ops.fft_rows(xr, xi, **akw)
-        yr, yi = transpose(yr, interpret=interpret), transpose(yi, interpret=interpret)
-        return unsplit(yr, yi)
-
-    def rcmc(x):
-        return rcmc_sinc(x, cfg)
-
-    def azimuth_compress(x):
-        xr, xi = split(x)
-        xr, xi = transpose(xr, interpret=interpret), transpose(xi, interpret=interpret)
-        yr, yi = ops.spectral_op(xr, xi, hr=ha_rT, hi=ha_iT, fwd=False, inv=True,
-                                 axis=1, filter_mode="full", **akw)
-        yr, yi = transpose(yr, interpret=interpret), transpose(yi, interpret=interpret)
-        return unsplit(yr, yi)
-
-    return Pipeline("fused", cfg, [
-        Step("range_compression", range_compress, 1, 1, True),
-        Step("azimuth_fft", azimuth_fft, 3, 3, False),
-        Step("rcmc", rcmc, 1, 1, False),
-        Step("azimuth_compression", azimuth_compress, 3, 3, True),
-    ])
-
-
-# -- beyond-paper: fused + transpose-free ------------------------------------
-
-def build_fused_tfree(cfg: SceneConfig, interpret: Optional[bool] = None,
-                      block: int = 8, col_block: int = 128,
-                      fft_impl: str = "matmul",
-                      synth_phase: bool = False,
-                      fft_kw: Optional[dict] = None) -> Pipeline:
+def plan_fused_tfree(synth_phase: bool = False) -> SpectralPlan:
     """4 dispatches, no global transposes, RCMC fused via the shift theorem.
 
     synth_phase=False reads the exact precomputed 2-D azimuth filter
-    (FILTER_FULL; bit-compatible with the unfused baseline); synth_phase=True
+    (FILTER_FULL; bit-compatible with the unfused baseline); True
     synthesizes it in VMEM as a float32-safe rank-2 phase (FILTER_OUTER),
-    removing the filter's HBM read entirely (the §Perf bandwidth hillclimb).
-    """
-    hr_r, hr_i = filters.range_matched_filter(cfg)
-    hr_r, hr_i = jnp.asarray(hr_r), jnp.asarray(hr_i)
-    rc_u, rc_v = filters.rcmc_phase_uv(cfg)
-    rc_u, rc_v = jnp.asarray(rc_u), jnp.asarray(rc_v)
-    az_u2, az_v2 = filters.azimuth_phase_uv2(cfg)
-    az_u2, az_v2 = jnp.asarray(az_u2), jnp.asarray(az_v2)
-    ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
-    ha_r, ha_i = jnp.asarray(ha_r), jnp.asarray(ha_i)
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
-               **(fft_kw or {}))
-    ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
-
-    def range_compress(x):
-        xr, xi = split(x)
-        yr, yi = ops.fused_fft_mult_ifft_rows(xr, xi, hr_r, hr_i, **rkw)
-        return unsplit(yr, yi)
-
-    def azimuth_fft(x):
-        xr, xi = split(x)
-        yr, yi = ops.fft_cols(xr, xi, **ckw)
-        return unsplit(yr, yi)
-
-    def rcmc(x):
-        # ONE dispatch: range FFT -> rank-1 shift phase -> range IFFT
-        xr, xi = split(x)
-        yr, yi = ops.fused_rcmc_rows(xr, xi, rc_u, rc_v, **rkw)
-        return unsplit(yr, yi)
-
-    def azimuth_compress(x):
-        # ONE dispatch: phase multiply -> column IFFT
-        xr, xi = split(x)
-        if synth_phase:
-            yr, yi = ops.fused_mult_ifft_cols_outer(xr, xi, az_u2, az_v2, **ckw)
-        else:
-            yr, yi = ops.fused_mult_ifft_cols(xr, xi, ha_r, ha_i, **ckw)
-        return unsplit(yr, yi)
-
-    return Pipeline("fused_tfree", cfg, [
-        Step("range_compression", range_compress, 1, 1, True),
-        Step("azimuth_fft", azimuth_fft, 1, 1, True),
-        Step("rcmc", rcmc, 1, 1, True),
-        Step("azimuth_compression", azimuth_compress, 1, 1, True),
-    ])
+    removing the filter's HBM read entirely."""
+    az = "azimuth_mf_outer" if synth_phase else "azimuth_mf"
+    return SpectralPlan("fused_tfree", (
+        Stage("range_compression", axis=1, fwd=True, inv=True,
+              filters=("range_mf",)),
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("rcmc", axis=1, fwd=True, inv=True, filters=("rcmc_shift",)),
+        Stage("azimuth_compression", axis=0, inv=True, filters=(az,)),
+    ))
 
 
-# -- beyond-paper: 3-dispatch RDA ---------------------------------------------
-
-def build_fused3(cfg: SceneConfig, interpret: Optional[bool] = None,
-                 block: int = 8, col_block: int = 128,
-                 fft_impl: str = "matmul", synth_phase: bool = True,
-                 fft_kw: Optional[dict] = None) -> Pipeline:
-    """The minimum-dispatch RDA. Range compression commutes with the azimuth
-    FFT (it is an identical per-row linear operator), so the pipeline reorders
-    to  azimuth FFT -> [range FFT * H_r * RCMC-shift * range IFFT] ->
-    [H_a * azimuth IFFT]  — THREE fused dispatches, 3 HBM round-trips total
-    (vs 8 dispatches in the paper's fused pipeline). RCMC uses the exact
-    Fourier-shift interpolator folded into the range dispatch.
-
-    This is also the distributed schedule's local compute: each stage works on
-    whole rows or whole columns only, so one corner-turn all_to_all between
-    stages 2 and 3 suffices (see core/sar/distributed.py).
-    """
-    hr_r, hr_i = filters.range_matched_filter(cfg)
-    hr_r, hr_i = jnp.asarray(hr_r), jnp.asarray(hr_i)
-    rc_u, rc_v = filters.rcmc_phase_uv(cfg)
-    rc_u, rc_v = jnp.asarray(rc_u), jnp.asarray(rc_v)
-    az_u2, az_v2 = filters.azimuth_phase_uv2(cfg)
-    az_u2, az_v2 = jnp.asarray(az_u2), jnp.asarray(az_v2)
-    ha_r, ha_i = filters.azimuth_matched_filter_split(cfg)
-    ha_r, ha_i = jnp.asarray(ha_r), jnp.asarray(ha_i)
-    rkw = dict(interpret=interpret, block=block, fft_impl=fft_impl,
-               **(fft_kw or {}))
-    ckw = dict(interpret=interpret, block=col_block, fft_impl=fft_impl)
-
-    def azimuth_fft(x):
-        xr, xi = split(x)
-        yr, yi = ops.fft_cols(xr, xi, **ckw)
-        return unsplit(yr, yi)
-
-    def range_compress_rcmc(x):
-        xr, xi = split(x)
-        yr, yi = ops.fused_rc_rcmc_rows(xr, xi, hr_r, hr_i, rc_u, rc_v, **rkw)
-        return unsplit(yr, yi)
-
-    def azimuth_compress(x):
-        xr, xi = split(x)
-        if synth_phase:
-            yr, yi = ops.fused_mult_ifft_cols_outer(xr, xi, az_u2, az_v2, **ckw)
-        else:
-            yr, yi = ops.fused_mult_ifft_cols(xr, xi, ha_r, ha_i, **ckw)
-        return unsplit(yr, yi)
-
-    return Pipeline("fused3", cfg, [
-        Step("azimuth_fft", azimuth_fft, 1, 1, True),
-        Step("range_comp_rcmc", range_compress_rcmc, 1, 1, True),
-        Step("azimuth_compression", azimuth_compress, 1, 1, True),
-    ])
+def plan_fused3(synth_phase: bool = True) -> SpectralPlan:
+    """The minimum-dispatch RDA: range compression commutes with the
+    azimuth FFT (an identical per-row linear operator), so the plan
+    reorders to  azimuth FFT -> [range FFT * H_r * RCMC-shift * IFFT] ->
+    [H_a * azimuth IFFT]. The compiler fuses H_r (shared) with the
+    RCMC rank-1 phase (outer) into ONE shared_outer dispatch."""
+    az = "azimuth_mf_outer" if synth_phase else "azimuth_mf"
+    return SpectralPlan("fused3", (
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("range_comp_rcmc", axis=1, fwd=True, inv=True,
+              filters=("range_mf", "rcmc_shift")),
+        Stage("azimuth_compression", axis=0, inv=True, filters=(az,)),
+    ))
 
 
-BUILDERS: dict[str, Callable[..., Pipeline]] = {
-    "unfused": build_unfused,
-    "fused": build_fused,
-    "fused_tfree": build_fused_tfree,
-    "fused3": build_fused3,
-}
+planlib.register_variant(
+    "unfused", plan_unfused,
+    compile_defaults=(("backend", planlib.BACKEND_XLA), ("fuse", False)),
+    plan_kw=("rcmc_mode",), dispatches=7)
+planlib.register_variant(
+    "fused", plan_fused, dispatches=8)
+planlib.register_variant(
+    "fused_tfree", plan_fused_tfree, plan_kw=("synth_phase",), dispatches=4)
+planlib.register_variant(
+    "fused3", plan_fused3, plan_kw=("synth_phase",), dispatches=3)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def _ensure_variants() -> None:
+    # importing the sibling algorithm modules registers their plans
+    from repro.core.sar import csa, omegak  # noqa: F401
 
 
 def build_pipeline(cfg: SceneConfig, variant: str, **kw) -> Pipeline:
-    return BUILDERS[variant](cfg, **kw)
+    """Compile a registered pipeline variant for one scene geometry.
+
+    kw: plan kwargs (rcmc_mode / synth_phase / r_ref, per variant) plus any
+    compile_plan option (block, col_block, interpret, fft_impl, fft_kw,
+    precision, tune, backend, fuse, batch)."""
+    _ensure_variants()
+    return planlib.build_variant(cfg, variant, **kw)
 
 
 def focus(raw: jnp.ndarray, cfg: SceneConfig, variant: str = "fused_tfree",
           **kw) -> jnp.ndarray:
-    """One-call RDA: raw echo (na, nr) — or a batch (B, na, nr) of scenes
-    sharing `cfg` — complex64 -> focused image(s) of the same shape."""
+    """One-call focusing: raw echo (na, nr) — or a batch (B, na, nr) of
+    scenes sharing `cfg` — complex64 -> focused image(s) of the same
+    shape. Compiled filters are cached per (cfg, plan), so repeated calls
+    on new scenes skip the host-side filter math."""
     return build_pipeline(cfg, variant, **kw).run(raw)
+
+
+def documented_dispatches(variant: str) -> int:
+    """The variant's documented compiled dispatch count (tests assert the
+    fusion compiler reproduces it exactly)."""
+    _ensure_variants()
+    return planlib.get_variant(variant).dispatches
+
+
+def variant_names() -> tuple[str, ...]:
+    _ensure_variants()
+    return planlib.variant_names()
+
+
+def _build(variant: str, cfg: SceneConfig, **kw) -> Pipeline:
+    return build_pipeline(cfg, variant, **kw)
+
+
+BUILDERS: dict[str, Callable[..., Pipeline]] = {
+    v: functools.partial(_build, v)
+    for v in ("unfused", "fused", "fused_tfree", "fused3")
+}

@@ -12,10 +12,13 @@ from repro.kernels.fft4step import (  # noqa: F401
     FILTER_OUTER,
     FILTER_SHARED,
     FILTER_SHARED_OUTER,
+    PRECISIONS,
+    Precision,
     SpectralSpec,
     build_spectral_call,
     default_factorization,
     dft_constants,
+    resolve_precision,
 )
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.transpose import transpose  # noqa: F401

@@ -84,6 +84,60 @@ FILTER_SHARED_OUTER = "shared_outer"  # H[sample] * exp(i sum_k u v): range
 MAX_FACTOR = 128  # MXU edge: every DFT matmul factor must be <= 128
 
 
+# ---------------------------------------------------------------------------
+# Precision policy
+# ---------------------------------------------------------------------------
+#
+# Matmul-operand precision of the in-kernel DFT stages ("Range, Not
+# Precision", arXiv 2605.28451: FFT inputs are range-limited, so narrow
+# floats with a shared block exponent keep SAR image quality while doubling
+# matrix-unit throughput). Accumulation is always float32
+# (preferred_element_type); only the dot operands are narrowed.
+#
+#   f32   exact float32 operands (default)
+#   bf16  bfloat16 operands — wide exponent, 8-bit mantissa
+#   f16   float16 operands — 11-bit mantissa but narrow exponent (can
+#         overflow past |x| ~ 6.5e4; prefer bs16)
+#   bs16  block-scaled float16: the kernel prologue extracts one power-of-two
+#         exponent per grid block (scale division is exact in f32), runs the
+#         whole fused pipeline on the scaled data with f16 operands, and the
+#         epilogue re-applies the exponent at the final store. Combines f16's
+#         mantissa with an unbounded effective exponent range.
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """One matmul-operand precision policy for the fused kernel."""
+
+    name: str
+    dtype: str            # operand dtype the DFT matmuls are cast to
+    block_scaled: bool    # per-block exponent extraction in prologue/epilogue
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+PRECISIONS: dict[str, Precision] = {
+    "f32": Precision("f32", "float32", False),
+    "bf16": Precision("bf16", "bfloat16", False),
+    "f16": Precision("f16", "float16", False),
+    "bs16": Precision("bs16", "float16", True),
+}
+
+
+def resolve_precision(p) -> Precision:
+    """Accepts a Precision, a policy name, or None (-> f32)."""
+    if p is None:
+        return PRECISIONS["f32"]
+    if isinstance(p, Precision):
+        return p
+    try:
+        return PRECISIONS[p]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {p!r}; one of {sorted(PRECISIONS)}") from None
+
+
 def default_factorization(n: int) -> tuple[int, ...]:
     """Mixed-radix split of n into 2 or 3 power-of-two factors, each <= 128.
 
@@ -122,7 +176,7 @@ class SpectralSpec:
     n3: Optional[int] = None
     fft_impl: str = "matmul"    # 'matmul' (MXU) | 'stockham' (VPU scalar baseline)
     karatsuba: bool = False     # 3-matmul complex product instead of 4
-    compute_dtype: str = "f32"  # 'f32' | 'bf16' (bf16 inputs, f32 accumulation)
+    precision: str = "f32"      # PRECISIONS key (matmul operands; f32 accum)
     fold_scale: bool = True     # fold the IFFT 1/N into the filter/final store
     outer_rank: int = 1         # K of the rank-K FILTER_OUTER phase
 
@@ -197,11 +251,12 @@ def _cmul(ar, ai, br, bi):
     return ar * br - ai * bi, ar * bi + ai * br
 
 
-def _cast(x, dtype_str):
-    return x.astype(jnp.bfloat16) if dtype_str == "bf16" else x
+def _cast(x, precision: str):
+    prec = PRECISIONS[precision]
+    return x if prec.dtype == "float32" else x.astype(prec.jnp_dtype)
 
 
-def _cdot(fr, fi, xr, xi, dims, *, karatsuba: bool, compute_dtype: str):
+def _cdot(fr, fi, xr, xi, dims, *, karatsuba: bool, precision: str):
     """Complex dot_general: (fr + i fi) . (xr + i xi) with contraction `dims`.
 
     4 real matmuls, or 3 with Karatsuba (P3 = (Fr+Fi)(Xr+Xi)). f32 accumulate.
@@ -211,31 +266,31 @@ def _cdot(fr, fi, xr, xi, dims, *, karatsuba: bool, compute_dtype: str):
         dimension_numbers=(dims, ((), ())),
         preferred_element_type=jnp.float32,
     )
-    fr_, fi_ = _cast(fr, compute_dtype), _cast(fi, compute_dtype)
-    xr_, xi_ = _cast(xr, compute_dtype), _cast(xi, compute_dtype)
+    fr_, fi_ = _cast(fr, precision), _cast(fi, precision)
+    xr_, xi_ = _cast(xr, precision), _cast(xi, precision)
     if karatsuba:
         p1 = dg(fr_, xr_)
         p2 = dg(fi_, xi_)
-        p3 = dg(_cast(fr + fi, compute_dtype), _cast(xr + xi, compute_dtype))
+        p3 = dg(_cast(fr + fi, precision), _cast(xr + xi, precision))
         return p1 - p2, p3 - p1 - p2
     yr = dg(fr_, xr_) - dg(fi_, xi_)
     yi = dg(fr_, xi_) + dg(fi_, xr_)
     return yr, yi
 
 
-def _cdot_rhs(xr, xi, fr, fi, dims, *, karatsuba: bool, compute_dtype: str):
+def _cdot_rhs(xr, xi, fr, fi, dims, *, karatsuba: bool, precision: str):
     """Complex dot_general with the DFT matrix on the right: X . F."""
     dg = functools.partial(
         jax.lax.dot_general,
         dimension_numbers=(dims, ((), ())),
         preferred_element_type=jnp.float32,
     )
-    fr_, fi_ = _cast(fr, compute_dtype), _cast(fi, compute_dtype)
-    xr_, xi_ = _cast(xr, compute_dtype), _cast(xi, compute_dtype)
+    fr_, fi_ = _cast(fr, precision), _cast(fi, precision)
+    xr_, xi_ = _cast(xr, precision), _cast(xi, precision)
     if karatsuba:
         p1 = dg(xr_, fr_)
         p2 = dg(xi_, fi_)
-        p3 = dg(_cast(xr + xi, compute_dtype), _cast(fr + fi, compute_dtype))
+        p3 = dg(_cast(xr + xi, precision), _cast(fr + fi, precision))
         return p1 - p2, p3 - p1 - p2
     yr = dg(xr_, fr_) - dg(xi_, fi_)
     yi = dg(xi_, fr_) + dg(xr_, fi_)
@@ -266,7 +321,7 @@ def _fft_rows_matmul(xr, xi, consts, spec: SpectralSpec):
     """
     factors = spec.factors()
     mats, tws = _split_consts(consts, factors)
-    kw = dict(karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    kw = dict(karatsuba=spec.karatsuba, precision=spec.precision)
 
     def rec(xr, xi, i):
         # xr/xi: (M, m) — transform the last axis, m = prod(factors[i:])
@@ -299,7 +354,7 @@ def _fft_cols_matmul(xr, xi, consts, spec: SpectralSpec):
     no global transpose needed (same recursion as rows, column layout)."""
     factors = spec.factors()
     mats, tws = _split_consts(consts, factors)
-    kw = dict(karatsuba=spec.karatsuba, compute_dtype=spec.compute_dtype)
+    kw = dict(karatsuba=spec.karatsuba, precision=spec.precision)
 
     def rec(xr, xi, i):
         # xr/xi: (m, C) — transform axis 0, m = prod(factors[i:])
@@ -449,6 +504,20 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     xr = xr_ref[...]
     xi = xi_ref[...]
 
+    # bs16 prologue: extract one power-of-two exponent per grid block so the
+    # f16 matmul operands stay in range. The whole fused pipeline (FFT,
+    # filter, IFFT) is linear in x, so one scale factored out here and
+    # re-applied in the epilogue is exact up to f32 rounding — and since the
+    # scale is a power of two, the scaling itself is bit-exact.
+    scale = None
+    if PRECISIONS[spec.precision].block_scaled:
+        amax = jnp.maximum(jnp.max(jnp.abs(xr)), jnp.max(jnp.abs(xi)))
+        exp = jnp.ceil(jnp.log2(jnp.maximum(amax, jnp.float32(1e-37))))
+        scale = jnp.exp2(exp)
+        inv_scale = jnp.exp2(-exp)
+        xr = xr * inv_scale
+        xi = xi * inv_scale
+
     if spec.fwd:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=False)
 
@@ -478,6 +547,11 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
 
     if spec.inv:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=True)
+
+    if scale is not None:
+        # bs16 epilogue: fold the block exponent back into the final store
+        xr = xr * scale
+        xi = xi * scale
 
     or_ref[...] = xr.reshape(or_ref.shape)
     oi_ref[...] = xi.reshape(oi_ref.shape)

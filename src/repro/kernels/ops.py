@@ -30,6 +30,7 @@ from repro.kernels.fft4step import (
     FILTER_SHARED_OUTER,
     SpectralSpec,
     build_spectral_call,
+    resolve_precision,
 )
 
 
@@ -53,8 +54,8 @@ def _pad_lines(x, axis, mult):
     jax.jit,
     static_argnames=(
         "axis", "fwd", "inv", "filter_mode", "block", "fft_impl",
-        "karatsuba", "compute_dtype", "interpret", "n1", "n2", "n3",
-        "batch_block",
+        "karatsuba", "precision", "compute_dtype", "interpret", "n1", "n2",
+        "n3", "batch_block",
     ),
 )
 def spectral_op(
@@ -72,7 +73,8 @@ def spectral_op(
     block: int = 8,
     fft_impl: str = "matmul",
     karatsuba: bool = False,
-    compute_dtype: str = "f32",
+    precision: Optional[str] = None,
+    compute_dtype: Optional[str] = None,
     interpret: Optional[bool] = None,
     n1: Optional[int] = None,
     n2: Optional[int] = None,
@@ -91,7 +93,11 @@ def spectral_op(
               filter = exp(i * sum_k u[line,k] * v[sample,k])
     n1/n2/n3: optional mixed-radix factorization override (n = n1*n2[*n3],
     powers of two <= 128); default per fft4step.default_factorization.
+    precision: matmul-operand Precision policy name (fft4step.PRECISIONS:
+    f32 | bf16 | f16 | bs16 block-scaled f16). `compute_dtype` is the
+    deprecated pre-policy spelling of the same knob.
     """
+    precision = resolve_precision(precision or compute_dtype).name
     batched = xr.ndim == 3
     if not batched:
         xr = xr[None]
@@ -111,7 +117,7 @@ def spectral_op(
     spec = SpectralSpec(
         n=n, fwd=fwd, inv=inv, filter_mode=filter_mode, axis=axis,
         block=block, batch_block=batch_block, fft_impl=fft_impl,
-        karatsuba=karatsuba, compute_dtype=compute_dtype, n1=n1, n2=n2,
+        karatsuba=karatsuba, precision=precision, n1=n1, n2=n2,
         n3=n3, outer_rank=outer_rank,
     )
     call = build_spectral_call(spec, xr.shape[line_axis], batch=b,
