@@ -1,0 +1,129 @@
+"""table_6: the focusing service — offered load vs p50/p99 latency, and
+the micro-batching throughput gain over the sequential per-request
+baseline.
+
+The baseline is the repo's pre-service serving story: one blocking
+`Pipeline.run` per request (eager per-step dispatch, one scene at a
+time). The service point runs the SAME requests through
+repro.service.FocusService — warm jitted per-plan cache, B=max_batch
+coalescing — first as a closed burst (the coalescing ceiling), then as an
+open-loop arrival sweep at multiples of the baseline throughput,
+reporting per-point p50/p99/achieved-rps/mean-batch/rejections. The
+acceptance bar tracked across PRs: burst throughput at B=4 coalescing
+>= 1.5x the sequential baseline on 512^2 scenes (CPU numbers are
+interpret-mode illustrative, like every other table here).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header
+from repro.core.sar import build_pipeline, paper_targets, simulate_cached
+from repro.core.sar.geometry import test_scene
+from repro.service import FocusService, LocalBackend, ServiceConfig
+from repro.service.metrics import percentile
+
+VARIANT = "fused3"
+MAX_BATCH = 4
+
+
+def _sequential_baseline(cfg, raw, n_requests: int):
+    """Per-request blocking Pipeline.run — latency list + throughput."""
+    pipe = build_pipeline(cfg, VARIANT)
+    jax.block_until_ready(pipe.run(raw))          # warm filters/devices
+    lats = []
+    t0 = time.perf_counter()
+    for _ in range(n_requests):
+        t1 = time.perf_counter()
+        np.asarray(pipe.run(raw))                 # host result, like a reply
+        lats.append((time.perf_counter() - t1) * 1e3)
+    rps = n_requests / (time.perf_counter() - t0)
+    return lats, rps
+
+
+async def _serve_point(backend, cfg, raw, n_requests: int,
+                       rate_rps: float | None):
+    """One service measurement: burst (rate None) or open-loop arrivals."""
+    svc = FocusService(
+        ServiceConfig(variant=VARIANT, max_batch=MAX_BATCH,
+                      max_delay_ms=20.0, max_queue=max(64, 2 * n_requests)),
+        backend=backend)
+    await svc.start()
+    t0 = time.perf_counter()
+
+    async def one():
+        return await svc.focus(raw, cfg)
+
+    if rate_rps is None:
+        results = await asyncio.gather(*[one() for _ in range(n_requests)])
+    else:
+        tasks = []
+        for i in range(n_requests):
+            tasks.append(asyncio.ensure_future(one()))
+            await asyncio.sleep(1.0 / rate_rps)
+        results = await asyncio.gather(*tasks)
+    elapsed = time.perf_counter() - t0
+    await svc.stop()
+    assert all(r.shape == (cfg.na, cfg.nr) for r in results)
+    snap = svc.metrics.snapshot()
+    snap["achieved_rps"] = n_requests / elapsed
+    return snap
+
+
+def run(full: bool = False, smoke: bool = False):
+    n = 1024 if full else 512
+    n_requests = 16 if smoke else 32
+    cfg = test_scene(n)
+    raw = np.asarray(simulate_cached(cfg, paper_targets(cfg)))
+
+    header(f"table_6: serving {cfg.na}x{cfg.nr} variant={VARIANT} "
+           f"max_batch={MAX_BATCH} requests={n_requests} "
+           "(sequential blocking Pipeline.run vs async coalescing service)")
+
+    base_lats, base_rps = _sequential_baseline(cfg, jnp.asarray(raw),
+                                               n_requests)
+    emit("serve_seq_baseline_per_request",
+         float(np.mean(base_lats)) / 1e3,
+         f"p50_ms={percentile(base_lats, 50):.1f};"
+         f"p99_ms={percentile(base_lats, 99):.1f};rps={base_rps:.2f}")
+
+    # ONE warm backend for every service point: the per-plan cache
+    # (compiled pipeline + swept block config + jit traces) is service
+    # state, not per-measurement state.
+    backend = LocalBackend()
+    from repro.service.queue import BatchKey
+    backend.warm(BatchKey(cfg, VARIANT, None, False), MAX_BATCH)
+
+    # the burst point uses 2x the requests: the coalescing ceiling is a
+    # steady-state number, and more full batches amortize the fixed
+    # per-measurement costs (gather setup, first-batch ramp)
+    burst = asyncio.run(_serve_point(backend, cfg, raw, 2 * n_requests,
+                                     None))
+    gain = burst["achieved_rps"] / base_rps
+    emit("serve_burst_B4_per_request",
+         1.0 / max(burst["achieved_rps"], 1e-9),
+         f"p50_ms={burst['latency_p50_ms']:.1f};"
+         f"p99_ms={burst['latency_p99_ms']:.1f};"
+         f"rps={burst['achieved_rps']:.2f};"
+         f"mean_batch={burst['mean_batch_size']:.2f}")
+    emit("serve_throughput_gain_B4", 0.0,
+         f"gain_vs_sequential={gain:.2f}x;bar=1.5x")
+
+    for mult in (0.75, 1.5, 3.0):
+        rate = mult * base_rps
+        snap = asyncio.run(
+            _serve_point(backend, cfg, raw, n_requests, rate))
+        emit(f"serve_load_{mult:g}x_baseline",
+             snap["latency_p50_ms"] / 1e3,
+             f"offered_rps={rate:.2f};achieved_rps={snap['achieved_rps']:.2f};"
+             f"p50_ms={snap['latency_p50_ms']:.1f};"
+             f"p99_ms={snap['latency_p99_ms']:.1f};"
+             f"mean_batch={snap['mean_batch_size']:.2f};"
+             f"queue_depth_max={snap['queue_depth_max']};"
+             f"rejected={snap['rejected']}")
+    return gain

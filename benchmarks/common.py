@@ -78,17 +78,65 @@ def git_sha() -> str:
         return "unknown"
 
 
+# BENCH_*.json artifact schema, version 2:
+#   schema 1 (implicit) stamped a float `generated_unix`, which made
+#   artifact diffs noisy (microsecond churn on every row-identical rerun)
+#   and carried no version to validate against. Schema 2 stamps a
+#   second-precision ISO-8601 UTC `generated_utc` plus an explicit
+#   `schema: 2`, and benchmarks/run.py validates every artifact it writes
+#   before CI uploads it (validate_bench_file).
+BENCH_SCHEMA = 2
+_REQUIRED_META = ("schema", "git_sha", "backend", "jax_version", "python",
+                  "generated_utc", "rows")
+_ISO_UTC_RE = r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}Z$"
+
+
+def utc_now_iso() -> str:
+    return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
 def write_bench_json(path: str, records: list[dict], **meta) -> None:
     """One BENCH_*.json artifact: rows + provenance (SHA, backend, host)."""
     doc = {
+        "schema": BENCH_SCHEMA,
         "git_sha": git_sha(),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "python": sys.version.split()[0],
-        "generated_unix": time.time(),
+        "generated_utc": utc_now_iso(),
         **meta,
         "rows": records,
     }
+    validate_bench_doc(doc)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"# wrote {path} ({len(records)} rows)", flush=True)
+
+
+def validate_bench_doc(doc: dict) -> dict:
+    """Assert `doc` is a well-formed schema-2 BENCH artifact. Returns the
+    doc so callers can chain; raises ValueError with the first defect."""
+    import re
+    for key in _REQUIRED_META:
+        if key not in doc:
+            raise ValueError(f"BENCH doc missing required key {key!r}")
+    if doc["schema"] != BENCH_SCHEMA:
+        raise ValueError(f"BENCH schema {doc['schema']!r} != {BENCH_SCHEMA}")
+    if not re.match(_ISO_UTC_RE, str(doc["generated_utc"])):
+        raise ValueError(
+            f"generated_utc {doc['generated_utc']!r} is not second-"
+            "precision ISO-8601 UTC (YYYY-MM-DDTHH:MM:SSZ)")
+    if not isinstance(doc["rows"], list):
+        raise ValueError("rows must be a list")
+    for i, row in enumerate(doc["rows"]):
+        for key in ("section", "name", "wall_ms"):
+            if key not in row:
+                raise ValueError(f"rows[{i}] missing {key!r}")
+        if not isinstance(row["wall_ms"], (int, float)):
+            raise ValueError(f"rows[{i}].wall_ms is not a number")
+    return doc
+
+
+def validate_bench_file(path: str) -> dict:
+    with open(path) as f:
+        return validate_bench_doc(json.load(f))

@@ -13,8 +13,15 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import bench_compare, bench_fft, bench_quality, bench_rda
-from benchmarks.common import take_records, write_bench_json
+from benchmarks import (
+    bench_compare,
+    bench_fft,
+    bench_quality,
+    bench_rda,
+    bench_serve,
+)
+from benchmarks.common import take_records, validate_bench_file, \
+    write_bench_json
 
 
 def main() -> None:
@@ -26,7 +33,7 @@ def main() -> None:
                          "sweeps) that still writes the BENCH_*.json "
                          "artifacts")
     ap.add_argument("--only", default=None,
-                    help="table_1|table_2|table_3|table_4|table_5")
+                    help="table_1|table_2|table_3|table_4|table_5|table_6")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -34,13 +41,16 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     want = lambda t: args.only is None or args.only == t
+    written = []
     take_records()   # discard anything a previous in-process caller left
     if want("table_1"):
         bench_fft.run(full=args.full, smoke=args.smoke)
         write_bench_json("BENCH_fft.json", take_records(), **meta)
+        written.append("BENCH_fft.json")
     if want("table_2") or want("table_3"):
         bench_rda.run(full=args.full, smoke=args.smoke)
         write_bench_json("BENCH_rda.json", take_records(), **meta)
+        written.append("BENCH_rda.json")
     if want("table_4"):
         if args.smoke:
             print("# table_4 skipped in --smoke mode", flush=True)
@@ -51,6 +61,17 @@ def main() -> None:
             print("# table_5 skipped in --smoke mode", flush=True)
         else:
             bench_compare.run(full=args.full)
+    if want("table_6"):
+        bench_serve.run(full=args.full, smoke=args.smoke)
+        write_bench_json("BENCH_serve.json", take_records(), **meta)
+        written.append("BENCH_serve.json")
+    if args.smoke:
+        # CI uploads these as workflow artifacts — refuse to hand it a
+        # malformed document (schema 2: versioned, ISO-8601 stamped).
+        for path in written:
+            validate_bench_file(path)
+        print(f"# validated {len(written)} artifacts (schema 2)",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -87,14 +87,21 @@ class Stage:
 
     kind "spectral": ``[FFT if fwd] · filters · [IFFT if inv]`` along
     ``axis`` in scene coordinates (1 = range/rows, 0 = azimuth/columns).
-    ``filters`` are registry names (see :func:`register_filter`);
-    ``precision`` overrides the matmul-operand policy for this stage
-    (None defers to the compile override, then the autotuned config).
+    ``filters`` are registry names (see :func:`register_filter`), applied
+    in order; at compile time adjacent filters compose into ONE kernel
+    payload (see :func:`_compose_group_filters`). ``precision`` overrides
+    the matmul-operand policy for this stage (None defers to the
+    compile-time ``precision`` override, then the autotuned config, then
+    the library default f32).
 
-    kind "transpose": a global corner turn (fusion barrier).
+    kind "transpose": a global corner turn (fusion barrier). The compiler
+    tracks orientation, so stages after a transpose still name their axis
+    in scene coordinates.
 
     Other kinds dispatch to :func:`register_stage_impl` implementations
-    (e.g. the sinc-interpolation RCMC), with ``opts`` passed through.
+    (e.g. the sinc-interpolation RCMC), with ``opts`` passed through as a
+    plain dict. ``opts`` is stored as a tuple of (key, value) pairs so the
+    Stage stays hashable (plans are cache keys).
     """
 
     name: str
@@ -112,8 +119,17 @@ class Stage:
 
 @dataclasses.dataclass(frozen=True)
 class SpectralPlan:
-    """A named, hashable sequence of stages plus static plan parameters
-    (e.g. CSA's reference range) that filter builders may consume."""
+    """A named, hashable sequence of :class:`Stage` records plus static
+    plan parameters (e.g. CSA's reference range) that filter builders may
+    consume via their ``params`` dict.
+
+    A plan is pure data: it references filters by registry name and never
+    holds arrays, so it can be hashed (it keys the compile-time payload
+    cache), serialized to JSON (:func:`plan_to_json`), diffed, and
+    shipped between processes. Materialization happens only when the plan
+    is compiled against a concrete :class:`~repro.core.sar.SceneConfig`
+    by :func:`compile_plan`.
+    """
 
     name: str
     stages: tuple[Stage, ...]
@@ -404,7 +420,17 @@ def _group_payloads(plan: SpectralPlan, cfg, fuse: bool,
 
 @dataclasses.dataclass
 class Step:
-    """One compiled dispatch (or one oracle op in the xla backend)."""
+    """One compiled dispatch (or one oracle op in the xla backend).
+
+    Besides the executable ``fn``, a step carries a declarative record of
+    the dispatch it performs (``kind``, ``phys_axis``, ``filter_mode``,
+    ``filter_kw``, ``kernel_kw``) so a compiled pipeline can be
+    *re-lowered* to another execution substrate without recompiling the
+    plan — e.g. :func:`repro.core.sar.distributed.lower_pipeline` replays
+    spectral steps on shard_map slabs, re-issuing ``ops.spectral_op`` per
+    device with the line-indexed filter payloads sharded alongside the
+    data (the multi-device analogue of ``strip_fn``'s host strips).
+    """
 
     name: str
     fn: Callable[[jnp.ndarray], jnp.ndarray]
@@ -413,12 +439,34 @@ class Step:
     fused: bool
     stream_axis: Optional[int] = None     # data axis strips run along
     strip_fn: Optional[Callable] = None   # fn(x_strip, lo, hi)
+    kind: str = "spectral"                # "spectral" | "transpose" | custom
+    phys_axis: Optional[int] = None       # physical transform axis
+    filter_mode: str = FILTER_NONE        # composed kernel filter mode
+    filter_kw: Optional[dict] = None      # device filter payloads (line-indexed)
+    kernel_kw: Optional[dict] = None      # ops.spectral_op config kwargs
 
 
 @dataclasses.dataclass
 class Pipeline:
-    """A compiled plan: a named sequence of dispatch steps. `run` executes
-    in-memory; `run_streamed` executes strip-wise from host memory."""
+    """A compiled plan: a named sequence of dispatch steps.
+
+    Execution surfaces (all share the same compiled steps):
+
+    * :meth:`run` — in-memory, blocking per jax's usual async dispatch.
+    * :meth:`jitted` — the same step sequence traced into ONE XLA
+      computation (the serving hot path; amortizes per-step dispatch).
+    * :meth:`run_streamed` — strip-wise over a host-resident scene that
+      exceeds device memory.
+    * :meth:`lower_sharded` — re-lower to multi-device shard_map slabs
+      with corner-turn collectives (transpose-free plans only).
+
+    A Pipeline holds materialized device filter payloads for one
+    ``(SceneConfig, plan)`` pair; the payloads come from the bounded
+    module-level caches, so building the same pipeline twice skips all
+    host filter math (see :func:`filter_cache_stats`). For a process that
+    serves many geometries, prefer :func:`cached_pipeline`, which also
+    reuses the compiled Pipeline object itself.
+    """
 
     name: str
     cfg: Any
@@ -434,16 +482,38 @@ class Pipeline:
         return sum(s.hbm_roundtrips for s in self.steps)
 
     def run(self, raw: jnp.ndarray) -> jnp.ndarray:
+        """Execute the compiled steps on one scene ``(na, nr)`` or a
+        batch ``(B, na, nr)`` sharing the SceneConfig, complex64 in/out.
+
+        A batched input runs each stage as a SINGLE dispatch whose grid
+        spans ``B × line-blocks`` — batching is a grid extension, not a
+        python loop, so the batched image equals the per-scene image
+        bit-for-bit (asserted in tests/test_service.py). Steps execute
+        eagerly; wrap with :meth:`jitted` to fuse the inter-step glue.
+        """
         x = raw
         for s in self.steps:
             x = s.fn(x)
         return x
 
     def jitted(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """One jax.jit callable for the whole step sequence. Retraces per
+        distinct input shape (each batch size B is one trace); the
+        focusing service pre-traces its micro-batch sizes at warm-up."""
         @jax.jit
         def f(raw):
             return self.run(raw)
         return f
+
+    def lower_sharded(self, mesh, axes=("data",), **kw):
+        """Lower this compiled pipeline onto a device mesh: every
+        spectral step runs on slabs sharded along its free (line) axis,
+        with an all_to_all corner turn inserted wherever consecutive
+        steps transform different axes. Transpose-free spectral plans
+        only. See :func:`repro.core.sar.distributed.lower_pipeline` for
+        the collective-bytes story; returns ``fn(raw) -> image``."""
+        from repro.core.sar import distributed
+        return distributed.lower_pipeline(self, mesh, axes=axes, **kw)
 
     def run_streamed(self, raw, strips: int = 4,
                      inflight: int = 2) -> np.ndarray:
@@ -612,7 +682,9 @@ def _make_spectral_step(group, mode, arrays, *, cfg, transposed, backend,
             return _xla_apply(xs, fwd, inv, mode, fk, phys_axis)
 
     fused = backend == BACKEND_PALLAS and len(group) > 1
-    return Step(name, fn, 1, 1, fused, stream_axis, strip_fn)
+    return Step(name, fn, 1, 1, fused, stream_axis, strip_fn,
+                kind="spectral", phys_axis=phys_axis, filter_mode=mode,
+                filter_kw=filter_kw, kernel_kw=kernel_kw)
 
 
 def _xla_apply(x, fwd, inv, mode, fk, phys_axis):
@@ -646,7 +718,7 @@ def _make_transpose_step(stage: Stage, backend: str, interpret) -> Step:
     else:
         def fn(x):
             return jnp.swapaxes(x, -1, -2)
-    return Step(stage.name, fn, 1, 1, False, None, None)
+    return Step(stage.name, fn, 1, 1, False, None, None, kind="transpose")
 
 
 def _make_custom_step(stage: Stage, cfg) -> Step:
@@ -663,7 +735,8 @@ def _make_custom_step(stage: Stage, cfg) -> Step:
     if stream_axis is not None:
         def strip_fn(xs, lo, hi):
             return impl(xs, cfg, opts, lo, hi)
-    return Step(stage.name, fn, 1, 1, False, stream_axis, strip_fn)
+    return Step(stage.name, fn, 1, 1, False, stream_axis, strip_fn,
+                kind=stage.kind)
 
 
 def compile_plan(
@@ -683,9 +756,15 @@ def compile_plan(
 ) -> Pipeline:
     """Compile a plan against a concrete scene into a :class:`Pipeline`.
 
+    cfg is a :class:`~repro.core.sar.SceneConfig`; the compiled pipeline
+    accepts one ``(cfg.na, cfg.nr)`` complex64 scene or any batch
+    ``(B, na, nr)`` of scenes sharing that geometry (B is a runtime shape,
+    not a compile parameter — see ``batch`` below).
+
     backend: 'pallas' (fused dispatches) or 'xla' (jnp oracle ops).
     fuse: merge adjacent compatible atoms into single dispatches.
-    batch: scene-batch size the autotuned configs are looked up for.
+    batch: scene-batch size the autotuned configs are *looked up* for;
+      it does not restrict the shapes the pipeline accepts.
     block/col_block: line blocks for rows/columns dispatches (None = the
       autotuned or library default).
     precision: global matmul-operand policy override for every spectral
@@ -695,6 +774,14 @@ def compile_plan(
       cache; 'off' uses library defaults.
     fft_kw: explicit config for range-axis (axis=1) dispatches — e.g. a
       just-measured factorization from benchmarks/autotune.py.
+
+    Cache behaviour: composed filter payloads are served from the bounded
+    ``(cfg, plan, fuse, backend)`` payload cache and the underlying host
+    filter math from the ``(cfg, params, name)`` build cache, so
+    recompiling the same (scene, plan) pair does no host filter work.
+    The Pipeline object itself is rebuilt each call — use
+    :func:`cached_pipeline` to also reuse compiled pipelines (and their
+    jit traces) across calls, e.g. from the focusing service.
     """
     if backend not in (BACKEND_PALLAS, BACKEND_XLA):
         raise ValueError(f"unknown backend {backend!r}")
@@ -770,3 +857,44 @@ def build_variant(cfg, name: str, **kw) -> Pipeline:
     compile_args = dict(var.compile_defaults)
     compile_args.update(kw)
     return compile_plan(var.plan_fn(**plan_args), cfg, **compile_args)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-pipeline cache — the serving hot path
+# ---------------------------------------------------------------------------
+#
+# compile_plan is cheap-ish (payloads are cached) but not free, and a fresh
+# Pipeline means fresh jit traces. A server coalescing requests into
+# micro-batches wants ONE warm Pipeline per (scene geometry, variant,
+# compile options) so every request after the first reuses both the
+# compiled steps and their XLA executables. Bounded FIFO like the filter
+# caches: pipelines hold scene-sized device filter payloads.
+
+_PIPELINE_CACHE: dict = {}
+_PIPELINE_CACHE_MAX = 32
+
+
+def _freeze(v):
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return v
+
+
+def cached_pipeline(cfg, variant: str, **kw) -> Pipeline:
+    """`build_variant` behind a bounded cache keyed on
+    ``(cfg, variant, compile kwargs)``. Repeated calls return the SAME
+    Pipeline object, so jit traces, device filter payloads, and autotune
+    lookups are all warm. Unhashable kwarg values (dicts/lists, e.g.
+    ``fft_kw``) are frozen to tuples for the key."""
+    key = (cfg, variant, _freeze(kw))
+    if key not in _PIPELINE_CACHE:
+        import repro.core.sar  # noqa: F401  (registers the shipped variants)
+        _fifo_put(_PIPELINE_CACHE, key, build_variant(cfg, variant, **kw),
+                  _PIPELINE_CACHE_MAX)
+    return _PIPELINE_CACHE[key]
+
+
+def clear_pipeline_cache() -> None:
+    _PIPELINE_CACHE.clear()

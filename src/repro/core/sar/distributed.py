@@ -39,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.sar import filters
+from repro.kernels.fft4step import FILTER_FULL
 from repro.core.sar.geometry import SceneConfig
 from repro.core.sar.rda import split, unsplit
 from repro.kernels import ops
@@ -210,6 +211,207 @@ def build_halo(cfg: SceneConfig, mesh: Mesh, axes=("data",),
         return unsplit(yr, yi)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Generic corner-turn lowering of a compiled SpectralPlan pipeline
+# ---------------------------------------------------------------------------
+#
+# Every fused spectral dispatch processes line blocks independently — that
+# is what lets the streaming executor strip a scene through host memory.
+# The same property lets a compiled pipeline shard: each step runs on the
+# slab sharded along its free (line) axis, and wherever two consecutive
+# steps transform different axes the lowering inserts a corner turn
+# (all_to_all). Line-indexed filter payloads (FULL matrices, OUTER u
+# vectors) enter shard_map with the matching PartitionSpec so every device
+# sees exactly its slab's slice; shared vectors and outer v factors ride
+# along replicated. For the 3-dispatch RDA this reproduces the
+# hand-written `corner2` schedule bit-for-bit (tests/test_distributed.py).
+
+def _spec_for_filter(name: str, arr, mode: str, stream_axis: int, axes):
+    """PartitionSpec for one filter operand in scene orientation."""
+    if name in ("hr", "hi"):
+        if mode == FILTER_FULL and arr.ndim == 2:
+            return P(axes, None) if stream_axis == 0 else P(None, axes)
+        return P(None)                     # shared (n,) vector: replicated
+    if name == "u":                        # (lines, K): lines = stream axis
+        return P(axes, None)
+    return P(*([None] * arr.ndim))         # v (n, K): replicated
+
+
+def _lowerable_steps(pipe) -> list:
+    steps = list(pipe.steps)
+    if not steps:
+        raise ValueError(f"pipeline {pipe.name!r} has no steps")
+    for s in steps:
+        if (s.kind != "spectral" or s.stream_axis is None
+                or s.kernel_kw is None):
+            raise ValueError(
+                f"step {s.name!r} (kind {s.kind!r}) cannot lower to "
+                "shard_map slabs; only transpose-free spectral pipelines "
+                "shard (compile a transpose-free variant, e.g. fused3 / "
+                "csa_fused / omegak)")
+    return steps
+
+
+def _clamped_block(kernel_kw: dict, lines_local: int) -> dict:
+    """The per-dispatch line block must fit (and divide) the local slab."""
+    kw = dict(kernel_kw)
+    blk = min(int(kw.get("block") or 8), lines_local)
+    while lines_local % blk:
+        blk -= 1
+    kw["block"] = max(1, blk)
+    return kw
+
+
+def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None):
+    """Lower a compiled :class:`~repro.core.plan.Pipeline` onto `mesh`.
+
+    Returns a jit-ed ``fn(raw) -> image`` accepting one scene ``(na, nr)``
+    or a batch ``(B, na, nr)``, complex64. The input arrives sharded along
+    the FIRST step's line axis and the image leaves sharded along the
+    LAST step's line axis (for the RDA family both are
+    ``P(None, axes)`` — range columns distributed, matching `corner2`).
+
+    Collective cost: one all_to_all of the full scene per axis change
+    (2 · 8 · na · nr · (P−1)/P bytes each for split float32 re/im, halved
+    by ``turn_dtype=jnp.bfloat16``). A K-dispatch transpose-free plan has
+    at most K−1 turns; fused3/csa_fused/omegak all have exactly 2 — the
+    `corner2` schedule generalized to any plan the compiler accepts.
+    """
+    p = _axis_size(mesh, axes)
+    cfg = pipe.cfg
+    steps = _lowerable_steps(pipe)
+    for s in steps:
+        lines = cfg.na if s.stream_axis == 0 else cfg.nr
+        if lines % p:
+            raise ValueError(
+                f"step {s.name!r}: {lines} lines not divisible by {p} "
+                "devices")
+
+    # flatten per-step filter operands (deterministic order) + their specs
+    farg_names: list[list[str]] = []
+    farg_arrays: list = []
+    farg_specs: list = []
+    for s in steps:
+        names = sorted((s.filter_kw or {}).keys())
+        farg_names.append(names)
+        for name in names:
+            arr = s.filter_kw[name]
+            farg_arrays.append(arr)
+            farg_specs.append(_spec_for_filter(name, arr, s.filter_mode,
+                                               s.stream_axis, axes))
+
+    def _turn(x, from_axis: int, bpre: int):
+        # re-shard: sharded rows -> sharded cols (or back). split/concat in
+        # local coordinates, offset past any batch dims.
+        split_axis = bpre + (1 - from_axis)
+        concat_axis = bpre + from_axis
+        dt = x.dtype
+        if turn_dtype is not None:
+            # narrow wire format; barriers pin the converts to the
+            # collective (see build_corner2.turn)
+            x = jax.lax.optimization_barrier(x.astype(turn_dtype))
+        x = jax.lax.all_to_all(x, axes, split_axis, concat_axis, tiled=True)
+        if turn_dtype is not None:
+            x = jax.lax.optimization_barrier(x)
+        return x.astype(dt)
+
+    def _build(ndim: int):
+        bpre = ndim - 2
+
+        def dspec(stream_axis: int):
+            scene = ((axes, None) if stream_axis == 0 else (None, axes))
+            return P(*([None] * bpre), *scene)
+
+        def local(xr, xi, *fargs):
+            cur = steps[0].stream_axis
+            i = 0
+            for s, names in zip(steps, farg_names):
+                if s.stream_axis != cur:
+                    xr = _turn(xr, cur, bpre)
+                    xi = _turn(xi, cur, bpre)
+                    cur = s.stream_axis
+                fk = {n: fargs[i + j] for j, n in enumerate(names)}
+                i += len(names)
+                lines_local = (cfg.na if cur == 0 else cfg.nr) // p
+                xr, xi = ops.spectral_op(
+                    xr, xi, **fk, **_clamped_block(s.kernel_kw, lines_local))
+            return xr, xi
+
+        shard = functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(dspec(steps[0].stream_axis),
+                      dspec(steps[0].stream_axis), *farg_specs),
+            out_specs=(dspec(steps[-1].stream_axis),
+                       dspec(steps[-1].stream_axis)),
+            check_vma=False)
+
+        @jax.jit
+        def run(raw):
+            xr, xi = split(raw)
+            yr, yi = shard(local)(xr, xi, *farg_arrays)
+            return unsplit(yr, yi)
+
+        return run
+
+    runners: dict[int, callable] = {}
+
+    def run(raw):
+        nd = jnp.ndim(raw)
+        if nd not in (2, 3):
+            raise ValueError("expected (na, nr) or (B, na, nr)")
+        if nd not in runners:
+            runners[nd] = _build(nd)
+        return runners[nd](raw)
+
+    return run
+
+
+def build_sharded(cfg: SceneConfig, variant: str = "fused3",
+                  mesh: Optional[Mesh] = None, axes=("data",),
+                  schedule: str = "corner2", turn_dtype=None, **compile_kw):
+    """Compile `variant` for `cfg` and return a multi-device runner.
+
+    schedule 'corner2': the generic plan lowering (`lower_pipeline`) — an
+    all_to_all corner turn at every transform-axis change; works for any
+    transpose-free spectral plan and reproduces the hand-written corner2
+    schedule exactly on the 3-dispatch RDA. compile_kw (precision, block,
+    fft_kw, ...) route to the plan compiler.
+
+    schedule 'halo': the hand-written single-turn RDA schedule
+    (`build_halo`) — range compression on the natural pulse-sharded
+    layout, ONE corner turn, ring halo-exchange RCMC. RDA only; the
+    `variant` argument selects nothing beyond asserting RDA semantics.
+
+    This is the focusing service's `sharded` execution backend
+    (repro.service.backends.ShardedBackend).
+    """
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    if schedule == "halo":
+        if variant not in ("fused3", "fused_tfree", "fused", "unfused"):
+            raise ValueError(
+                f"schedule 'halo' implements the RDA; variant {variant!r} "
+                "is not an RDA pipeline (use schedule='corner2')")
+        supported = ("interpret", "block", "col_block", "fft_impl", "halo")
+        ignored = sorted(set(compile_kw) - set(supported))
+        if ignored or turn_dtype is not None:
+            # refuse rather than silently run f32/full-width: a client
+            # that asked for precision='bf16' must not get an unlabelled
+            # f32 result back
+            bad = ignored + (["turn_dtype"] if turn_dtype is not None
+                             else [])
+            raise ValueError(
+                f"schedule 'halo' does not support option(s) {bad}; "
+                "use schedule='corner2' for precision/turn_dtype")
+        return build_halo(cfg, mesh, axes, **compile_kw)
+    if schedule != "corner2":
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"known: corner2, halo")
+    from repro.core.sar.rda import build_pipeline
+    pipe = build_pipeline(cfg, variant, **compile_kw)
+    return lower_pipeline(pipe, mesh, axes=axes, turn_dtype=turn_dtype)
 
 
 SCHEDULES = {"corner2": build_corner2, "halo": build_halo}

@@ -1,0 +1,36 @@
+"""Production-shaped SAR focusing service over the SpectralPlan executor.
+
+An asyncio request front end that coalesces same-(SceneConfig, variant,
+Precision) requests into (B, na, nr) micro-batches under a
+deadline/max-batch policy, executes them through warm per-plan caches on
+a pluggable backend (single-device `local`, or `sharded` shard_map
+corner-turn slabs), streams over-budget scenes, enforces a per-request
+precision SNR gate, applies admission backpressure, and emits
+latency/throughput/queue-depth metrics in the BENCH_*.json format.
+
+    from repro.service import FocusService, ServiceConfig
+    svc = FocusService(ServiceConfig(max_batch=4, max_delay_ms=5.0))
+    await svc.start(warm=[(cfg, "fused3", None)])
+    image = await svc.focus(raw, cfg)
+
+See docs/serving.md for the request lifecycle and policy semantics.
+"""
+from repro.service.backends import (  # noqa: F401
+    BACKENDS,
+    LocalBackend,
+    ShardedBackend,
+    make_backend,
+)
+from repro.service.batcher import MicroBatcher  # noqa: F401
+from repro.service.metrics import ServiceMetrics  # noqa: F401
+from repro.service.queue import (  # noqa: F401
+    BatchKey,
+    FocusRequest,
+    RequestQueue,
+    ServiceOverloaded,
+    SnrGateViolation,
+)
+from repro.service.service import (  # noqa: F401
+    FocusService,
+    ServiceConfig,
+)

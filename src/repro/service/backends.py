@@ -1,0 +1,196 @@
+"""Pluggable execution backends for the focusing service.
+
+A backend turns one coalesced micro-batch into focused images, blocking
+the calling thread (the service invokes it through an executor so the
+event loop keeps admitting requests while the device computes). Two are
+shipped:
+
+``local``    One-device execution through the warm compiled-pipeline
+             cache (`core.plan.cached_pipeline`): per BatchKey, ONE
+             Pipeline whose jit traces, filter payloads, and autotune
+             configs persist across requests. `warm()` optionally sweeps
+             a few (block, col_block) line-block configs on the real
+             batched pipeline and pins the winner — interpret-mode CPU
+             timing is too shape-dependent for the kernel autotune cache
+             alone (same rationale as benchmarks/bench_rda.run_batched).
+
+``sharded``  Multi-device execution via the shard_map corner-turn
+             lowering (`core.sar.distributed.build_sharded`): schedule
+             'corner2' lowers the compiled plan generically (all_to_all
+             at each transform-axis change), 'halo' uses the hand-written
+             single-turn RDA schedule. Oversized scenes route through the
+             mesh too — P devices hold P× the budget — so this backend
+             has no separate streaming path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as planlib
+from repro.service.queue import BatchKey
+
+
+def _resolve_blocks(cfg, block: Optional[int], col_block: Optional[int]):
+    """-1 means 'all lines' for the respective dispatch orientation."""
+    if block == -1:
+        block = cfg.na
+    if col_block == -1:
+        col_block = cfg.nr
+    return block, col_block
+
+
+def _bucket(b: int) -> int:
+    """Batch-size buckets are powers of two: every distinct batch shape
+    costs one jit trace (hundreds of ms), so a partial batch pads with
+    zero scenes up to the next pre-traced bucket instead of compiling a
+    fresh executable mid-serving. Zero scenes are numerically inert
+    (every stage maps 0 -> 0) and their rows are sliced off the reply."""
+    return 1 << max(0, b - 1).bit_length()
+
+
+def _pad_batch(batch: np.ndarray) -> np.ndarray:
+    b = batch.shape[0]
+    pb = _bucket(b)
+    if pb == b:
+        return batch
+    pad = np.zeros((pb - b, *batch.shape[1:]), batch.dtype)
+    return np.concatenate([batch, pad])
+
+
+class LocalBackend:
+    """Single-device backend over the compiled-pipeline cache."""
+
+    name = "local"
+
+    def __init__(self, sweep: Sequence[Tuple[Optional[int], Optional[int]]]
+                 = ((None, None), (32, -1))):
+        self.sweep = tuple(sweep)
+        self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
+        self._fns: Dict[BatchKey, callable] = {}
+
+    def _pipeline(self, key: BatchKey, batch: int = 1):
+        block, col_block = _resolve_blocks(
+            key.scene, *self._best.get(key, (None, None)))
+        kw = dict(batch=batch)
+        if key.precision is not None:
+            kw["precision"] = key.precision
+        if block is not None:
+            kw["block"] = block
+        if col_block is not None:
+            kw["col_block"] = col_block
+        return planlib.cached_pipeline(key.scene, key.variant, **kw)
+
+    def _fn(self, key: BatchKey):
+        if key not in self._fns:
+            self._fns[key] = self._pipeline(key).jitted()
+        return self._fns[key]
+
+    def warm(self, key: BatchKey, max_batch: int = 4) -> None:
+        """Pre-pull everything a request would otherwise pay for: compile
+        the plan (materializing filters + autotune configs), sweep the
+        line-block configs on a B=max_batch scene batch, and pre-trace
+        the jit executable for every power-of-two batch bucket up to
+        max_batch (partial batches pad to a bucket at execute time)."""
+        cfg = key.scene
+        zeros = jnp.zeros((_bucket(max_batch), cfg.na, cfg.nr),
+                          jnp.complex64)
+        if len(self.sweep) > 1 and key not in self._best:
+            best = None
+            for blk, cb in self.sweep:
+                self._best[key] = (blk, cb)
+                f = self._pipeline(key, batch=max_batch).jitted()
+                jax.block_until_ready(f(zeros))       # compile
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(zeros))
+                t = time.perf_counter() - t0
+                if best is None or t < best[0]:
+                    best = (t, blk, cb)
+            self._best[key] = (best[1], best[2])
+        f = self._fn(key)
+        b = 1
+        while b <= zeros.shape[0]:
+            jax.block_until_ready(f(zeros[:b]))
+            b *= 2
+
+    def execute(self, key: BatchKey, batch: np.ndarray) -> np.ndarray:
+        """(B, na, nr) host batch -> (B, na, nr) focused images.
+        Pads to the nearest power-of-two bucket (see `_bucket`)."""
+        b = batch.shape[0]
+        out = np.asarray(self._fn(key)(jnp.asarray(_pad_batch(batch))))
+        return out[:b]
+
+    def execute_streamed(self, key: BatchKey, raw: np.ndarray,
+                         strips: int = 4) -> np.ndarray:
+        """One host-resident scene through Pipeline.run_streamed (strip
+        transfer overlapped with compute; bit-identical to `execute`)."""
+        return np.asarray(self._pipeline(key).run_streamed(raw,
+                                                           strips=strips))
+
+
+class ShardedBackend:
+    """Multi-device backend over the shard_map corner-turn lowering."""
+
+    name = "sharded"
+
+    def __init__(self, mesh=None, axes=("data",), schedule: str = "corner2",
+                 turn_dtype=None):
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        self.mesh = mesh
+        self.axes = axes
+        self.schedule = schedule
+        self.turn_dtype = turn_dtype
+        self._fns: Dict[BatchKey, callable] = {}
+
+    def _fn(self, key: BatchKey):
+        if key not in self._fns:
+            from repro.core.sar.distributed import build_sharded
+            kw = {}
+            if key.precision is not None:
+                kw["precision"] = key.precision
+            self._fns[key] = build_sharded(
+                key.scene, key.variant, self.mesh, self.axes,
+                schedule=self.schedule, turn_dtype=self.turn_dtype, **kw)
+        return self._fns[key]
+
+    def warm(self, key: BatchKey, max_batch: int = 4) -> None:
+        cfg = key.scene
+        fn = self._fn(key)
+        if self.schedule == "halo":        # 2-D runner: one trace
+            jax.block_until_ready(fn(jnp.zeros((cfg.na, cfg.nr),
+                                               jnp.complex64)))
+            return
+        zeros = jnp.zeros((_bucket(max_batch), cfg.na, cfg.nr),
+                          jnp.complex64)
+        b = 1
+        while b <= zeros.shape[0]:
+            jax.block_until_ready(fn(zeros[:b]))
+            b *= 2
+
+    def execute(self, key: BatchKey, batch: np.ndarray) -> np.ndarray:
+        fn = self._fn(key)
+        if self.schedule == "halo":        # the halo runner is per-scene
+            return np.stack([np.asarray(fn(jnp.asarray(x))) for x in batch])
+        b = batch.shape[0]
+        return np.asarray(fn(jnp.asarray(_pad_batch(batch))))[:b]
+
+    def execute_streamed(self, key: BatchKey, raw: np.ndarray,
+                         strips: int = 4) -> np.ndarray:
+        # a scene over the single-device budget fits the mesh: the slabs
+        # are 1/P of the scene each, so just run it sharded.
+        return np.asarray(self._fn(key)(jnp.asarray(raw)))
+
+
+BACKENDS = {"local": LocalBackend, "sharded": ShardedBackend}
+
+
+def make_backend(name: str, **kw):
+    if name not in BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; known: {sorted(BACKENDS)}")
+    return BACKENDS[name](**kw)

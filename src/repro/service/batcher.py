@@ -1,0 +1,87 @@
+"""Deadline/max-batch micro-batcher.
+
+Coalesces same-:class:`~repro.service.queue.BatchKey` requests into
+``(B, na, nr)`` micro-batches: a key's first pending request starts a
+flush deadline (``max_delay_ms``); the bucket flushes when it reaches
+``max_batch`` or the deadline fires, whichever is first. Requests routed
+through the streaming executor never coalesce (one host-resident scene is
+already over the device budget; B of them certainly are).
+
+One batch executes at a time, awaited inline: while a batch runs on
+device, newly arrived requests accumulate in the queue and form the next
+batch — under load the batcher converges to full batches with no timer
+involved (classic adaptive batching), and when idle the deadline bounds
+the latency a lone request pays waiting for company.
+"""
+from __future__ import annotations
+
+from typing import Awaitable, Callable, Dict, List
+
+from repro.service.queue import (
+    STOP,
+    BatchKey,
+    FocusRequest,
+    RequestQueue,
+    now,
+)
+
+ExecuteFn = Callable[[BatchKey, List[FocusRequest]], Awaitable[None]]
+
+
+class MicroBatcher:
+    """Pulls from the queue, buckets by key, flushes on size or deadline."""
+
+    def __init__(self, queue: RequestQueue, execute: ExecuteFn,
+                 max_batch: int = 4, max_delay_ms: float = 5.0):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.queue = queue
+        self.execute = execute
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_ms / 1e3
+        self._pending: Dict[BatchKey, List[FocusRequest]] = {}
+        self._deadline: Dict[BatchKey, float] = {}
+
+    def pending_count(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    async def run(self) -> None:
+        """The batcher task. Exits after draining when STOP is dequeued."""
+        stop = False
+        while not stop:
+            timeout = None
+            if self._deadline:
+                timeout = max(0.0, min(self._deadline.values()) - now())
+            req = await self.queue.get(timeout)
+            # Drain the whole backlog into buckets BEFORE any deadline
+            # check: requests that queued up behind an executing batch are
+            # past their deadline on arrival here, and flushing them as
+            # they surface would degenerate every backlog into B=1
+            # batches. Draining first lets the backlog coalesce to
+            # max_batch; the deadline only governs requests still waiting
+            # for company once the queue is empty.
+            while req is not None:
+                if req is STOP:
+                    stop = True
+                    break
+                bucket = self._pending.setdefault(req.key, [])
+                if not bucket:
+                    self._deadline[req.key] = (req.t_submit
+                                               + self.max_delay_s)
+                bucket.append(req)
+                if len(bucket) >= self.max_batch or req.stream:
+                    await self._flush(req.key)
+                req = await self.queue.get(0)
+            if stop:
+                break
+            t = now()
+            for key in [k for k, d in self._deadline.items() if d <= t]:
+                await self._flush(key)
+        for key in list(self._pending):
+            await self._flush(key)
+
+    async def _flush(self, key: BatchKey) -> None:
+        reqs = self._pending.pop(key, [])
+        self._deadline.pop(key, None)
+        if reqs:
+            await self.execute(key, reqs)

@@ -1,0 +1,167 @@
+"""Service observability: latency / throughput / queue-depth counters
+emitted in the repo's BENCH_*.json (schema 2) artifact format.
+
+The service records per-request latency (admission -> future resolved),
+per-batch wall time and size, queue-depth samples, and rejection counts.
+`to_bench_doc()` renders the snapshot as the same schema-2 document
+benchmarks/common.write_bench_json produces (git SHA, backend, ISO-8601
+UTC timestamp, rows of name/wall_ms/derived), so serving metrics diff and
+upload exactly like the paper-table benchmarks. The writer here is
+self-contained — `repro.service` must not depend on the benchmarks
+package being importable in production — but tests assert the documents
+validate against benchmarks.common.validate_bench_doc.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from collections import Counter
+from typing import List
+
+BENCH_SCHEMA = 2
+_RESERVOIR_MAX = 100_000
+
+
+def utc_now_iso() -> str:
+    """ISO-8601 UTC, second precision — stable enough to diff artifacts."""
+    return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile; 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    k = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+class ServiceMetrics:
+    """Mutable counters for one service instance (not thread-safe beyond
+    the GIL — the service mutates it from the event-loop thread only)."""
+
+    def __init__(self):
+        self.t_start = time.monotonic()
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0            # backpressure rejections
+        self.gate_rejected = 0       # SNR-gate rejections
+        self.failed = 0
+        self.streamed = 0
+        self.latencies_ms: List[float] = []
+        self.batch_sizes: Counter = Counter()
+        self.batch_wall_ms: List[float] = []
+        self.depth_samples: List[int] = []
+
+    # -- recording ----------------------------------------------------------
+    def observe_submit(self, depth: int) -> None:
+        self.submitted += 1
+        self.depth_samples.append(depth)
+
+    def observe_reject(self) -> None:
+        self.rejected += 1
+
+    def observe_gate_reject(self) -> None:
+        self.gate_rejected += 1
+
+    def observe_batch(self, size: int, wall_ms: float,
+                      streamed: bool = False) -> None:
+        self.batch_sizes[size] += 1
+        self.batch_wall_ms.append(wall_ms)
+        if streamed:
+            self.streamed += size
+
+    def observe_done(self, latency_ms: float) -> None:
+        self.completed += 1
+        if len(self.latencies_ms) < _RESERVOIR_MAX:
+            self.latencies_ms.append(latency_ms)
+
+    def observe_failure(self) -> None:
+        self.failed += 1
+
+    # -- reporting ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        elapsed = max(time.monotonic() - self.t_start, 1e-9)
+        n_batches = sum(self.batch_sizes.values())
+        coalesced = sum(k * v for k, v in self.batch_sizes.items())
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "gate_rejected": self.gate_rejected,
+            "failed": self.failed,
+            "streamed": self.streamed,
+            "throughput_rps": self.completed / elapsed,
+            "latency_p50_ms": percentile(self.latencies_ms, 50),
+            "latency_p99_ms": percentile(self.latencies_ms, 99),
+            "latency_mean_ms": (sum(self.latencies_ms) /
+                                len(self.latencies_ms)
+                                if self.latencies_ms else 0.0),
+            "mean_batch_size": coalesced / n_batches if n_batches else 0.0,
+            "batch_size_hist": dict(sorted(self.batch_sizes.items())),
+            "queue_depth_max": max(self.depth_samples, default=0),
+        }
+
+    def rows(self, section: str = "service") -> List[dict]:
+        """Snapshot rendered as BENCH rows (wall_ms carries the metric's
+        natural unit; non-latency metrics ride in `derived`)."""
+        s = self.snapshot()
+        rows = []
+        for name in ("latency_p50_ms", "latency_p99_ms", "latency_mean_ms"):
+            rows.append({"section": section, "name": name,
+                         "wall_ms": s[name], "derived": ""})
+        rows.append({
+            "section": section, "name": "throughput",
+            "wall_ms": 0.0,
+            "derived": f"rps={s['throughput_rps']:.2f};"
+                       f"completed={s['completed']};"
+                       f"rejected={s['rejected']};"
+                       f"gate_rejected={s['gate_rejected']};"
+                       f"streamed={s['streamed']}",
+        })
+        rows.append({
+            "section": section, "name": "batching",
+            "wall_ms": 0.0,
+            "derived": f"mean_batch={s['mean_batch_size']:.2f};"
+                       f"hist={s['batch_size_hist']};"
+                       f"queue_depth_max={s['queue_depth_max']}",
+        })
+        return rows
+
+    def to_bench_doc(self, section: str = "service", **meta) -> dict:
+        """The schema-2 BENCH_*.json document for this snapshot."""
+        try:
+            import jax
+            backend = jax.default_backend()
+            jax_version = jax.__version__
+        except Exception:                              # pragma: no cover
+            backend, jax_version = "unknown", "unknown"
+        return {
+            "schema": BENCH_SCHEMA,
+            "git_sha": _git_sha(),
+            "backend": backend,
+            "jax_version": jax_version,
+            "python": sys.version.split()[0],
+            "generated_utc": utc_now_iso(),
+            **meta,
+            "rows": self.rows(section),
+        }
+
+    def write_bench_json(self, path: str, section: str = "service",
+                         **meta) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_bench_doc(section, **meta), f, indent=2)

@@ -1,0 +1,120 @@
+"""Bounded async request queue — the service's backpressure boundary.
+
+Every request enters through :meth:`RequestQueue.put`, which REJECTS
+(raises :class:`ServiceOverloaded`) instead of blocking once the bound is
+reached: under sustained overload an unbounded queue only converts
+throughput saturation into unbounded latency, so the service sheds load
+at admission and the caller decides whether to retry. Accepted requests
+carry an :class:`asyncio.Future` the batcher resolves with the focused
+image (or an exception).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.sar.geometry import SceneConfig
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission rejected: the request queue is at its configured bound."""
+
+
+class SnrGateViolation(ValueError):
+    """The requested precision's measured SNR deviation exceeds the
+    service's quality gate (ServiceConfig.snr_gate_db)."""
+
+
+class BatchKey(NamedTuple):
+    """Requests coalesce into one micro-batch iff their keys are equal:
+    same scene geometry (filters, FFT lengths), same plan variant, same
+    precision policy, and the same streamed-vs-in-memory route."""
+
+    scene: SceneConfig
+    variant: str
+    precision: Optional[str]
+    stream: bool
+
+
+@dataclasses.dataclass
+class FocusRequest:
+    """One in-flight focusing request (host scene -> focused image)."""
+
+    raw: np.ndarray                 # (na, nr) complex64 host scene
+    scene: SceneConfig
+    variant: str
+    precision: Optional[str]
+    future: asyncio.Future          # resolves to the (na, nr) image
+    t_submit: float                 # monotonic seconds at admission
+    stream: bool = False            # over device budget: run_streamed route
+
+    @property
+    def key(self) -> BatchKey:
+        return BatchKey(self.scene, self.variant, self.precision,
+                        self.stream)
+
+
+class _Stop:
+    pass
+
+
+STOP = _Stop()
+
+
+class RequestQueue:
+    """asyncio FIFO with an explicit admission bound."""
+
+    def __init__(self, bound: int):
+        if bound < 1:
+            raise ValueError("queue bound must be >= 1")
+        self.bound = bound
+        self._q: asyncio.Queue = asyncio.Queue()
+
+    def depth(self) -> int:
+        return self._q.qsize()
+
+    def put(self, req: FocusRequest) -> None:
+        """Admit a request or raise :class:`ServiceOverloaded`."""
+        if self._q.qsize() >= self.bound:
+            raise ServiceOverloaded(
+                f"queue at bound ({self.bound}); request rejected")
+        self._q.put_nowait(req)
+
+    def put_stop(self) -> None:
+        """Enqueue the shutdown sentinel (bypasses the bound)."""
+        self._q.put_nowait(STOP)
+
+    def drain_nowait(self) -> list:
+        """Remove and return everything currently queued (shutdown path:
+        requests that raced admission behind the STOP sentinel must be
+        failed, not leaked as forever-pending futures)."""
+        out = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except asyncio.QueueEmpty:
+                return out
+            if item is not STOP:
+                out.append(item)
+
+    async def get(self, timeout: Optional[float] = None):
+        """Next request, STOP, or None when `timeout` elapses first."""
+        if timeout is None:
+            return await self._q.get()
+        if timeout <= 0:
+            try:
+                return self._q.get_nowait()
+            except asyncio.QueueEmpty:
+                return None
+        try:
+            return await asyncio.wait_for(self._q.get(), timeout)
+        except asyncio.TimeoutError:
+            return None
+
+
+def now() -> float:
+    return time.monotonic()

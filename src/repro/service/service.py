@@ -1,0 +1,216 @@
+"""FocusService — the async micro-batched SAR focusing front end.
+
+Request lifecycle (docs/serving.md has the full walkthrough):
+
+1. **Admission** — ``focus()`` checks the per-request SNR gate (a
+   precision whose measured deviation exceeds ``snr_gate_db`` is rejected
+   before it costs a dispatch), sizes the scene against the device-memory
+   budget (oversized scenes take the streaming route), and enqueues into
+   the bounded request queue — or raises :class:`ServiceOverloaded`.
+2. **Coalescing** — the batcher buckets requests by
+   ``(SceneConfig, variant, precision)`` and flushes at ``max_batch`` or
+   after ``max_delay_ms``, whichever first.
+3. **Execution** — the batch is stacked to ``(B, na, nr)`` and handed to
+   the backend (``local`` warm-cached jitted pipelines, or ``sharded``
+   shard_map corner-turn slabs) on an executor thread, so the event loop
+   keeps admitting (and coalescing) requests while the device computes.
+4. **Completion** — per-request futures resolve with each request's
+   ``(na, nr)`` image; batching is a kernel-grid extension, so the
+   coalesced image is bit-identical to an unbatched ``Pipeline.run``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sar.geometry import SceneConfig
+from repro.service import backends as backends_mod
+from repro.service.batcher import MicroBatcher
+from repro.service.metrics import ServiceMetrics
+from repro.service.queue import (
+    BatchKey,
+    FocusRequest,
+    RequestQueue,
+    ServiceOverloaded,
+    SnrGateViolation,
+    now,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service-level policy knobs (per-request knobs ride on the request).
+
+    variant: default plan variant for requests that don't name one.
+    backend: 'local' | 'sharded' (see repro.service.backends).
+    max_batch: coalescing bound B — requests per micro-batch.
+    max_delay_ms: deadline a lone request waits for batch company.
+    max_queue: admission bound; beyond it submits raise ServiceOverloaded.
+    snr_gate_db: per-request precision quality gate — a request asking
+      for a precision whose measured point-target SNR deviation exceeds
+      this raises SnrGateViolation at admission ("Range, Not Precision":
+      the gate, not throughput, decides admissibility).
+    device_budget_bytes: scenes larger than this take the streaming route
+      (Pipeline.run_streamed strips on 'local'; mesh slabs on 'sharded').
+      None disables the check.
+    stream_strips: strip count for the streaming route.
+    schedule: sharded backend schedule ('corner2' generic plan lowering,
+      'halo' single-turn RDA).
+    """
+
+    variant: str = "fused3"
+    backend: str = "local"
+    max_batch: int = 4
+    max_delay_ms: float = 5.0
+    max_queue: int = 64
+    snr_gate_db: float = 0.1
+    device_budget_bytes: Optional[int] = None
+    stream_strips: int = 4
+    schedule: str = "corner2"
+
+
+def _default_precision_deviation(precision: str) -> float:
+    """Measured SNR deviation (dB) for a precision policy, from the
+    benchmark quality harness. Fails CLOSED: if the harness is not
+    importable the deviation is +inf and every non-f32 request is
+    rejected — a service must never silently skip its quality gate."""
+    try:
+        from benchmarks.bench_quality import precision_snr_deviation
+    except Exception:
+        return math.inf
+    return precision_snr_deviation(precision)
+
+
+class FocusService:
+    """Async front end over the SpectralPlan executor. Construct, then
+    ``await start()`` (optionally with warm keys); submit via ``focus``;
+    ``await stop()`` drains and joins the batcher."""
+
+    def __init__(self, config: ServiceConfig = ServiceConfig(),
+                 backend=None, precision_deviation=None):
+        self.config = config
+        self.metrics = ServiceMetrics()
+        self.queue = RequestQueue(config.max_queue)
+        if backend is None:
+            backend = (backends_mod.ShardedBackend(schedule=config.schedule)
+                       if config.backend == "sharded"
+                       else backends_mod.LocalBackend())
+        self.backend = backend
+        self.batcher = MicroBatcher(self.queue, self._execute,
+                                    max_batch=config.max_batch,
+                                    max_delay_ms=config.max_delay_ms)
+        self._precision_deviation = (precision_deviation
+                                     or _default_precision_deviation)
+        self._gate_cache: Dict[str, float] = {}
+        self._task: Optional[asyncio.Task] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self, warm: Sequence[Tuple[SceneConfig, str,
+                                               Optional[str]]] = ()) -> None:
+        """Spawn the batcher task; pre-warm backend caches for each
+        (scene, variant, precision) triple so the first real requests pay
+        no compile/trace/filter cost."""
+        loop = asyncio.get_running_loop()
+        for scene, variant, precision in warm:
+            key = BatchKey(scene, variant, precision, False)
+            await loop.run_in_executor(
+                None, lambda k=key: self.backend.warm(
+                    k, self.config.max_batch))
+        self._task = asyncio.create_task(self.batcher.run())
+
+    async def stop(self) -> None:
+        """Flush pending batches and join the batcher task. Requests that
+        raced admission behind the shutdown sentinel are failed (their
+        futures raise) rather than left pending forever."""
+        if self._task is not None:
+            self.queue.put_stop()
+            await self._task
+            self._task = None
+        for req in self.queue.drain_nowait():
+            if not req.future.done():
+                req.future.set_exception(
+                    RuntimeError("service stopped before execution"))
+            self.metrics.observe_failure()
+
+    # -- admission ----------------------------------------------------------
+    def _check_gate(self, precision: Optional[str]) -> None:
+        if precision in (None, "f32"):
+            return
+        if precision not in self._gate_cache:
+            self._gate_cache[precision] = float(
+                self._precision_deviation(precision))
+        dev = self._gate_cache[precision]
+        if dev > self.config.snr_gate_db:
+            self.metrics.observe_gate_reject()
+            raise SnrGateViolation(
+                f"precision {precision!r}: measured SNR deviation "
+                f"{dev:.3f} dB exceeds the {self.config.snr_gate_db} dB "
+                "gate")
+
+    async def focus(self, raw, scene: SceneConfig,
+                    variant: Optional[str] = None,
+                    precision: Optional[str] = None) -> np.ndarray:
+        """Submit one scene; resolves to its focused (na, nr) image.
+
+        Raises SnrGateViolation (quality gate) or ServiceOverloaded
+        (queue at bound) at admission — both BEFORE any device work —
+        and RuntimeError when the service is not running (not started,
+        stopped, or the batcher task died)."""
+        if self._task is None or self._task.done():
+            raise RuntimeError(
+                "service is not running (call start() first; submissions "
+                "after stop() are rejected)")
+        self._check_gate(precision)
+        raw = np.ascontiguousarray(np.asarray(raw, np.complex64))
+        if raw.shape != (scene.na, scene.nr):
+            raise ValueError(
+                f"scene shape {raw.shape} != ({scene.na}, {scene.nr})")
+        stream = (self.config.device_budget_bytes is not None
+                  and raw.nbytes > self.config.device_budget_bytes)
+        loop = asyncio.get_running_loop()
+        req = FocusRequest(
+            raw=raw, scene=scene, variant=variant or self.config.variant,
+            precision=precision, future=loop.create_future(),
+            t_submit=now(), stream=stream)
+        try:
+            self.queue.put(req)
+        except ServiceOverloaded:
+            self.metrics.observe_reject()
+            raise
+        self.metrics.observe_submit(self.queue.depth()
+                                    + self.batcher.pending_count())
+        return await req.future
+
+    # -- execution (called by the batcher) ----------------------------------
+    async def _execute(self, key: BatchKey, reqs: List[FocusRequest]) -> None:
+        loop = asyncio.get_running_loop()
+        t0 = time.perf_counter()
+        try:
+            if key.stream:
+                images = []
+                for r in reqs:
+                    images.append(await loop.run_in_executor(
+                        None, self.backend.execute_streamed, key, r.raw,
+                        self.config.stream_strips))
+            else:
+                batch = np.stack([r.raw for r in reqs])
+                images = await loop.run_in_executor(
+                    None, self.backend.execute, key, batch)
+        except Exception as e:
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+                self.metrics.observe_failure()
+            return
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.observe_batch(len(reqs), wall_ms, streamed=key.stream)
+        t_done = now()
+        for r, img in zip(reqs, images):
+            if not r.future.done():
+                r.future.set_result(np.asarray(img))
+            self.metrics.observe_done((t_done - r.t_submit) * 1e3)

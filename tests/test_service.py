@@ -1,0 +1,419 @@
+"""Focusing service: coalescing bit-identity, deadline flush,
+backpressure, the precision SNR gate, the streaming route, metrics
+artifacts, and sharded-backend parity."""
+import asyncio
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import validate_bench_doc, validate_bench_file, \
+    write_bench_json
+from repro.core.sar import build_pipeline, paper_targets, simulate_cached
+from repro.core.sar.geometry import test_scene as make_test_scene
+from repro.service import (
+    FocusService,
+    LocalBackend,
+    ServiceConfig,
+    ServiceOverloaded,
+    ShardedBackend,
+    SnrGateViolation,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+CFG = make_test_scene(128)
+TARGETS = paper_targets(CFG)
+
+def fast_backend():
+    # single-config backend: tests don't need the warm-time block sweep
+    return LocalBackend(sweep=((None, None),))
+
+
+def scene():
+    return simulate_cached(CFG, TARGETS)
+
+
+def reference(variant="fused3", **kw):
+    return np.asarray(build_pipeline(CFG, variant, **kw).run(
+        jnp.asarray(scene())))
+
+
+# ---------------------------------------------------------------------------
+# Coalescing semantics
+# ---------------------------------------------------------------------------
+
+def test_coalesced_batch_bit_identical_to_per_request_run():
+    """Four requests coalesced into ONE (4, na, nr) dispatch sequence must
+    reproduce per-request Pipeline.run bit-for-bit — batching is a kernel
+    grid extension, not a numerical rewrite."""
+    raw = scene()
+    ref = reference()
+    ref_half = np.asarray(build_pipeline(CFG, "fused3").run(
+        jnp.asarray(raw) * 0.5))
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=4, max_delay_ms=500.0),
+            backend=fast_backend())
+        await svc.start()
+        outs = await asyncio.gather(
+            svc.focus(raw, CFG), svc.focus(raw * 0.5, CFG),
+            svc.focus(raw, CFG), svc.focus(raw, CFG))
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert snap["batch_size_hist"] == {4: 1}, snap  # actually coalesced
+    assert np.array_equal(outs[0], ref)
+    assert np.array_equal(outs[1], ref_half)
+    assert np.array_equal(outs[2], ref)
+    assert np.array_equal(outs[3], ref)
+
+
+def test_partial_batch_pads_to_bucket_bit_identical():
+    """A 3-request batch pads to the B=4 bucket; the zero pad scene must
+    not perturb the real scenes' images."""
+    raw = scene()
+    ref = reference()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=3, max_delay_ms=500.0),
+            backend=fast_backend())
+        await svc.start()
+        outs = await asyncio.gather(*[svc.focus(raw, CFG) for _ in range(3)])
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert snap["batch_size_hist"] == {3: 1}
+    for o in outs:
+        assert np.array_equal(o, ref)
+
+
+def test_deadline_flush_fires_for_partial_batch():
+    """Two requests under max_batch=8 must not wait forever: the
+    max_delay deadline flushes the partial bucket."""
+    raw = scene()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=8, max_delay_ms=50.0),
+            backend=fast_backend())
+        await svc.start()
+        t0 = time.monotonic()
+        outs = await asyncio.gather(svc.focus(raw, CFG),
+                                    svc.focus(raw, CFG))
+        elapsed = time.monotonic() - t0
+        await svc.stop()
+        return outs, elapsed, svc.metrics.snapshot()
+
+    outs, elapsed, snap = asyncio.run(main())
+    assert snap["batch_size_hist"] == {2: 1}, snap
+    assert len(outs) == 2
+    # generous bound: 50 ms deadline + one small-scene batch + slack
+    assert elapsed < 30.0
+
+
+def test_requests_with_different_keys_do_not_coalesce():
+    raw = scene()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=4, max_delay_ms=50.0),
+            backend=fast_backend())
+        await svc.start()
+        a, b = await asyncio.gather(
+            svc.focus(raw, CFG, variant="fused3"),
+            svc.focus(raw, CFG, variant="omegak"))
+        await svc.stop()
+        return a, b, svc.metrics.snapshot()
+
+    a, b, snap = asyncio.run(main())
+    assert snap["batch_size_hist"] == {1: 2}, snap
+    assert np.array_equal(a, reference("fused3"))
+    assert np.array_equal(b, reference("omegak"))
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + SNR gate
+# ---------------------------------------------------------------------------
+
+class _GatedBackend:
+    """Backend that blocks until released — lets tests hold a batch in
+    flight while the queue fills behind it."""
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def warm(self, key, max_batch=4):
+        pass
+
+    def execute(self, key, batch):
+        assert self.release.wait(30)
+        return np.zeros_like(batch)
+
+    def execute_streamed(self, key, raw, strips=4):
+        assert self.release.wait(30)
+        return np.zeros_like(raw)
+
+
+def test_backpressure_rejects_past_queue_bound():
+    raw = scene()
+    backend = _GatedBackend()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=1, max_queue=2), backend=backend)
+        await svc.start()
+        t1 = asyncio.ensure_future(svc.focus(raw, CFG))
+        await asyncio.sleep(0.1)        # batch 1 now executing (blocked)
+        t2 = asyncio.ensure_future(svc.focus(raw, CFG))
+        t3 = asyncio.ensure_future(svc.focus(raw, CFG))
+        await asyncio.sleep(0.1)        # queue now at bound (2)
+        with pytest.raises(ServiceOverloaded):
+            await svc.focus(raw, CFG)
+        backend.release.set()
+        outs = await asyncio.gather(t1, t2, t3)
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert len(outs) == 3
+    assert snap["rejected"] == 1
+    assert snap["completed"] == 3
+
+
+def test_snr_gate_rejects_out_of_gate_precision():
+    raw = scene()
+
+    async def main(deviation):
+        svc = FocusService(
+            ServiceConfig(max_batch=1, snr_gate_db=0.1),
+            backend=fast_backend(),
+            precision_deviation=lambda p: deviation)
+        await svc.start()
+        try:
+            out = await svc.focus(raw, CFG, precision="bs16")
+        finally:
+            await svc.stop()
+        return out, svc.metrics.snapshot()
+
+    with pytest.raises(SnrGateViolation, match="0.1 dB gate"):
+        asyncio.run(main(0.5))
+
+    out, snap = asyncio.run(main(0.05))
+    assert snap["gate_rejected"] == 0
+    # the precision threads through to the compiled kernels
+    assert not np.array_equal(out, reference())
+    assert np.array_equal(
+        out, np.asarray(build_pipeline(CFG, "fused3",
+                                       precision="bs16").run(
+            jnp.asarray(raw))))
+
+
+def test_f32_requests_never_consult_the_gate():
+    raw = scene()
+
+    def boom(p):
+        raise AssertionError("gate consulted for f32")
+
+    async def main():
+        svc = FocusService(ServiceConfig(max_batch=1),
+                           backend=fast_backend(), precision_deviation=boom)
+        await svc.start()
+        out = await svc.focus(raw, CFG)
+        await svc.stop()
+        return out
+
+    assert np.array_equal(asyncio.run(main()), reference())
+
+
+def test_focus_rejected_when_service_not_running():
+    raw = scene()
+
+    async def main():
+        svc = FocusService(ServiceConfig(max_batch=1),
+                           backend=fast_backend())
+        with pytest.raises(RuntimeError, match="not running"):
+            await svc.focus(raw, CFG)          # never started
+        await svc.start()
+        out = await svc.focus(raw, CFG)
+        await svc.stop()
+        with pytest.raises(RuntimeError, match="not running"):
+            await svc.focus(raw, CFG)          # after stop
+        return out
+
+    assert np.array_equal(asyncio.run(main()), reference())
+
+
+def test_halo_schedule_rejects_unsupported_options():
+    """The halo schedule must refuse precision/turn_dtype rather than
+    silently serving unlabelled f32 results."""
+    from repro.core.sar.distributed import build_sharded
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="precision"):
+        build_sharded(CFG, "fused3", mesh, schedule="halo",
+                      precision="bf16")
+    with pytest.raises(ValueError, match="turn_dtype"):
+        build_sharded(CFG, "fused3", mesh, schedule="halo",
+                      turn_dtype=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Streaming route
+# ---------------------------------------------------------------------------
+
+def test_over_budget_scene_takes_streaming_route():
+    raw = scene()
+    ref = reference()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=4, max_delay_ms=200.0,
+                          device_budget_bytes=raw.nbytes - 1),
+            backend=fast_backend())
+        await svc.start()
+        outs = await asyncio.gather(svc.focus(raw, CFG),
+                                    svc.focus(raw, CFG))
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert snap["streamed"] == 2            # never coalesced
+    for o in outs:
+        assert np.array_equal(o, ref)       # streamed == in-memory
+
+
+# ---------------------------------------------------------------------------
+# Metrics artifact
+# ---------------------------------------------------------------------------
+
+def test_service_metrics_emit_valid_schema2_bench_doc(tmp_path):
+    raw = scene()
+
+    async def main():
+        svc = FocusService(ServiceConfig(max_batch=2, max_delay_ms=100.0),
+                           backend=fast_backend())
+        await svc.start()
+        await asyncio.gather(svc.focus(raw, CFG), svc.focus(raw, CFG))
+        await svc.stop()
+        return svc
+
+    svc = asyncio.run(main())
+    doc = svc.metrics.to_bench_doc(section="service_test")
+    validate_bench_doc(doc)                 # schema 2, ISO-8601 stamp
+    path = tmp_path / "BENCH_service_test.json"
+    svc.metrics.write_bench_json(str(path))
+    validate_bench_file(str(path))
+    snap = svc.metrics.snapshot()
+    assert snap["completed"] == 2
+    assert snap["latency_p99_ms"] >= snap["latency_p50_ms"] > 0
+
+
+def test_write_bench_json_schema2_and_validation(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    rows = [{"section": "s", "name": "n", "wall_ms": 1.0, "derived": ""}]
+    write_bench_json(path, rows, smoke=True)
+    doc = validate_bench_file(path)
+    assert doc["schema"] == 2 and "generated_unix" not in doc
+    with pytest.raises(ValueError, match="schema"):
+        validate_bench_doc({**doc, "schema": 1})
+    with pytest.raises(ValueError, match="ISO-8601"):
+        validate_bench_doc({**doc, "generated_utc": 1234.5})
+    with pytest.raises(ValueError, match="wall_ms"):
+        validate_bench_doc({**doc, "rows": [{"section": "s", "name": "n"}]})
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend
+# ---------------------------------------------------------------------------
+
+def test_sharded_backend_reachable_and_matches_local():
+    """The sharded backend through the service API (single host device:
+    a 1-device mesh — the wiring, specs, and collectives all execute)."""
+    raw = scene()
+    ref = reference()
+
+    async def main():
+        mesh = jax.make_mesh((1,), ("data",))
+        svc = FocusService(
+            ServiceConfig(backend="sharded", max_batch=2,
+                          max_delay_ms=200.0),
+            backend=ShardedBackend(mesh=mesh))
+        await svc.start()
+        outs = await asyncio.gather(svc.focus(raw, CFG),
+                                    svc.focus(raw, CFG))
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert snap["batch_size_hist"] == {2: 1}
+    for o in outs:
+        assert np.array_equal(o, ref)
+
+
+@pytest.mark.slow
+def test_sharded_backend_parity_8_devices():
+    """Subprocess (8 fake CPU devices): the service's sharded backend —
+    generic corner-turn lowering AND the halo schedule — vs the local
+    backend at <= 0.1 dB (the generic lowering is in fact bit-identical,
+    and reproduces hand-written corner2 exactly)."""
+    code = """
+import asyncio, numpy as np, jax, jax.numpy as jnp
+from repro.core.sar import build_pipeline, paper_targets, simulate_cached, metrics
+from repro.core.sar.geometry import test_scene
+from repro.core.sar.distributed import build_corner2, lower_pipeline
+from repro.service import FocusService, ServiceConfig, ShardedBackend
+
+cfg = test_scene(256)
+targets = paper_targets(cfg)
+raw = simulate_cached(cfg, targets)
+mesh = jax.make_mesh((8,), ("data",))
+
+local = np.asarray(build_pipeline(cfg, "fused3").run(jnp.asarray(raw)))
+
+# generic plan lowering == hand-written corner2, bit for bit
+pipe = build_pipeline(cfg, "fused3")
+gen = np.asarray(pipe.lower_sharded(mesh)(jnp.asarray(raw)))
+c2 = np.asarray(build_corner2(cfg, mesh)(jnp.asarray(raw)))
+assert np.array_equal(gen, c2), "generic lowering != corner2"
+assert np.array_equal(gen, local), "generic lowering != local pipeline"
+
+async def serve(schedule, variant):
+    svc = FocusService(
+        ServiceConfig(backend="sharded", max_batch=2, max_delay_ms=200.0),
+        backend=ShardedBackend(mesh=mesh, schedule=schedule))
+    await svc.start()
+    outs = await asyncio.gather(svc.focus(raw, cfg, variant=variant),
+                                svc.focus(raw, cfg, variant=variant))
+    await svc.stop()
+    return outs
+
+outs = asyncio.run(serve("corner2", "fused3"))
+for o in outs:
+    assert np.array_equal(o, local), "service sharded != local"
+
+# halo: paper-ordered RDA with one corner turn + ring-halo RCMC; parity
+# gate vs the local unfused reference
+un = np.asarray(build_pipeline(cfg, "unfused").run(jnp.asarray(raw)))
+outs_h = asyncio.run(serve("halo", "fused3"))
+for o in outs_h:
+    c = metrics.compare_pipelines(o, un, cfg, targets)
+    assert max(c["snr_delta_db"]) <= 0.1, c["snr_delta_db"]
+print("SERVICE_SHARDED_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC + os.pathsep + os.path.join(SRC, ".."))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SERVICE_SHARDED_OK" in r.stdout
