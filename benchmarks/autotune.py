@@ -1,202 +1,83 @@
-"""Per-(B, n) autotuner for the fused spectral dispatch.
+"""CLI shim over the repro.tuning subsystem (the former home of the
+per-(B, n) autotuner; the sweep, cost model, cache, and quality gate all
+live in src/repro/tuning now — see docs/tuning.md).
 
-The throughput of the four-step kernel is dominated by the factorization
-choice (which matmul shapes hit the MXU sweet spot), the line block
-(VMEM residency vs grid overhead) — see "Beating vDSP: A 138 GFLOPS Radix-8
-Stockham FFT on Apple Silicon" for the same effect on simdgroup MMA — and
-the matmul-operand precision ("Range, Not Precision", arXiv 2605.28451:
-block-scaled FP16 doubles FFT throughput at SAR-acceptable quality). This
-module sweeps ``(block, n1, n2[, n3], karatsuba[, precision])`` for a given
-batch size and FFT length, times the fused forward+inverse dispatch, and
-caches the fastest config in a JSON file so the plan compiler
-(repro.core.plan), benchmarks and examples reuse it without re-sweeping.
-
-Non-f32 precisions are admitted only if they pass the SNR-deviation gate:
-bench_quality.precision_snr_deviation must stay <= --snr-gate-db (0.1 dB
-default) on the point-target scene, so the tuner can never trade image
-quality for speed silently.
-
-The cache lives at $REPRO_AUTOTUNE_CACHE if set, else under the user cache
-directory ($XDG_CACHE_HOME or ~/.cache)/repro/autotune_cache.json — never
-inside the repo (and *.autotune_cache.json is gitignored regardless).
+What used to be an exhaustive ``itertools.product`` sweep here is now the
+cost-model-guided successive-halving search (`repro.tuning.search_kernel`):
+candidates are ranked by the analytic roofline model and only the
+promising fraction is ever timed. Results land in the shared
+device-fingerprinted cache ($REPRO_AUTOTUNE_CACHE, else
+($XDG_CACHE_HOME or ~/.cache)/repro/autotune_cache.json), where the plan
+compiler and the serving warm path pick them up.
 
   PYTHONPATH=src python -m benchmarks.autotune --n 512 4096 --batch 1 4
   PYTHONPATH=src python -m benchmarks.autotune --n 4096 \
       --precisions f32 bf16 bs16
 
-API:
+Back-compat API (dict in/out, as the pre-subsystem callers expect):
   best_config(n, batch)     -> cached-or-tuned kwargs for ops.spectral_op
-  autotune(n, batch, ...)   -> force a sweep, update the cache
-  spectral_kwargs(cfg)      -> the subset usable as **kwargs (block/n1/n2/
-                               n3/karatsuba/precision)
+  autotune(n, batch, ...)   -> force a guided search, update the cache
+  spectral_kwargs(cfg)      -> the subset usable as **kwargs
+  factorizations(n)         -> candidate mixed-radix splits
 """
 from __future__ import annotations
 
 import argparse
-import functools
-import itertools
-import json
-import os
-from typing import Optional
 
-import numpy as np
-import jax
-import jax.numpy as jnp
+from benchmarks.common import emit, header
+from repro import tuning
 
-from benchmarks.common import emit, header, timeit
-from repro.kernels import ops
-from repro.kernels.fft4step import MAX_FACTOR, default_factorization
-
-
-def default_cache_path() -> str:
-    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
-    if env:
-        return env
-    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
-        os.path.expanduser("~"), ".cache")
-    return os.path.join(base, "repro", "autotune_cache.json")
-
-
+default_cache_path = tuning.default_cache_path
 CACHE_PATH = default_cache_path()
+factorizations = tuning.factorizations
 
-_TUNE_KEYS = ("block", "n1", "n2", "n3", "karatsuba", "precision")
-
-
-def _load_cache(path: str) -> dict:
-    if os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
-    return {}
+_TUNE_KEYS = tuning.SPECTRAL_KEYS
 
 
-def _save_cache(cache: dict, path: str) -> None:
-    d = os.path.dirname(path)
-    if d:
-        os.makedirs(d, exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(cache, f, indent=2, sort_keys=True)
-    os.replace(tmp, path)
-
-
-def _key(n: int, batch: int) -> str:
-    # keyed by backend too: interpret-mode CPU timings must never be
-    # mistaken for a tuned TPU (Mosaic) config
-    return f"{jax.default_backend()}_B{batch}_n{n}"
-
-
-def factorizations(n: int) -> list[tuple[int, ...]]:
-    """Candidate mixed-radix splits: every 2-factor (and, past 128*128,
-    3-factor) decomposition into powers of two <= 128, largest first."""
-    p = n.bit_length() - 1
-    out: list[tuple[int, ...]] = []
-    if n <= MAX_FACTOR * MAX_FACTOR:
-        for p1 in range(p // 2, p + 1):
-            n1, n2 = 1 << p1, 1 << (p - p1)
-            if n1 <= MAX_FACTOR and n2 <= MAX_FACTOR and n2 >= 1:
-                out.append((n1, n2))
-    else:
-        for p1 in range(1, p - 1):
-            for p2 in range(1, p - p1):
-                fs = (1 << p1, 1 << p2, 1 << (p - p1 - p2))
-                if all(f <= MAX_FACTOR for f in fs) and fs[0] >= fs[1] >= fs[2]:
-                    out.append(fs)
-    return out or [default_factorization(n)]
-
-
-def candidates(n: int, blocks=(4, 8, 16),
-               precisions=("f32",)) -> list[dict]:
-    cands = []
-    for fs, blk, kara, prec in itertools.product(
-            factorizations(n), blocks, (False, True), precisions):
-        c = {"block": blk, "karatsuba": kara,
-             "n1": fs[0], "n2": fs[1], "n3": fs[2] if len(fs) > 2 else None,
-             "precision": prec}
-        cands.append(c)
-    return cands
+def candidates(n: int, blocks=(4, 8, 16), precisions=("f32",)) -> list[dict]:
+    return [c.to_dict() for c in tuning.candidates(n, blocks=blocks,
+                                                   precisions=precisions)]
 
 
 def spectral_kwargs(cfg: dict) -> dict:
     """The tuned entries usable directly as ops.spectral_op kwargs."""
-    return {k: cfg.get(k) for k in _TUNE_KEYS}
+    return tuning.KernelConfig.from_dict(cfg).spectral_kwargs()
 
 
-@functools.lru_cache(maxsize=None)
-def _precision_snr_dev_db(precision: str) -> float:
-    """SNR-deviation of focusing the point-target scene with `precision`
-    vs f32 (the quality gate; measured once per precision per process)."""
-    if precision in (None, "f32"):
-        return 0.0
-    from benchmarks import bench_quality
-    return bench_quality.precision_snr_deviation(precision)
+def _cache(cache_path):
+    return tuning.get_cache(cache_path) if cache_path else None
 
 
 def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
-             cache_path: str = CACHE_PATH, verbose: bool = False,
+             cache_path: str = None, verbose: bool = False,
              precisions=("f32",), snr_gate_db: float = 0.1) -> dict:
-    """Sweep candidates for the fused fwd+inv dispatch on (batch, lines, n)
-    scenes; persist and return the fastest config. Candidates with a
-    non-f32 precision must pass the SNR-deviation gate (<= snr_gate_db on
-    the point-target scene) before they may win."""
-    rng = np.random.default_rng(0)
-    shape = (batch, lines, n)
-    xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-    xi = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-    hr = jnp.asarray(rng.standard_normal(n), jnp.float32)
-    hi = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    """Force a guided search for (n, batch); persist and return the
+    winning config as a dict (plus its measured ``seconds``)."""
+    key = tuning.TuneKey.kernel(n, batch, lines=lines)
 
-    best: Optional[dict] = None
-    gated: dict[str, bool] = {}
-    for cand in candidates(n, precisions=precisions):
-        if lines % cand["block"] and cand["block"] > lines:
-            continue
-        prec = cand["precision"]
-        if prec not in (None, "f32"):
-            if prec not in gated:
-                dev = _precision_snr_dev_db(prec)
-                gated[prec] = dev <= snr_gate_db
-                if verbose or not gated[prec]:
-                    emit(f"autotune_gate_{prec}", 0.0,
-                         f"snr_dev_db={dev:.4f};gate={snr_gate_db};"
-                         f"admitted={gated[prec]}")
-            if not gated[prec]:
-                continue
-        kw = spectral_kwargs(cand)
-        try:
-            t = timeit(lambda: ops.fused_fft_mult_ifft_rows(
-                xr, xi, hr, hi, **kw), warmup=1, iters=iters)
-        except Exception:                      # shape/VMEM-infeasible config
-            continue
-        if verbose:
-            emit(f"autotune_B{batch}_n{n}_"
-                 f"{cand['n1']}x{cand['n2']}"
-                 f"{'x%d' % cand['n3'] if cand['n3'] else ''}"
-                 f"_blk{cand['block']}{'_kara' if cand['karatsuba'] else ''}"
-                 f"_{prec}",
-                 t)
-        if best is None or t < best["seconds"]:
-            best = dict(cand, seconds=t)
-    assert best is not None, f"no feasible config for n={n}"
-    cache = _load_cache(cache_path)
-    cache[_key(n, batch)] = best
-    _save_cache(cache, cache_path)
-    return best
+    def log(cand, value, extra):
+        if isinstance(cand, str):                    # gate report
+            emit(f"autotune_{cand}", 0.0,
+                 f"snr_dev_db={value:.4f};admitted={extra}")
+        elif verbose:
+            n3 = f"x{cand.n3}" if cand.n3 else ""
+            emit(f"autotune_B{key.batch}_n{n}_{cand.n1}x{cand.n2}{n3}"
+                 f"_blk{cand.block}{'_kara' if cand.karatsuba else ''}"
+                 f"_{cand.precision}", value, f"rung={extra}")
+
+    result = tuning.search_kernel(
+        key, precisions=tuple(precisions), snr_gate_db=snr_gate_db,
+        rungs=(1, iters), cache=_cache(cache_path), log=log)
+    return dict(result.config.to_dict(), seconds=result.seconds)
 
 
-def best_config(n: int, batch: int = 1, cache_path: str = CACHE_PATH,
+def best_config(n: int, batch: int = 1, cache_path: str = None,
                 tune_missing: bool = True) -> dict:
-    """Cached best config for (n, batch); sweeps on first use. Falls back
-    to the library default factorization if tuning is disabled."""
-    cache = _load_cache(cache_path)
-    hit = cache.get(_key(n, batch))
-    if hit is not None:
-        return hit
-    if tune_missing:
-        return autotune(n, batch, cache_path=cache_path)
-    fs = default_factorization(n)
-    return {"block": 8, "n1": fs[0], "n2": fs[1],
-            "n3": fs[2] if len(fs) > 2 else None, "karatsuba": False,
-            "precision": None}
+    """Cached best config for (n, batch) as a dict; guided search on
+    first use (library defaults when tuning is disabled)."""
+    cfg = tuning.best_config(n, batch, tune_missing=tune_missing,
+                             cache=_cache(cache_path))
+    return cfg.to_dict()
 
 
 def main() -> None:
@@ -215,11 +96,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     for n in args.n:
         for b in args.batch:
-            header(f"autotune n={n} B={b}")
+            header(f"autotune n={n} B={b} "
+                   f"(guided search, device={tuning.device_fingerprint()})")
             best = autotune(n, b, lines=args.lines, verbose=args.verbose,
                             precisions=tuple(args.precisions),
                             snr_gate_db=args.snr_gate_db)
-            emit(f"autotune_best_B{b}_n{n}", best["seconds"],
+            emit(f"autotune_best_B{tuning.bucket_batch(b)}_n{n}",
+                 best["seconds"],
                  f"n1={best['n1']};n2={best['n2']};n3={best['n3']};"
                  f"block={best['block']};karatsuba={best['karatsuba']};"
                  f"precision={best['precision']}")

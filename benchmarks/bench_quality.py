@@ -10,22 +10,10 @@ from benchmarks.common import emit, header
 from repro.core.sar import build_pipeline, metrics, paper_targets, \
     simulate_cached
 from repro.core.sar.geometry import paper_scene, test_scene
-
-
-def precision_snr_deviation(precision: str, n: int = 256,
-                            variant: str = "fused3") -> float:
-    """Max per-target SNR deviation (dB) of focusing the 5-point-target
-    scene with `precision` matmul operands vs exact f32 — the autotuner's
-    quality gate ("Range, Not Precision": the gate, not the throughput,
-    decides whether a narrow-float config is admissible)."""
-    cfg = test_scene(n)
-    targets = paper_targets(cfg)
-    raw = jnp.asarray(simulate_cached(cfg, targets))
-    base = np.asarray(build_pipeline(cfg, variant, tune="off").run(raw))
-    img = np.asarray(build_pipeline(cfg, variant, tune="off",
-                                    precision=precision).run(raw))
-    c = metrics.compare_pipelines(img, base, cfg, targets)
-    return float(max(c["snr_delta_db"]))
+# the gate itself lives in-library so the tuner and the serving admission
+# check can use it without depending on benchmarks/; re-exported here for
+# the paper tables and back-compat
+from repro.tuning.quality import precision_snr_deviation  # noqa: F401
 
 
 def run(n: int = 512, full: bool = False):

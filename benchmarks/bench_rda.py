@@ -21,8 +21,8 @@ def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4),
                 smoke: bool = False):
     """table_2b: per-scene latency of the batched pipeline vs B=1.
 
-    The kernel-level autotuner (benchmarks/autotune.py) picks the
-    factorization; the scene-level (block, col_block) pair is swept here on
+    The kernel-level tuner (repro.tuning, via the benchmarks/autotune.py
+    shim) picks the factorization; the scene-level (block, col_block) pair is swept here on
     the real pipeline at B=max — interpret-mode CPU timing is too noisy and
     too shape-dependent for a toy-scene cache to transfer. Both B points
     are then reported with the same winning config."""

@@ -1,0 +1,167 @@
+"""table_7 — tuner quality: cost-model-guided search vs exhaustive sweep.
+
+For each reference (n, batch) point this bench runs BOTH searches on the
+same workload (the fused fwd+inv rows dispatch):
+
+* **exhaustive** — time every feasible candidate, the pre-subsystem
+  benchmarks/autotune.py behavior;
+* **guided** — `repro.tuning.search_kernel`: roofline-cost ranking,
+  measure only the top fraction, successive halving.
+
+and records, per point: each search's winner + wall time, how many
+candidates each actually timed (the guided search must time strictly
+fewer — the acceptance bar), whether the winners agree, the cost model's
+predicted rank of the measured-exhaustive winner, and a Spearman rank
+correlation between predicted and measured orderings (predicted-vs-
+measured rank quality over the whole feasible space).
+
+Also the CI tuner smoke (``python -m benchmarks.bench_tuning --smoke``):
+a cold-cache guided search at 256^2 that asserts a config LANDS in the
+persistent cache and the cache document schema-validates.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit, header
+from repro import tuning
+from repro.tuning import cost
+
+
+def _spearman(pred_order, measured):
+    """Spearman rho between the cost model's ordering and measured times.
+    pred_order: configs cheapest-first; measured: {config: seconds}."""
+    cands = [c for c in pred_order if c in measured]
+    if len(cands) < 3:
+        return float("nan")
+    pred_rank = {c: i for i, c in enumerate(cands)}
+    meas_sorted = sorted(cands, key=lambda c: measured[c])
+    meas_rank = {c: i for i, c in enumerate(meas_sorted)}
+    d2 = sum((pred_rank[c] - meas_rank[c]) ** 2 for c in cands)
+    k = len(cands)
+    return 1.0 - 6.0 * d2 / (k * (k * k - 1))
+
+
+def exhaustive_sweep(key, precisions=("f32",), iters=2):
+    """Time EVERY candidate the kernel build accepts — the legacy
+    autotune policy, deliberately INDEPENDENT of the cost model's
+    feasibility cut so table_7 can catch a model cut that excludes the
+    true winner (such a config shows up as predicted_rank -1).
+    Returns (best_config, best_seconds, timed_count, {config: seconds})."""
+    measure = tuning.kernel_measure(key)
+    best = None
+    measured: dict = {}
+    for cand in tuning.candidates(key.n, precisions=precisions):
+        try:
+            t = measure(cand, iters)
+        except Exception:           # shape/VMEM-infeasible at trace time
+            continue
+        measured[cand] = t
+        if best is None or t < best[1]:
+            best = (cand, t)
+    assert best is not None, f"no feasible config for {key}"
+    return best[0], best[1], len(measured), measured
+
+
+def run_point(n: int, batch: int, lines: int = 16,
+              precisions=("f32",)) -> dict:
+    """One reference point: exhaustive vs guided, emitted as bench rows.
+
+    Two guided passes are recorded: a LIVE one (its own fresh timings —
+    the honest search wall time), and a POLICY replay against the
+    exhaustive pass's memoized measurements, so `same_winner` compares
+    the search policies on ONE shared set of numbers instead of two
+    independent noisy timing runs (interpret-mode CPU timings jitter more
+    than the gap between near-tied configs)."""
+    key = tuning.TuneKey.kernel(n, batch, lines=lines)
+
+    t0 = time.perf_counter()
+    ex_cfg, ex_t, ex_timed, measured = exhaustive_sweep(
+        key, precisions=precisions, iters=3)
+    ex_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    live = tuning.search_kernel(key, precisions=precisions, persist=False)
+    g_wall = time.perf_counter() - t0
+
+    replay = tuning.search_kernel(
+        key, precisions=precisions, persist=False,
+        measure=lambda c, iters: measured[c])
+
+    ranked = cost.rank(list(measured), key)
+    pred_rank_of_winner = ranked.index(ex_cfg) if ex_cfg in ranked else -1
+    rho = _spearman(ranked, measured)
+    same = replay.config == ex_cfg
+
+    def _fmt(c):
+        return (f"{c.n1}x{c.n2}{'x%d' % c.n3 if c.n3 else ''}"
+                f"_blk{c.block}{'_kara' if c.karatsuba else ''}"
+                f"_{c.precision}")
+
+    emit(f"tuning_exhaustive_B{key.batch}_n{n}", ex_t,
+         f"winner={_fmt(ex_cfg)};timed={ex_timed};"
+         f"search_wall_ms={ex_wall * 1e3:.1f}")
+    emit(f"tuning_guided_B{key.batch}_n{n}", live.seconds,
+         f"winner={_fmt(live.config)};timed={live.measured};"
+         f"search_wall_ms={g_wall * 1e3:.1f};space={live.space};"
+         f"fewer_timed={live.measured < ex_timed}")
+    emit(f"tuning_policy_B{key.batch}_n{n}", replay.seconds,
+         f"winner={_fmt(replay.config)};timed={replay.measured};"
+         f"same_winner={same};"
+         f"fewer_timed={replay.measured < ex_timed}")
+    emit(f"tuning_rank_quality_B{key.batch}_n{n}", 0.0,
+         f"spearman_rho={rho:.3f};"
+         f"predicted_rank_of_measured_best={pred_rank_of_winner};"
+         f"feasible={len(ranked)}")
+    return {"same_winner": same,
+            "fewer_timed": replay.measured < ex_timed,
+            "guided_timed": replay.measured, "exhaustive_timed": ex_timed}
+
+
+def run(full: bool = False, smoke: bool = False) -> None:
+    points = ((256, 1), (512, 4)) if not full else ((1024, 1), (4096, 4))
+    if smoke:
+        points = ((128, 1), (256, 2))
+    header(f"table_7: guided vs exhaustive tuning search "
+           f"(device={tuning.device_fingerprint()})")
+    for n, b in points:
+        run_point(n, b)
+
+
+def smoke_check(n: int = 256, batch: int = 1) -> None:
+    """The CI tuner smoke: cold-cache guided search at n^2; assert the
+    winner LANDS in the persistent cache and the document validates."""
+    path = tuning.default_cache_path()
+    print(f"# tuner smoke: cold-cache search n={n} B={batch} -> {path}",
+          flush=True)
+    key = tuning.TuneKey.kernel(n, batch)
+    res = tuning.search_kernel(key)          # persists to the default cache
+    cache = tuning.TuneCache(path)           # fresh view: re-reads the file
+    doc = tuning.validate_cache_doc(cache.doc())
+    entry = cache.get_entry(key)
+    assert entry is not None, f"search did not land in the cache for {key}"
+    assert tuning.KernelConfig.from_dict(entry["config"]) == res.config
+    print(f"# tuner smoke OK: {key.encode()} -> {entry['config']} "
+          f"({len(doc['entries'])} entries, schema {doc['schema']})",
+          flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tuner smoke: cold-cache search + cache "
+                         "schema assertion (set REPRO_AUTOTUNE_CACHE to "
+                         "a throwaway path for a genuinely cold run)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke_check(args.n, args.batch)
+    else:
+        print("name,us_per_call,derived")
+        run_point(args.n, args.batch)
+
+
+if __name__ == "__main__":
+    main()

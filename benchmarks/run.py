@@ -5,9 +5,11 @@
   PYTHONPATH=src python -m benchmarks.run --only table_2
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI smoke + artifacts
 
-Every run also writes machine-readable BENCH_fft.json / BENCH_rda.json
-(wall-ms per variant/size/batch + git SHA + backend) so the perf
-trajectory is tracked across PRs; CI uploads them as workflow artifacts.
+Every run also writes machine-readable BENCH_fft.json / BENCH_rda.json /
+BENCH_serve.json / BENCH_tuning.json (wall-ms per variant/size/batch +
+git SHA + backend; BENCH_tuning records guided-search wall time and
+predicted-vs-measured rank quality) so the perf trajectory is tracked
+across PRs; CI uploads them as workflow artifacts.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from benchmarks import (
     bench_quality,
     bench_rda,
     bench_serve,
+    bench_tuning,
 )
 from benchmarks.common import take_records, validate_bench_file, \
     write_bench_json
@@ -33,7 +36,8 @@ def main() -> None:
                          "sweeps) that still writes the BENCH_*.json "
                          "artifacts")
     ap.add_argument("--only", default=None,
-                    help="table_1|table_2|table_3|table_4|table_5|table_6")
+                    help="table_1|table_2|table_3|table_4|table_5|table_6|"
+                         "table_7")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -65,6 +69,10 @@ def main() -> None:
         bench_serve.run(full=args.full, smoke=args.smoke)
         write_bench_json("BENCH_serve.json", take_records(), **meta)
         written.append("BENCH_serve.json")
+    if want("table_7"):
+        bench_tuning.run(full=args.full, smoke=args.smoke)
+        write_bench_json("BENCH_tuning.json", take_records(), **meta)
+        written.append("BENCH_tuning.json")
     if args.smoke:
         # CI uploads these as workflow artifacts — refuse to hand it a
         # malformed document (schema 2: versioned, ISO-8601 stamped).

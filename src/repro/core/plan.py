@@ -20,9 +20,10 @@ Compiler/executor responsibilities:
   atoms compose into one kernel filter: shared×shared → shared,
   shared×full → full, outer×outer → rank-(K₁+K₂) outer,
   shared×outer → shared_outer, full×outer → full.
-* **Tuning** — per-dispatch ``(block, n1, n2, n3, karatsuba, precision)``
-  configs are pulled from benchmarks/autotune.py's cache at compile time
-  (never re-swept here; ``tune="off"`` skips the lookup entirely).
+* **Tuning** — per-dispatch :class:`repro.tuning.KernelConfig` records are
+  pulled from the repro.tuning cache at compile time (device-fingerprinted,
+  batch-bucketed; never re-swept here — ``tune="off"`` skips the lookup
+  entirely).
 * **Filter caching** — materialized+composed filter tensors are cached per
   ``(SceneConfig, plan, fuse, backend)``, and the underlying host-side
   float64 filter math per ``(SceneConfig, params, filter_name)``, so
@@ -64,6 +65,7 @@ from repro.kernels.fft4step import (
     resolve_precision,
 )
 from repro.kernels.transpose import transpose as tiled_transpose
+from repro.tuning import KernelConfig, cached_config
 
 BACKEND_PALLAS = "pallas"   # fused single-dispatch Pallas kernels
 BACKEND_XLA = "xla"         # one jnp op per atom (the unfused oracle)
@@ -565,20 +567,12 @@ class Pipeline:
 # The compiler
 # ---------------------------------------------------------------------------
 
-def _tuned_config(n: int, batch: int) -> dict:
-    """Best-known kernel config for (n, batch) from the autotune cache.
-    Never triggers a sweep; returns {} when the cache (or the benchmarks
-    package) is unavailable."""
-    try:
-        from benchmarks import autotune
-    except Exception:
-        return {}
-    try:
-        best = autotune.best_config(n, batch, tune_missing=False)
-    except Exception:
-        return {}
-    keys = ("block", "n1", "n2", "n3", "karatsuba", "precision")
-    return {k: best.get(k) for k in keys if best.get(k) is not None}
+def _tuned_config(n: int, batch: int) -> KernelConfig:
+    """Best-known kernel config for (n, batch) from the repro.tuning
+    cache (device-fingerprinted; batch normalized to its serving bucket).
+    Never triggers a sweep — compile time is lookup-only; an empty
+    KernelConfig (all defaults) on a miss."""
+    return cached_config(n, batch) or KernelConfig()
 
 
 def _payload_to_device(mode: str, arrays: tuple, axis: int,
@@ -625,34 +619,27 @@ def _make_spectral_step(group, mode, arrays, *, cfg, transposed, backend,
     name = group[0].stage.name
 
     # per-dispatch kernel config: explicit compile args > stage precision >
-    # autotuned cache entry > library defaults
+    # tuned cache entry > library defaults
     tuned = _tuned_config(n, opts["batch"]) if (
-        backend == BACKEND_PALLAS and opts["tune"] != "off") else {}
+        backend == BACKEND_PALLAS and opts["tune"] != "off") else \
+        KernelConfig()
     fkw = opts["fft_kw"] if axis == 1 else None
     if fkw:
-        tuned = dict(tuned)
-        # an explicit factorization replaces the cached one wholesale —
-        # mixing factors from two configs would break n = n1*n2[*n3]
-        if any(k in fkw for k in ("n1", "n2", "n3")):
-            for k in ("n1", "n2", "n3"):
-                tuned[k] = fkw.get(k)
-        for k in ("block", "karatsuba", "precision"):
-            if fkw.get(k) is not None:
-                tuned[k] = fkw[k]
+        tuned = tuned.merge_overrides(fkw)
     if phys_axis == 1:
-        block = opts["block"] or tuned.get("block") or 8
+        block = opts["block"] or tuned.block or 8
     else:
         block = opts["col_block"] or 128
     stage_prec = next((a.stage.precision for a in group
                        if a.stage.precision is not None), None)
     precision = resolve_precision(
-        opts["precision"] or stage_prec or tuned.get("precision")).name
+        opts["precision"] or stage_prec or tuned.precision).name
 
     kernel_kw = dict(
         axis=phys_axis, fwd=fwd, inv=inv, filter_mode=mode, block=block,
         fft_impl=opts["fft_impl"], interpret=opts["interpret"],
-        precision=precision, n1=tuned.get("n1"), n2=tuned.get("n2"),
-        n3=tuned.get("n3"), karatsuba=bool(tuned.get("karatsuba")),
+        precision=precision, n1=tuned.n1, n2=tuned.n2,
+        n3=tuned.n3, karatsuba=bool(tuned.karatsuba),
     )
     filter_kw = _payload_to_device(mode, arrays, axis, transposed)
 
@@ -763,17 +750,18 @@ def compile_plan(
 
     backend: 'pallas' (fused dispatches) or 'xla' (jnp oracle ops).
     fuse: merge adjacent compatible atoms into single dispatches.
-    batch: scene-batch size the autotuned configs are *looked up* for;
+    batch: scene-batch size the tuned configs are *looked up* for
+      (normalized to the serving power-of-two bucket by repro.tuning);
       it does not restrict the shapes the pipeline accepts.
     block/col_block: line blocks for rows/columns dispatches (None = the
       autotuned or library default).
     precision: global matmul-operand policy override for every spectral
       stage (see fft4step.PRECISIONS); per-stage ``Stage.precision`` wins
       over the autotune cache but not over this.
-    tune: 'cached' pulls per-dispatch kernel configs from the autotune
-      cache; 'off' uses library defaults.
+    tune: 'cached' pulls per-dispatch kernel configs from the
+      repro.tuning cache; 'off' uses library defaults.
     fft_kw: explicit config for range-axis (axis=1) dispatches — e.g. a
-      just-measured factorization from benchmarks/autotune.py.
+      just-measured factorization from a repro.tuning search.
 
     Cache behaviour: composed filter payloads are served from the bounded
     ``(cfg, plan, fuse, backend)`` payload cache and the underlying host

@@ -15,8 +15,8 @@ transpose-free plan over azimuth strips of a host-resident scene,
 overlapping strip transfer with compute (bit-identical to `run`).
 
 Kernel tuning: the compiler pulls per-dispatch `(block, n1, n2, n3,
-karatsuba, precision)` configs from benchmarks/autotune.py's cache at
-compile time; pass `fft_kw=...` to pin the range-axis config explicitly or
+karatsuba, precision)` configs from the repro.tuning cache at
+compile time (device-fingerprinted, batch-bucketed); pass `fft_kw=...` to pin the range-axis config explicitly or
 `precision="bf16"|"bs16"` to override the matmul-operand policy globally.
 
 Variants

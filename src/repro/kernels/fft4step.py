@@ -48,9 +48,11 @@ Mixed-radix factorization rules
     twiddle, then a four-step FFT of the remaining length), so lengths
     beyond 128*128 still map onto dense MXU matmuls instead of erroring.
 
-Explicit ``n1``/``n2``/``n3`` override the default (the autotuner in
-benchmarks/autotune.py sweeps them per (B, n) together with ``block`` and
-``karatsuba`` and caches the fastest config).
+Explicit ``n1``/``n2``/``n3`` override the default (the repro.tuning
+subsystem sweeps them per (B, n) together with ``block``, ``karatsuba``
+and ``precision``, and caches the fastest config per device fingerprint;
+``build_spectral_call`` also accepts a whole ``repro.tuning.KernelConfig``
+via its ``config`` parameter).
 
 Everything is validated in interpret mode against kernels/ref.py (pure jnp).
 """
@@ -575,8 +577,14 @@ def _flops_per_line(spec: SpectralSpec) -> float:
 
 
 def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
-                        interpret: bool = False):
+                        interpret: bool = False, config=None):
     """Returns fn(xr, xi, *filter_args) -> (yr, yi) as a single pallas_call.
+
+    ``config`` is an optional :class:`repro.tuning.KernelConfig`: its
+    non-None knobs (block, n1/n2/n3, karatsuba, precision) are applied on
+    top of ``spec`` before the call is built — the one config path from
+    the tuning subsystem into the kernel layer. (Duck-typed through
+    ``config.apply(spec)``; kernels do not import repro.tuning.)
 
     Rows pipeline: x is (B, lines, N), cols pipeline: x is (B, N, lines).
     The grid runs over (batch-blocks, line-blocks) with each grid step
@@ -586,6 +594,8 @@ def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
     when Bb * L * N would overflow VMEM). Filters are 2-D and batch-shared
     (every scene uses the same SceneConfig filters).
     """
+    if config is not None:
+        spec = config.apply(spec)
     n = spec.n
     L = spec.block
     if lines % L:

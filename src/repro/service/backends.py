@@ -7,12 +7,17 @@ shipped:
 
 ``local``    One-device execution through the warm compiled-pipeline
              cache (`core.plan.cached_pipeline`): per BatchKey, ONE
-             Pipeline whose jit traces, filter payloads, and autotune
+             Pipeline whose jit traces, filter payloads, and tuned
              configs persist across requests. `warm()` optionally sweeps
              a few (block, col_block) line-block configs on the real
              batched pipeline and pins the winner — interpret-mode CPU
-             timing is too shape-dependent for the kernel autotune cache
+             timing is too shape-dependent for the kernel-level cache
              alone (same rationale as benchmarks/bench_rda.run_batched).
+             The sweep runs through `repro.tuning.measured_search` and
+             its winner persists to the shared device-fingerprinted
+             tuning cache under a pipeline-kind TuneKey, so serving
+             warms survive process restarts: the next process's `warm()`
+             is a cache hit and pays only the jit traces.
 
 ``sharded``  Multi-device execution via the shard_map corner-turn
              lowering (`core.sar.distributed.build_sharded`): schedule
@@ -34,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import plan as planlib
 from repro.service.queue import BatchKey
+from repro import tuning
 
 
 def _resolve_blocks(cfg, block: Optional[int], col_block: Optional[int]):
@@ -45,13 +51,15 @@ def _resolve_blocks(cfg, block: Optional[int], col_block: Optional[int]):
     return block, col_block
 
 
-def _bucket(b: int) -> int:
-    """Batch-size buckets are powers of two: every distinct batch shape
-    costs one jit trace (hundreds of ms), so a partial batch pads with
-    zero scenes up to the next pre-traced bucket instead of compiling a
-    fresh executable mid-serving. Zero scenes are numerically inert
-    (every stage maps 0 -> 0) and their rows are sliced off the reply."""
-    return 1 << max(0, b - 1).bit_length()
+# Batch-size buckets are powers of two: every distinct batch shape costs
+# one jit trace (hundreds of ms), so a partial batch pads with zero
+# scenes up to the next pre-traced bucket instead of compiling a fresh
+# executable mid-serving. Zero scenes are numerically inert (every stage
+# maps 0 -> 0) and their rows are sliced off the reply. The SAME buckets
+# key the tuning cache (tuning.TuneKey normalizes batch through this), so
+# a padded batch always looks up the config tuned for the shape that
+# actually runs.
+_bucket = tuning.bucket_batch
 
 
 def _pad_batch(batch: np.ndarray) -> np.ndarray:
@@ -69,8 +77,9 @@ class LocalBackend:
     name = "local"
 
     def __init__(self, sweep: Sequence[Tuple[Optional[int], Optional[int]]]
-                 = ((None, None), (32, -1))):
+                 = ((None, None), (32, -1)), tune_cache=None):
         self.sweep = tuple(sweep)
+        self._tune_cache = tune_cache       # None -> the shared default
         self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
         self._fns: Dict[BatchKey, callable] = {}
 
@@ -91,27 +100,56 @@ class LocalBackend:
             self._fns[key] = self._pipeline(key).jitted()
         return self._fns[key]
 
+    def _tune_key(self, key: BatchKey, max_batch: int) -> "tuning.TuneKey":
+        cfg = key.scene
+        return tuning.TuneKey.pipeline(
+            variant=key.variant, na=cfg.na, nr=cfg.nr, batch=max_batch,
+            precision=key.precision)
+
     def warm(self, key: BatchKey, max_batch: int = 4) -> None:
         """Pre-pull everything a request would otherwise pay for: compile
-        the plan (materializing filters + autotune configs), sweep the
-        line-block configs on a B=max_batch scene batch, and pre-trace
+        the plan (materializing filters + tuned kernel configs), resolve
+        the (block, col_block) pipeline config — from the shared tuning
+        cache when a previous process already swept this key, else by
+        running the sweep through `repro.tuning.measured_search` on a
+        B=max_batch scene batch and persisting the winner — and pre-trace
         the jit executable for every power-of-two batch bucket up to
         max_batch (partial batches pad to a bucket at execute time)."""
         cfg = key.scene
         zeros = jnp.zeros((_bucket(max_batch), cfg.na, cfg.nr),
                           jnp.complex64)
         if len(self.sweep) > 1 and key not in self._best:
-            best = None
-            for blk, cb in self.sweep:
-                self._best[key] = (blk, cb)
-                f = self._pipeline(key, batch=max_batch).jitted()
-                jax.block_until_ready(f(zeros))       # compile
-                t0 = time.perf_counter()
-                jax.block_until_ready(f(zeros))
-                t = time.perf_counter() - t0
-                if best is None or t < best[0]:
-                    best = (t, blk, cb)
-            self._best[key] = (best[1], best[2])
+            tune_cache = self._tune_cache or tuning.get_cache()
+            tkey = self._tune_key(key, max_batch)
+            try:
+                hit = tune_cache.get(tkey)
+            except Exception:
+                hit = None    # corrupt/foreign-schema file: fall back to
+                              # the in-process sweep, never fail warm-up
+            if hit is not None:
+                self._best[key] = (hit.block, hit.col_block)
+            else:
+                def measure(cand, iters):
+                    blk, cb = cand
+                    self._best[key] = (blk, cb)
+                    f = self._pipeline(key, batch=max_batch).jitted()
+                    jax.block_until_ready(f(zeros))   # compile
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(f(zeros))
+                    return time.perf_counter() - t0
+
+                best, seconds, _ = tuning.measured_search(
+                    self.sweep, measure, rungs=(1,))
+                self._best[key] = best
+                try:
+                    tune_cache.put(
+                        tkey,
+                        tuning.KernelConfig(block=best[0],
+                                            col_block=best[1]),
+                        seconds=seconds, source="sweep")
+                except Exception:
+                    pass      # read-only cache dir: the sweep result still
+                              # serves this process, it just won't persist
         f = self._fn(key)
         b = 1
         while b <= zeros.shape[0]:

@@ -21,6 +21,7 @@ Request lifecycle (docs/serving.md has the full walkthrough):
 from __future__ import annotations
 
 import asyncio
+import concurrent.futures
 import dataclasses
 import math
 import time
@@ -76,11 +77,12 @@ class ServiceConfig:
 
 def _default_precision_deviation(precision: str) -> float:
     """Measured SNR deviation (dB) for a precision policy, from the
-    benchmark quality harness. Fails CLOSED: if the harness is not
-    importable the deviation is +inf and every non-f32 request is
-    rejected — a service must never silently skip its quality gate."""
+    in-library quality harness (repro.tuning.quality — the same gate the
+    kernel tuner applies). Fails CLOSED: if the harness is not importable
+    the deviation is +inf and every non-f32 request is rejected — a
+    service must never silently skip its quality gate."""
     try:
-        from benchmarks.bench_quality import precision_snr_deviation
+        from repro.tuning.quality import precision_snr_deviation
     except Exception:
         return math.inf
     return precision_snr_deviation(precision)
@@ -108,6 +110,14 @@ class FocusService:
                                      or _default_precision_deviation)
         self._gate_cache: Dict[str, float] = {}
         self._task: Optional[asyncio.Task] = None
+        # ONE worker for all device work (warm, batches, gate
+        # measurements): it keeps the event loop free without ever
+        # running two jax computations concurrently — the quality
+        # harness toggles the process-global x64 flag (compat.enable_x64
+        # in simulate()), which would corrupt a batch executing on
+        # another thread. Recreated by start() after a stop().
+        self._executor: Optional[
+            concurrent.futures.ThreadPoolExecutor] = None
 
     # -- lifecycle ----------------------------------------------------------
     async def start(self, warm: Sequence[Tuple[SceneConfig, str,
@@ -116,10 +126,13 @@ class FocusService:
         (scene, variant, precision) triple so the first real requests pay
         no compile/trace/filter cost."""
         loop = asyncio.get_running_loop()
+        if self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="focus-device")
         for scene, variant, precision in warm:
             key = BatchKey(scene, variant, precision, False)
             await loop.run_in_executor(
-                None, lambda k=key: self.backend.warm(
+                self._executor, lambda k=key: self.backend.warm(
                     k, self.config.max_batch))
         self._task = asyncio.create_task(self.batcher.run())
 
@@ -136,14 +149,35 @@ class FocusService:
                 req.future.set_exception(
                     RuntimeError("service stopped before execution"))
             self.metrics.observe_failure()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None        # start() makes a fresh one
 
     # -- admission ----------------------------------------------------------
+    async def _ensure_gate_measured(self, precision: Optional[str]) -> None:
+        """Populate the gate cache for ``precision`` off the event loop:
+        the first measurement focuses a full quality scene (seconds in
+        interpret mode), which must not stall the batcher's deadlines or
+        concurrent admissions. It runs on the service's single device
+        executor, serialized against batch execution (the measurement
+        toggles global jax config). Cached checks stay synchronous."""
+        if precision in (None, "f32") or precision in self._gate_cache:
+            return
+        loop = asyncio.get_running_loop()
+        dev = await loop.run_in_executor(
+            self._executor, self._precision_deviation, precision)
+        self._gate_cache[precision] = float(dev)
+
     def _check_gate(self, precision: Optional[str]) -> None:
+        """Lookup-only: admission must await _ensure_gate_measured first.
+        Measuring here would put a multi-second jax computation on the
+        event-loop thread, outside the serialized device executor."""
         if precision in (None, "f32"):
             return
         if precision not in self._gate_cache:
-            self._gate_cache[precision] = float(
-                self._precision_deviation(precision))
+            raise RuntimeError(
+                f"SNR gate for {precision!r} consulted before it was "
+                "measured (call _ensure_gate_measured first)")
         dev = self._gate_cache[precision]
         if dev > self.config.snr_gate_db:
             self.metrics.observe_gate_reject()
@@ -165,6 +199,7 @@ class FocusService:
             raise RuntimeError(
                 "service is not running (call start() first; submissions "
                 "after stop() are rejected)")
+        await self._ensure_gate_measured(precision)
         self._check_gate(precision)
         raw = np.ascontiguousarray(np.asarray(raw, np.complex64))
         if raw.shape != (scene.na, scene.nr):
@@ -195,12 +230,12 @@ class FocusService:
                 images = []
                 for r in reqs:
                     images.append(await loop.run_in_executor(
-                        None, self.backend.execute_streamed, key, r.raw,
-                        self.config.stream_strips))
+                        self._executor, self.backend.execute_streamed,
+                        key, r.raw, self.config.stream_strips))
             else:
                 batch = np.stack([r.raw for r in reqs])
                 images = await loop.run_in_executor(
-                    None, self.backend.execute, key, batch)
+                    self._executor, self.backend.execute, key, batch)
         except Exception as e:
             for r in reqs:
                 if not r.future.done():

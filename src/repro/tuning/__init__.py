@@ -1,0 +1,66 @@
+"""repro.tuning — the single owner of kernel-config decisions.
+
+The paper's 22x comes from picking the right kernel shape (radix split,
+line block, precision) per dispatch. This subsystem owns that decision
+for every layer — kernels, the plan compiler, the serving warm path, and
+the CLI tuner all resolve configs here, through one typed key space and
+one persistent device-fingerprinted cache:
+
+* :mod:`repro.tuning.space`  — :class:`TuneKey` (problem shape + device
+  fingerprint, batch normalized to serving buckets) and
+  :class:`KernelConfig` (the one config record all layers share).
+* :mod:`repro.tuning.cost`   — analytic roofline model ranking candidates
+  without running them (matmul-DFT FLOPs, bytes per pass, VMEM cut).
+* :mod:`repro.tuning.search` — cost-ordered measured search with
+  successive-halving early stopping and the SNR quality gate.
+* :mod:`repro.tuning.cache`  — versioned schema-validated JSON cache with
+  transparent migration from the legacy flat autotune format.
+* :mod:`repro.tuning.quality`— the measured precision-SNR gate (imported
+  lazily: it pulls in the full SAR pipeline).
+
+Layering: ``repro.tuning`` sits above ``repro.kernels`` and below
+``repro.core.plan`` / ``repro.service``; nothing in ``src/repro`` imports
+from ``benchmarks/`` (enforced by tests/test_tuning.py) — the benchmarks
+package is a thin CLI/reporting shim over this subsystem.
+"""
+from repro.tuning.cache import (
+    CACHE_SCHEMA,
+    TuneCache,
+    clear_memory_cache,
+    default_cache_path,
+    get_cache,
+    migrate_legacy_doc,
+    validate_cache_doc,
+)
+from repro.tuning.search import (
+    DEFAULT_SNR_GATE_DB,
+    SearchResult,
+    kernel_measure,
+    best_config,
+    cached_config,
+    measured_search,
+    search_kernel,
+)
+from repro.tuning.space import (
+    CONFIG_KEYS,
+    KIND_KERNEL,
+    KIND_PIPELINE,
+    SPECTRAL_KEYS,
+    KernelConfig,
+    TuneKey,
+    bucket_batch,
+    candidates,
+    device_fingerprint,
+    factorizations,
+)
+from repro.tuning import cost
+
+__all__ = [
+    "CACHE_SCHEMA", "CONFIG_KEYS", "DEFAULT_SNR_GATE_DB", "KIND_KERNEL",
+    "KIND_PIPELINE", "KernelConfig", "SPECTRAL_KEYS", "SearchResult",
+    "TuneCache", "TuneKey", "best_config", "bucket_batch", "cached_config",
+    "candidates", "clear_memory_cache", "cost", "default_cache_path",
+    "device_fingerprint", "factorizations", "get_cache",
+    "kernel_measure", "measured_search", "migrate_legacy_doc", "search_kernel",
+    "validate_cache_doc",
+]

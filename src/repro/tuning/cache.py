@@ -1,0 +1,241 @@
+"""Versioned, schema-validated persistent tuning cache.
+
+One JSON document per cache path, shared by every layer (kernel autotuner,
+plan compiler, serving warm sweep), so a config measured anywhere is
+reusable everywhere — including across process restarts, which is what
+makes serving warms survive a redeploy.
+
+Schema (version 1, the first *versioned* schema)::
+
+    {
+      "schema": 1,
+      "entries": {
+        "<TuneKey.encode()>": {
+          "config":  {block, n1, n2, n3, karatsuba, precision, col_block},
+          "seconds": <measured wall seconds or null>,
+          "source":  "search" | "sweep" | "migrated",
+          "updated_utc": "YYYY-MM-DDTHH:MM:SSZ"
+        }, ...
+      }
+    }
+
+Legacy migration: the pre-subsystem cache (benchmarks/autotune.py) was a
+flat ``{"<backend>_B<batch>_n<n>": {config..., seconds}}`` dict — exact
+batch, no device fingerprint, no version. Loading one transparently
+migrates every entry: batch normalizes to its power-of-two bucket (the
+fastest entry wins a bucket collision), the current process's device
+fingerprint is stamped (the legacy cache was by definition measured
+here), and the file is rewritten in schema 1 on the next ``put``.
+
+The in-process layer keeps the parsed document per path and re-reads only
+when the file's mtime changes, so compile-time lookups (one per dispatch)
+never re-parse JSON. Writes are atomic (tmp + rename) and lock-guarded.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: in-process locking only
+    fcntl = None
+
+from repro.tuning.space import (
+    KIND_KERNEL,
+    KernelConfig,
+    TuneKey,
+    bucket_batch,
+    device_fingerprint,
+)
+
+CACHE_SCHEMA = 1
+
+
+def default_cache_path() -> str:
+    """$REPRO_AUTOTUNE_CACHE if set, else the user cache directory
+    ($XDG_CACHE_HOME or ~/.cache)/repro/autotune_cache.json — never
+    inside the repo (*.autotune_cache.json is gitignored regardless)."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return os.path.join(base, "repro", "autotune_cache.json")
+
+
+def _utc_now() -> str:
+    return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
+def validate_cache_doc(doc: dict) -> dict:
+    """Assert ``doc`` is a well-formed schema-1 cache; raises ValueError
+    with the first defect, returns the doc so callers can chain."""
+    if not isinstance(doc, dict):
+        raise ValueError("cache doc must be a JSON object")
+    if doc.get("schema") != CACHE_SCHEMA:
+        raise ValueError(
+            f"cache schema {doc.get('schema')!r} != {CACHE_SCHEMA}")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        raise ValueError("cache entries must be an object")
+    for key, entry in entries.items():
+        TuneKey.decode(key)                      # raises on malformed keys
+        if not isinstance(entry, dict) or "config" not in entry:
+            raise ValueError(f"entry {key!r} missing 'config'")
+        KernelConfig.from_dict(entry["config"])  # raises on bad knobs
+        sec = entry.get("seconds")
+        if sec is not None and not isinstance(sec, (int, float)):
+            raise ValueError(f"entry {key!r}: seconds is not a number")
+    return doc
+
+
+def migrate_legacy_doc(doc: dict) -> dict:
+    """A legacy flat ``{"backend_B<b>_n<n>": {...}}`` dict -> schema 1.
+
+    Batch buckets to the serving power-of-two grid (fastest entry wins a
+    collision); the current device fingerprint is stamped on every entry
+    (a legacy cache was measured in-process, i.e. on this device kind).
+    """
+    device = device_fingerprint()
+    entries: dict = {}
+    for key, cfg in doc.items():
+        try:
+            backend, b_part, n_part = key.rsplit("_", 2)
+            batch = int(b_part.lstrip("B"))
+            n = int(n_part.lstrip("n"))
+            config = KernelConfig.from_dict(cfg)
+        except Exception:
+            continue                              # unparseable: drop
+        tk = TuneKey(kind=KIND_KERNEL, backend=backend, device=device,
+                     n=n, batch=bucket_batch(batch), lines=16)
+        seconds = cfg.get("seconds") if isinstance(cfg, dict) else None
+        prev = entries.get(tk.encode())
+        if prev is not None and seconds is not None \
+                and prev.get("seconds") is not None \
+                and prev["seconds"] <= seconds:
+            continue                              # bucket collision: keep faster
+        entries[tk.encode()] = {
+            "config": config.to_dict(), "seconds": seconds,
+            "source": "migrated", "updated_utc": _utc_now(),
+        }
+    return {"schema": CACHE_SCHEMA, "entries": entries}
+
+
+class TuneCache:
+    """One cache file + its in-process layer. Thread-safe."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self._mtime: Optional[float] = None
+        self._doc: Optional[dict] = None
+
+    # -- document ------------------------------------------------------------
+    def _load_locked(self) -> dict:
+        try:
+            mtime = os.path.getmtime(self.path)
+        except OSError:
+            self._mtime, self._doc = None, {"schema": CACHE_SCHEMA,
+                                            "entries": {}}
+            return self._doc
+        if self._doc is not None and mtime == self._mtime:
+            return self._doc
+        with open(self.path) as f:
+            raw = json.load(f)
+        if "schema" not in raw:                   # legacy flat autotune dict
+            doc = migrate_legacy_doc(raw)
+        else:
+            doc = validate_cache_doc(raw)
+        self._mtime, self._doc = mtime, doc
+        return doc
+
+    def doc(self) -> dict:
+        """The parsed (and, if needed, migrated) schema-1 document."""
+        with self._lock:
+            return self._load_locked()
+
+    def _save_locked(self, doc: dict) -> None:
+        validate_cache_doc(doc)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.path)
+        try:
+            self._mtime = os.path.getmtime(self.path)
+        except OSError:
+            self._mtime = None
+        self._doc = doc
+
+    # -- entries -------------------------------------------------------------
+    def get_entry(self, key: TuneKey) -> Optional[dict]:
+        with self._lock:
+            return self._load_locked()["entries"].get(key.encode())
+
+    def get(self, key: TuneKey) -> Optional[KernelConfig]:
+        entry = self.get_entry(key)
+        if entry is None:
+            return None
+        return KernelConfig.from_dict(entry["config"])
+
+    @contextlib.contextmanager
+    def _file_lock(self):
+        """Advisory cross-process lock around read-modify-write: two
+        serving processes warming different keys against the shared cache
+        must not overwrite each other's just-persisted sweeps."""
+        if fcntl is None:
+            yield
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(self.path + ".lock", "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def put(self, key: TuneKey, config: KernelConfig,
+            seconds: Optional[float] = None, source: str = "search") -> None:
+        """Insert/replace the entry for ``key`` and persist atomically
+        (also rewrites a legacy-format file in schema 1). The merge is
+        done under a cross-process file lock against a freshly re-read
+        document, so concurrent writers keep each other's entries."""
+        with self._lock, self._file_lock():
+            self._mtime = None           # force a re-read under the lock
+            self._doc = None
+            doc = dict(self._load_locked())
+            doc["entries"] = dict(doc["entries"])
+            doc["entries"][key.encode()] = {
+                "config": config.to_dict(),
+                "seconds": None if seconds is None else float(seconds),
+                "source": source, "updated_utc": _utc_now(),
+            }
+            self._save_locked(doc)
+
+
+# per-path singletons so every layer shares one in-process view
+_CACHES: dict = {}
+_CACHES_LOCK = threading.Lock()
+
+
+def get_cache(path: Optional[str] = None) -> TuneCache:
+    p = path or default_cache_path()
+    with _CACHES_LOCK:
+        if p not in _CACHES:
+            _CACHES[p] = TuneCache(p)
+        return _CACHES[p]
+
+
+def clear_memory_cache() -> None:
+    """Drop every in-process cache view (tests; the files are untouched)."""
+    with _CACHES_LOCK:
+        _CACHES.clear()

@@ -1,0 +1,185 @@
+"""Analytic roofline cost model for fused spectral dispatch candidates.
+
+Ranks :class:`~repro.tuning.space.KernelConfig` candidates WITHOUT running
+them, so the measured search (search.py) times only the promising few
+instead of the whole space ("Shortest-Path FFT", arXiv 2604.04311: guided
+search beats enumeration once the implementation space is large).
+
+The model prices one fused ``[FFT] · H · [IFFT]`` rows dispatch on a
+``(batch, lines, n)`` slab as ``max(compute, memory)`` — the roofline —
+with three ingredients (formulas in docs/tuning.md):
+
+**Matmul-DFT FLOPs.** Stage ``i`` of the four-step recursion contracts
+every length-``n`` line with an ``f_i × f_i`` DFT matrix: ``n · f_i``
+complex MACs per line, i.e. ``8 n f_i`` real FLOPs (``6 n f_i`` with
+Karatsuba's 3-matmul product). The matrix unit is ``MAX_FACTOR`` wide, so
+a factor-``f`` matmul runs at ``(f / MAX_FACTOR) ** 0.5`` of peak (small
+operands waste the systolic array; the square root reflects that one of
+the two matmul dims — the folded line batch — is already large). Twiddle
+and filter pointwise multiplies are priced at the vector unit's rate.
+``fft4step._flops_per_line`` (the nominal ``5 n log2 n`` algorithmic
+count) is the numerator of the reported efficiency, never the cost — a
+matmul FFT does MORE arithmetic than nominal; that is the point.
+
+**Bytes per pass.** The slab is read and written once per dispatch
+(``16 n`` bytes per line: split re/im float32 in and out), and every grid
+step re-loads the DFT constants (matrices + twiddles) — so a small
+``block`` pays the constant traffic ``lines / block`` times. Narrow
+matmul operands do not shrink HBM traffic (inputs stay f32; only the
+in-VMEM operand cast narrows).
+
+**VMEM feasibility.** A grid step must hold its x/y slabs (double for
+the out-of-place stages), the DFT constants, and the filter block inside
+the ~16 MiB VMEM budget — the TPU analogue of the paper's 32 KiB
+threadgroup-memory constraint. Infeasible candidates are cut before
+ranking; the cut can never empty a candidate set that contains the
+library default (tested).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.kernels.fft4step import (
+    MAX_FACTOR,
+    SpectralSpec,
+    _flops_per_line,
+    default_factorization,
+    resolve_precision,
+)
+from repro.tuning.space import KernelConfig, TuneKey
+
+# Nominal device constants. Ranking, not prediction, is the contract:
+# these are TPU-class magnitudes (peak matrix FLOP/s, HBM bytes/s, VMEM
+# bytes) whose RATIO sets the roofline ridge; absolute wall-clock on any
+# one device is calibrated away by the measured rungs that follow.
+PEAK_MATMUL_FLOPS = 2.0e14      # dense f32 matrix throughput
+PEAK_VPU_FLOPS = 4.0e12         # pointwise (twiddle/filter) throughput
+PEAK_HBM_BYTES = 1.2e12         # HBM <-> VMEM bandwidth
+VMEM_BUDGET_BYTES = 16 * 2**20  # per-grid-step on-chip footprint budget
+
+# Matmul-throughput multiplier per operand precision ("Range, Not
+# Precision": narrow operands double matrix-unit throughput; bs16 spends
+# a little of it on the block-exponent prologue/epilogue).
+_PRECISION_SPEEDUP = {"f32": 1.0, "bf16": 2.0, "f16": 2.0, "bs16": 1.9}
+
+
+def _factors(config: KernelConfig, n: int) -> tuple:
+    return config.factors() or default_factorization(n)
+
+
+def _const_bytes(factors: tuple) -> int:
+    """DFT matrices + inter-stage twiddles, split re/im float32 — the
+    broadcast operands every grid step re-loads."""
+    b = sum(2 * 4 * f * f for f in factors)
+    for i in range(len(factors) - 1):
+        rest = math.prod(factors[i + 1:])
+        b += 2 * 4 * factors[i] * rest
+    return b
+
+
+def vmem_bytes(config: KernelConfig, key: TuneKey) -> int:
+    """Approximate per-grid-step VMEM footprint of one fused dispatch."""
+    n = key.n
+    block = config.block or 8
+    slab = 2 * 4 * block * key.batch * n     # split re/im f32, one slab
+    # x in + y out + one out-of-place intermediate per live stage pair
+    footprint = 3 * slab
+    footprint += _const_bytes(_factors(config, n))
+    footprint += 2 * 4 * n                   # shared filter vector block
+    if resolve_precision(config.precision).block_scaled:
+        footprint += slab // 2               # f16 scaled copy of the slab
+    return footprint
+
+
+def structurally_feasible(config: KernelConfig, key: TuneKey) -> bool:
+    """Shape legality: the config can build a kernel for ``key`` at all."""
+    n = key.n
+    fs = _factors(config, n)
+    if math.prod(fs) != n:
+        return False
+    if any(f > MAX_FACTOR or f & (f - 1) for f in fs):
+        return False
+    block = config.block or 8
+    # ops.spectral_op PADS lines up to a block multiple, so a block that
+    # does not divide lines is still runnable (the pad is timed, and
+    # priced, honestly); only block > lines is pure waste — the whole
+    # dispatch would be mostly padding. Same rule as the legacy sweep.
+    if block > key.lines and key.lines % block:
+        return False
+    return True
+
+
+def feasible(config: KernelConfig, key: TuneKey,
+             vmem_budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Structural + footprint feasibility cut (never measured if False)."""
+    return structurally_feasible(config, key) and \
+        vmem_bytes(config, key) <= vmem_budget
+
+
+def predicted_seconds(config: KernelConfig, key: TuneKey,
+                      fwd: bool = True, inv: bool = True,
+                      filtered: bool = True) -> float:
+    """Roofline time estimate for one fused dispatch under ``config``.
+
+    Relative ordering is the contract (search.py measures the top of the
+    ranking); see the module docstring for the model.
+    """
+    n = key.n
+    lines_total = key.batch * key.lines
+    fs = _factors(config, n)
+    prec = resolve_precision(config.precision)
+    matmul_rate = PEAK_MATMUL_FLOPS * _PRECISION_SPEEDUP[prec.name]
+    transforms = (1 if fwd else 0) + (1 if inv else 0)
+
+    # compute: per-stage dense-DFT matmuls at factor-dependent efficiency
+    mac_flops = 6.0 if config.karatsuba else 8.0
+    compute = 0.0
+    for f in fs:
+        util = (f / MAX_FACTOR) ** 0.5
+        compute += transforms * lines_total * mac_flops * n * f / (
+            matmul_rate * util)
+    # twiddles (one complex multiply per element per stage boundary) and
+    # the filter multiply run on the vector unit
+    pointwise = transforms * (len(fs) - 1) * 6.0 * n * lines_total
+    if filtered:
+        pointwise += 6.0 * n * lines_total
+    compute += pointwise / PEAK_VPU_FLOPS
+
+    # memory: slab in+out once per dispatch, constants once per grid step
+    block = config.block or 8
+    grid_steps = max(1, math.ceil(key.lines / block))
+    bytes_moved = 2 * 2 * 4 * n * lines_total          # x and y, re+im f32
+    bytes_moved += grid_steps * _const_bytes(fs)
+    if filtered:
+        bytes_moved += 2 * 4 * n                       # shared filter
+    memory = bytes_moved / PEAK_HBM_BYTES
+
+    return max(compute, memory) + 0.3 * min(compute, memory)
+
+
+def nominal_flops(key: TuneKey, fwd: bool = True, inv: bool = True,
+                  filtered: bool = True) -> float:
+    """The algorithmic 5 n log2 n count (fft4step._flops_per_line) for the
+    whole slab — the numerator of reported efficiency, not the cost."""
+    spec = SpectralSpec(
+        n=key.n, fwd=fwd, inv=inv,
+        filter_mode="shared" if filtered else "none")
+    return _flops_per_line(spec) * key.batch * key.lines
+
+
+def rank(configs, key: TuneKey, vmem_budget: int = VMEM_BUDGET_BYTES,
+         **kw) -> list:
+    """Feasible configs sorted by predicted cost, cheapest first.
+
+    The VMEM cut must never exclude EVERY candidate (a problem so large
+    that no block fits the budget still has to run — smallest footprint
+    first, and the measured rungs drop anything the kernel build itself
+    rejects): when it would, the cut falls back to structural feasibility
+    with the footprint folded into the ordering."""
+    feas = [c for c in configs if feasible(c, key, vmem_budget)]
+    if feas:
+        return sorted(feas, key=lambda c: predicted_seconds(c, key, **kw))
+    feas = [c for c in configs if structurally_feasible(c, key)]
+    return sorted(feas, key=lambda c: (vmem_bytes(c, key),
+                                       predicted_seconds(c, key, **kw)))

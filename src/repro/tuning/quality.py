@@ -1,0 +1,41 @@
+"""The reduced-precision quality gate, measured in-library.
+
+"Range, Not Precision" (arXiv 2605.28451): narrow matmul operands double
+matrix-unit throughput at SAR-acceptable quality — but the GATE, not the
+throughput, decides admissibility. The tuner (search.py) and the serving
+admission check (service/service.py) both call
+:func:`precision_snr_deviation`; it lives here, inside ``src/repro``, so
+neither the compiler nor the service depends on the benchmarks package
+(benchmarks/bench_quality.py re-exports it for the paper tables).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def precision_snr_deviation(precision: str, n: int = 256,
+                            variant: str = "fused3") -> float:
+    """Max per-target SNR deviation (dB) of focusing the 5-point-target
+    scene with ``precision`` matmul operands vs exact f32. Measured once
+    per (precision, n, variant) per process (lru_cache)."""
+    if precision in (None, "f32"):
+        return 0.0
+    from repro.core.sar import (          # deferred: quality -> sar -> plan
+        build_pipeline,
+        metrics,
+        paper_targets,
+        simulate_cached,
+    )
+    from repro.core.sar.geometry import test_scene
+    cfg = test_scene(n)
+    targets = paper_targets(cfg)
+    raw = jnp.asarray(simulate_cached(cfg, targets))
+    base = np.asarray(build_pipeline(cfg, variant, tune="off").run(raw))
+    img = np.asarray(build_pipeline(cfg, variant, tune="off",
+                                    precision=precision).run(raw))
+    c = metrics.compare_pipelines(img, base, cfg, targets)
+    return float(max(c["snr_delta_db"]))

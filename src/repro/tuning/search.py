@@ -1,0 +1,228 @@
+"""Cost-model-guided measured search with successive-halving early stopping.
+
+Replaces the exhaustive ``itertools.product`` sweep of the old
+benchmarks/autotune.py: candidates are feasibility-cut and RANKED by the
+analytic roofline model (cost.py) first, only the top of the ranking is
+ever timed, and the timed set shrinks by half per rung while the per-rung
+measurement budget grows — so the search reaches the same winner as the
+exhaustive sweep while timing strictly fewer candidates ("Shortest-Path
+FFT", arXiv 2604.04311: guided beats enumeration).
+
+Two entry points:
+
+* :func:`measured_search` — the generic engine: any candidate list, any
+  measure callable. The serving warm sweep (service/backends.py) runs its
+  (block, col_block) pipeline candidates through this.
+* :func:`search_kernel` — the kernel tuner: builds the candidate space
+  for a :class:`TuneKey`, applies the cost ranking, the SNR gate (non-f32
+  precisions must pass ``repro.tuning.quality`` at <= ``snr_gate_db``),
+  times the fused fwd+inv rows dispatch, and persists the winner to the
+  shared cache.
+
+Plus the cache-only lookups the plan compiler uses at compile time
+(:func:`cached_config`, never sweeps) and :func:`best_config`
+(cached-or-tuned, the CLI/bench entry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.tuning import cache as cachelib
+from repro.tuning import cost as costlib
+from repro.tuning.space import KernelConfig, TuneKey, candidates
+
+DEFAULT_SNR_GATE_DB = 0.1
+
+
+def _timeit(fn, warmup: int = 1, iters: int = 2) -> float:
+    """Median wall seconds per call (blocks on jax arrays)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome + audit trail of one guided search."""
+
+    key: TuneKey
+    config: KernelConfig              # the winner
+    seconds: float                    # its best measured time
+    measured: int                     # distinct candidates actually timed
+    space: int                        # full candidate-space size
+    predicted_rank: Optional[int]     # winner's rank in the cost ordering
+    trace: list = dataclasses.field(default_factory=list)
+    # trace rows: (config, seconds | None if infeasible at measure time)
+
+
+def measured_search(cands: Sequence, measure: Callable,
+                    order: Optional[Callable] = None,
+                    max_measure: Optional[int] = None,
+                    rungs: Sequence[int] = (1, 3),
+                    log: Optional[Callable] = None):
+    """Successive-halving over ``cands``.
+
+    measure(candidate, iters) -> wall seconds (may raise: the candidate is
+    dropped as infeasible). ``order`` ranks candidates cheapest-first
+    without running them (the cost model); ``max_measure`` caps how many
+    enter rung 0. Each rung times the survivors with ``rungs[i]``
+    iterations and keeps the fastest half. Returns
+    (best_candidate, best_seconds, trace) with trace = [(cand, secs|None)].
+    """
+    pool = list(cands)
+    if order is not None:
+        pool = order(pool)
+    if max_measure is not None:
+        pool = pool[:max(1, max_measure)]
+    trace: list = []
+    timed: list = []                          # (seconds, index, cand)
+    for r, iters in enumerate(rungs):
+        survivors = pool if r == 0 else [c for _, _, c in timed]
+        timed = []
+        for i, cand in enumerate(survivors):
+            try:
+                t = measure(cand, iters)
+            except Exception:
+                if r == 0:
+                    trace.append((cand, None))
+                continue
+            trace.append((cand, t))
+            timed.append((t, i, cand))
+            if log is not None:
+                log(cand, t, r)
+        if not timed:
+            raise RuntimeError("no feasible candidate survived measurement")
+        timed.sort(key=lambda x: x[0])
+        if r < len(rungs) - 1:
+            timed = timed[:max(1, math.ceil(len(timed) / 2))]
+    best_t, _, best = timed[0]
+    return best, best_t, trace
+
+
+def _default_gate(precision: str) -> float:
+    from repro.tuning import quality          # deferred: pulls in core.sar
+    return quality.precision_snr_deviation(precision)
+
+
+def kernel_measure(key: TuneKey, seed: int = 0) -> Callable:
+    """measure(config, iters) for the fused fwd+inv rows dispatch — the
+    same workload the old exhaustive autotuner timed."""
+    from repro.kernels import ops             # deferred: keeps import light
+    rng = np.random.default_rng(seed)
+    shape = (key.batch, key.lines, key.n)
+    xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    hr = jnp.asarray(rng.standard_normal(key.n), jnp.float32)
+    hi = jnp.asarray(rng.standard_normal(key.n), jnp.float32)
+
+    def measure(config: KernelConfig, iters: int) -> float:
+        kw = config.spectral_kwargs()
+        return _timeit(lambda: ops.fused_fft_mult_ifft_rows(
+            xr, xi, hr, hi, **kw), warmup=1, iters=iters)
+
+    return measure
+
+
+def search_kernel(key: TuneKey, *,
+                  precisions: Sequence[str] = ("f32",),
+                  blocks: Sequence[int] = (4, 8, 16),
+                  snr_gate_db: float = DEFAULT_SNR_GATE_DB,
+                  gate: Optional[Callable] = None,
+                  measure: Optional[Callable] = None,
+                  measure_fraction: float = 0.6,
+                  rungs: Sequence[int] = (1, 2),
+                  cache: Optional[cachelib.TuneCache] = None,
+                  persist: bool = True,
+                  log: Optional[Callable] = None) -> SearchResult:
+    """Guided search for the best kernel config at ``key``; persists the
+    winner to the shared cache (so plan compiles and serving warms on any
+    later process reuse it).
+
+    ``measure_fraction`` bounds the measured set to that fraction of the
+    feasible space (at least 3): the cost model decides WHICH fraction.
+    The 0.6 default leaves headroom for measurement noise around
+    near-tied configs while still timing strictly fewer candidates than
+    the exhaustive sweep. Non-f32 precisions are admitted only if
+    ``gate`` (default: the measured point-target SNR deviation) stays
+    <= ``snr_gate_db``.
+    """
+    space = candidates(key.n, blocks=blocks, precisions=tuple(precisions))
+    space_size = len(space)
+
+    admitted: dict = {}
+    pool = []
+    for c in space:
+        p = c.precision or "f32"
+        if p != "f32":
+            if p not in admitted:
+                dev = (gate or _default_gate)(p)
+                admitted[p] = dev <= snr_gate_db
+                if log is not None:
+                    log(f"gate_{p}", dev, admitted[p])
+            if not admitted[p]:
+                continue
+        pool.append(c)
+
+    ranked = costlib.rank(pool, key)
+    if not ranked:
+        raise RuntimeError(f"feasibility cut emptied the space for {key}")
+    max_measure = max(3, math.ceil(len(ranked) * measure_fraction))
+    max_measure = min(max_measure, len(ranked))
+
+    measure = measure or kernel_measure(key)
+    best, best_t, trace = measured_search(
+        ranked, measure, max_measure=max_measure, rungs=rungs,
+        log=(lambda c, t, r: log(c, t, r)) if log is not None else None)
+
+    measured = len({c for c, t in trace if t is not None})
+    result = SearchResult(
+        key=key, config=best, seconds=best_t, measured=measured,
+        space=space_size, predicted_rank=ranked.index(best), trace=trace)
+    if persist:
+        (cache or cachelib.get_cache()).put(key, best, seconds=best_t,
+                                            source="search")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Lookups — the compile-time path (never sweeps) and the cached-or-tuned path
+# ---------------------------------------------------------------------------
+
+def cached_config(n: int, batch: int = 1, lines: int = 16,
+                  cache: Optional[cachelib.TuneCache] = None
+                  ) -> Optional[KernelConfig]:
+    """Best-known kernel config for (n, batch-bucket) on THIS device, or
+    None. Pure cache lookup — compile time must never trigger a sweep."""
+    try:
+        key = TuneKey.kernel(n, batch, lines=lines)
+        return (cache or cachelib.get_cache()).get(key)
+    except Exception:
+        return None
+
+
+def best_config(n: int, batch: int = 1, lines: int = 16,
+                tune_missing: bool = True,
+                cache: Optional[cachelib.TuneCache] = None,
+                **search_kw) -> KernelConfig:
+    """Cached best config for (n, batch); runs the guided search on a
+    miss (``tune_missing=False`` falls back to library defaults)."""
+    key = TuneKey.kernel(n, batch, lines=lines)
+    hit = (cache or cachelib.get_cache()).get(key)
+    if hit is not None:
+        return hit
+    if tune_missing:
+        return search_kernel(key, cache=cache, **search_kw).config
+    return KernelConfig(block=8)

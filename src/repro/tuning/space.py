@@ -1,0 +1,258 @@
+"""The tuning search space: typed keys and configs.
+
+Two types replace the ad-hoc dicts that used to travel between
+benchmarks/autotune.py, core/plan.py, and service/backends.py:
+
+:class:`TuneKey`
+    WHAT a tuned config is for — problem shape (FFT length, batch
+    bucket, line count, requested precision) plus WHERE it was measured
+    (jax backend and the device fingerprint, e.g.
+    ``jax.devices()[0].device_kind``). "Beating vDSP" (arXiv 2603.27569)
+    shows the winning tile decomposition is device-specific, so a config
+    tuned on one device kind must never be served to another. Batch is
+    normalized to the serving batcher's power-of-two buckets at key
+    construction (see :func:`bucket_batch`): the service pads partial
+    micro-batches up to a bucket before dispatch, so exact-batch keys
+    would systematically miss.
+
+:class:`KernelConfig`
+    HOW to run the dispatch — the tunable knobs of one fused spectral
+    dispatch (``block``, mixed-radix ``n1/n2/n3``, ``karatsuba``,
+    ``precision``) plus the pipeline-level ``col_block`` (the
+    columns-dispatch line block the service's warm sweep used to keep in
+    its own private dict). Kernels consume the spectral subset via
+    :meth:`KernelConfig.spectral_kwargs`; plans and the service consume
+    the whole record.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import jax
+
+from repro.kernels.fft4step import (
+    MAX_FACTOR,
+    SpectralSpec,
+    default_factorization,
+    resolve_precision,
+)
+
+KIND_KERNEL = "kernel"       # one fused spectral dispatch (rows, fwd+inv)
+KIND_PIPELINE = "pipeline"   # a whole compiled plan (service warm sweep)
+
+SPECTRAL_KEYS = ("block", "n1", "n2", "n3", "karatsuba", "precision")
+CONFIG_KEYS = SPECTRAL_KEYS + ("col_block",)
+
+
+def bucket_batch(b: int) -> int:
+    """The serving batcher's power-of-two batch bucket containing ``b``.
+
+    Every distinct batch shape costs one jit trace, so the service pads
+    partial micro-batches with zero scenes up to the next power of two
+    (see service/backends.py). Tune keys use the same buckets: a config
+    tuned for the padded shape is the config that actually runs."""
+    return 1 << max(0, b - 1).bit_length()
+
+
+def device_fingerprint() -> str:
+    """The device kind the process would tune on (first jax device),
+    sanitized for use inside an encoded cache key."""
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:
+        kind = "unknown"
+    return str(kind).strip().replace(" ", "-").replace("|", "-")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """One slot in the tuning cache: problem shape + measurement device."""
+
+    kind: str                        # KIND_KERNEL | KIND_PIPELINE
+    backend: str                     # jax.default_backend() at tune time
+    device: str                      # device fingerprint (device_kind)
+    n: int                           # FFT length (kernel) / nr (pipeline)
+    batch: int                       # power-of-two batch bucket
+    lines: int                       # free-axis length (kernel: timing
+                                     # proxy; pipeline: na)
+    precision: Optional[str] = None  # requested policy (pipeline kind);
+                                     # None for kernel keys — precision is
+                                     # part of the searched config there
+    variant: Optional[str] = None    # plan variant (pipeline kind)
+
+    def __post_init__(self):
+        if self.batch != bucket_batch(self.batch):
+            raise ValueError(
+                f"TuneKey.batch must be a power-of-two bucket, got "
+                f"{self.batch} (use TuneKey.kernel()/pipeline() or "
+                f"bucket_batch())")
+
+    @classmethod
+    def kernel(cls, n: int, batch: int = 1, lines: int = 16,
+               backend: Optional[str] = None,
+               device: Optional[str] = None) -> "TuneKey":
+        """Key for one fused rows dispatch; batch normalizes to its
+        power-of-two bucket so padded service batches hit the cache."""
+        return cls(kind=KIND_KERNEL,
+                   backend=backend or jax.default_backend(),
+                   device=device or device_fingerprint(),
+                   n=int(n), batch=bucket_batch(int(batch)),
+                   lines=int(lines))
+
+    @classmethod
+    def pipeline(cls, variant: str, na: int, nr: int, batch: int = 1,
+                 precision: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 device: Optional[str] = None) -> "TuneKey":
+        """Key for a whole compiled plan on an (na, nr) scene geometry —
+        the service's warm-time (block, col_block) sweep slot."""
+        return cls(kind=KIND_PIPELINE,
+                   backend=backend or jax.default_backend(),
+                   device=device or device_fingerprint(),
+                   n=int(nr), batch=bucket_batch(int(batch)),
+                   lines=int(na), precision=precision, variant=variant)
+
+    def encode(self) -> str:
+        """Stable string form used as the JSON cache key."""
+        return "|".join((
+            self.kind, self.backend, self.device, f"n{self.n}",
+            f"B{self.batch}", f"L{self.lines}",
+            self.precision or "-", self.variant or "-",
+        ))
+
+    @classmethod
+    def decode(cls, s: str) -> "TuneKey":
+        parts = s.split("|")
+        if len(parts) != 8:
+            raise ValueError(f"malformed TuneKey string {s!r}")
+        kind, backend, device, n, b, lines, prec, var = parts
+        return cls(kind=kind, backend=backend, device=device,
+                   n=int(n.lstrip("n")), batch=int(b.lstrip("B")),
+                   lines=int(lines.lstrip("L")),
+                   precision=None if prec == "-" else prec,
+                   variant=None if var == "-" else var)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One candidate (or winning) kernel/pipeline configuration.
+
+    ``None`` means "defer to the next layer's default" (library
+    factorization, block 8 rows / 128 cols, f32). ``col_block`` belongs
+    to the columns dispatch of a compiled plan — kernels never see it
+    (:meth:`spectral_kwargs` excludes it); ``-1`` means "all lines" and
+    is resolved against the scene by the consumer."""
+
+    block: Optional[int] = None
+    n1: Optional[int] = None
+    n2: Optional[int] = None
+    n3: Optional[int] = None
+    karatsuba: Optional[bool] = None     # tri-state: None defers too
+    precision: Optional[str] = None
+    col_block: Optional[int] = None
+
+    def __post_init__(self):
+        if self.precision is not None:
+            resolve_precision(self.precision)   # raises on unknown policy
+        for name in ("n1", "n2", "n3"):
+            f = getattr(self, name)
+            if f is not None and (f < 1 or f & (f - 1) or f > MAX_FACTOR):
+                raise ValueError(
+                    f"{name}={f} is not a power of two <= {MAX_FACTOR}")
+
+    # -- views ---------------------------------------------------------------
+    def spectral_kwargs(self) -> dict:
+        """The kernel-facing subset as ``ops.spectral_op`` kwargs.
+        ``None`` entries (karatsuba included — it is tri-state) are
+        dropped so downstream defaults apply."""
+        d = {k: getattr(self, k) for k in SPECTRAL_KEYS}
+        return {k: v for k, v in d.items() if v is not None}
+
+    def factors(self) -> Optional[tuple]:
+        """The explicit factorization (n1, n2[, n3]), or None if deferred."""
+        if self.n1 is None:
+            return None
+        fs = [self.n1]
+        if self.n2 is not None:
+            fs.append(self.n2)
+        if self.n3 is not None:
+            fs.append(self.n3)
+        return tuple(fs)
+
+    def apply(self, spec: SpectralSpec) -> SpectralSpec:
+        """A SpectralSpec with this config's non-None knobs applied —
+        the one config path into kernels/fft4step.build_spectral_call."""
+        updates = {k: v for k, v in self.spectral_kwargs().items()}
+        if self.factors() is not None:
+            # an explicit factorization replaces the spec's wholesale:
+            # mixing factors from two configs would break n = n1*n2[*n3]
+            updates.setdefault("n2", None)
+            updates.setdefault("n3", None)
+        return dataclasses.replace(spec, **updates)
+
+    def merge_overrides(self, overrides: dict) -> "KernelConfig":
+        """This config with explicit per-compile overrides (e.g.
+        ``compile_plan``'s ``fft_kw``) applied on top. An override that
+        names ANY of n1/n2/n3 replaces the factorization wholesale —
+        mixing factors from two configs would break n = n1*n2[*n3]."""
+        d = self.to_dict()
+        if any(k in overrides for k in ("n1", "n2", "n3")):
+            for k in ("n1", "n2", "n3"):
+                d[k] = overrides.get(k)
+        for k in ("block", "karatsuba", "precision", "col_block"):
+            if overrides.get(k) is not None:
+                d[k] = overrides[k]
+        return KernelConfig.from_dict(d)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in CONFIG_KEYS}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        """Build from a dict, tolerating extra keys (legacy autotune cache
+        entries carry ``seconds`` etc.)."""
+        return cls(**{k: d[k] for k in CONFIG_KEYS if k in d})
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def factorizations(n: int) -> list[tuple[int, ...]]:
+    """Candidate mixed-radix splits of ``n``: every sorted-descending
+    2-factor decomposition into powers of two <= MAX_FACTOR, switching to
+    3-factor decompositions past MAX_FACTOR**2 (the four-step recursion's
+    3-stage regime). Invariants (tested): factors sorted descending, every
+    factor <= MAX_FACTOR, product == n, non-empty up to MAX_FACTOR**3."""
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"FFT length must be a power of two >= 2, got {n}")
+    p = n.bit_length() - 1
+    out: list[tuple[int, ...]] = []
+    if n <= MAX_FACTOR * MAX_FACTOR:
+        for p1 in range((p + 1) // 2, p + 1):
+            n1, n2 = 1 << p1, 1 << (p - p1)
+            if n1 <= MAX_FACTOR and n1 >= n2 >= 1:
+                out.append((n1, n2))
+    else:
+        for p1 in range(1, p - 1):
+            for p2 in range(1, p - p1):
+                fs = (1 << p1, 1 << p2, 1 << (p - p1 - p2))
+                if all(f <= MAX_FACTOR for f in fs) and fs[0] >= fs[1] >= fs[2]:
+                    out.append(fs)
+    return out or [default_factorization(n)]
+
+
+def candidates(n: int, blocks=(4, 8, 16),
+               precisions=("f32",)) -> list[KernelConfig]:
+    """The kernel search space for one FFT length: factorization x line
+    block x karatsuba x precision, as typed configs."""
+    out = []
+    for fs, blk, kara, prec in itertools.product(
+            factorizations(n), blocks, (False, True), precisions):
+        out.append(KernelConfig(
+            block=blk, karatsuba=kara, n1=fs[0], n2=fs[1],
+            n3=fs[2] if len(fs) > 2 else None, precision=prec))
+    return out

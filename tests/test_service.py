@@ -235,6 +235,28 @@ def test_f32_requests_never_consult_the_gate():
     assert np.array_equal(asyncio.run(main()), reference())
 
 
+def test_service_restarts_after_stop():
+    """stop() tears down the device executor; start() must rebuild it so
+    the same FocusService instance can serve again."""
+    raw = scene()
+
+    async def main():
+        svc = FocusService(ServiceConfig(max_batch=1),
+                           backend=fast_backend())
+        await svc.start()
+        a = await svc.focus(raw, CFG)
+        await svc.stop()
+        await svc.start()
+        b = await svc.focus(raw, CFG)
+        await svc.stop()
+        return a, b
+
+    a, b = asyncio.run(main())
+    ref = reference()
+    assert np.array_equal(a, ref)
+    assert np.array_equal(b, ref)
+
+
 def test_focus_rejected_when_service_not_running():
     raw = scene()
 
