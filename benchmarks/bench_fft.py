@@ -11,7 +11,7 @@ import math
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, header, timeit
+from benchmarks.common import emit, header, pallas_interpreted, timeit
 from repro.kernels import ops
 
 
@@ -37,7 +37,8 @@ def run(n: int = 4096, batch: int = 32, full: bool = False,
     }
     for name, kw in variants.items():
         t = timeit(lambda: ops.fft_rows(xr, xi, block=8, **kw))
-        emit(name, t / batch, f"gflops={flops / t / 1e9:.2f}")
+        emit(name, t / batch, f"gflops={flops / t / 1e9:.2f}",
+             interpret=pallas_interpreted())
 
     # jnp.fft reference (XLA's own FFT on this backend)
     xc = xr + 1j * xi
@@ -49,7 +50,8 @@ def run(n: int = 4096, batch: int = 32, full: bool = False,
     hi = jnp.asarray(rng.standard_normal(n), jnp.float32)
     t = timeit(lambda: ops.fused_fft_mult_ifft_rows(xr, xi, hr, hi, block=8))
     emit("fused_fft_mult_ifft", t / batch,
-         f"gflops={(2 * flops + 6 * n * batch) / t / 1e9:.2f}")
+         f"gflops={(2 * flops + 6 * n * batch) / t / 1e9:.2f}",
+         interpret=pallas_interpreted())
 
     # batched multi-scene dispatch: per-scene latency amortization (B scenes
     # of `batch` lines each share ONE dispatch and one set of DFT constants)
@@ -63,7 +65,7 @@ def run(n: int = 4096, batch: int = 32, full: bool = False,
         t1 = t if b == 1 else t1
         emit(f"fused_batched_B{b}_per_scene", t / b,
              f"total_us={t * 1e6:.1f};amortization_vs_B1="
-             f"{t1 / (t / b):.2f}x")
+             f"{t1 / (t / b):.2f}x", interpret=pallas_interpreted())
 
     # mixed-radix: a three-factor length past the 128*128 two-factor limit
     if smoke:
@@ -73,4 +75,5 @@ def run(n: int = 4096, batch: int = 32, full: bool = False,
     y3 = jnp.asarray(rng.standard_normal((4, n3)), jnp.float32)
     t = timeit(lambda: ops.fft_rows(x3, y3, block=4))
     emit("fft_matmul_3factor_n32768", t / 4,
-         f"gflops={5.0 * n3 * math.log2(n3) * 4 / t / 1e9:.2f}")
+         f"gflops={5.0 * n3 * math.log2(n3) * 4 / t / 1e9:.2f}",
+         interpret=pallas_interpreted())

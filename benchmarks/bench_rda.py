@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import autotune
-from benchmarks.common import emit, header, timeit
+from benchmarks.common import emit, header, pallas_interpreted, timeit
 from repro.core.sar import build_pipeline, paper_targets, simulate_cached
 from repro.core.sar.csa import build_csa, build_csa_fused
 from repro.core.sar.geometry import paper_scene, test_scene
@@ -48,7 +48,7 @@ def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4),
     t1 = timeit(f, raw[None].copy(), warmup=1, iters=5)
     emit(f"rda_{variant}_batched_B1_per_scene", t1,
          f"total_us={t1 * 1e6:.1f};amortization_vs_B1=1.00x;"
-         f"block={blk};col_block={cb}")
+         f"block={blk};col_block={cb}", interpret=pallas_interpreted())
     for b in batches:
         if b == 1:
             continue
@@ -58,7 +58,7 @@ def run_batched(cfg, raw, variant: str = "fused3", batches=(1, 4),
         emit(f"rda_{variant}_batched_B{b}_per_scene", per_scene,
              f"total_us={t * 1e6:.1f};"
              f"amortization_vs_B1={t1 / per_scene:.2f}x;"
-             f"block={blk};col_block={cb}")
+             f"block={blk};col_block={cb}", interpret=pallas_interpreted())
     return t1
 
 
@@ -71,6 +71,7 @@ def run(n: int = 512, full: bool = False, smoke: bool = False):
 
     header(f"table_2: end-to-end RDA {cfg.na}x{cfg.nr} "
            "(CPU wall; dispatch/HBM counts are the architecture story)")
+    interp = pallas_interpreted()
     times = {}
     variants = ["unfused", "fused", "fused_tfree", "fused3", "omegak"]
     for v in variants:
@@ -79,13 +80,28 @@ def run(n: int = 512, full: bool = False, smoke: bool = False):
         times[v] = timeit(f, raw, warmup=1, iters=3)
         emit(f"rda_{v}", times[v],
              f"dispatches={p.dispatches};hbm_roundtrips={p.hbm_roundtrips};"
-             f"speedup_vs_unfused={times['unfused'] / times[v]:.2f}x")
+             f"speedup_vs_unfused={times['unfused'] / times[v]:.2f}x",
+             interpret=interp if v != "unfused" else False)
+    # the single-dispatch megakernel family, both residency modes: the
+    # dispatch/HBM columns are the paper's claim realized (1 dispatch,
+    # one HBM round-trip end to end) — wall-ms on CPU is emulator time.
+    for name, kw in (("fused1", dict(residency="vmem")),
+                     ("fused1_staged", dict(residency="staged"))):
+        p = build_pipeline(cfg, "fused1", **kw)
+        t = timeit(p.jitted(), raw, warmup=1, iters=3)
+        step = p.steps[0]
+        emit(f"rda_{name}", t,
+             f"dispatches={p.dispatches};hbm_roundtrips={p.hbm_roundtrips};"
+             f"residency={step.kernel_kw['residency']};"
+             f"speedup_vs_unfused={times['unfused'] / t:.2f}x",
+             interpret=interp)
     for name, b in (("csa", build_csa), ("csa_fused", build_csa_fused)):
         p = b(cfg)
         t = timeit(p.jitted(), raw, warmup=1, iters=3)
         emit(f"rda_{name}", t,
              f"dispatches={p.dispatches};"
-             f"speedup_vs_unfused={times['unfused'] / t:.2f}x")
+             f"speedup_vs_unfused={times['unfused'] / t:.2f}x",
+             interpret=interp if name != "csa" else False)
 
     run_batched(cfg, raw, smoke=smoke)
     if smoke:

@@ -43,16 +43,32 @@ _RECORDS_MAX = 10_000   # library callers never drain; don't grow forever
 _SECTION = [""]
 
 
-def emit(name: str, seconds: float, derived: str = ""):
+def emit(name: str, seconds: float, derived: str = "",
+         interpret: bool = None):
+    """Record one benchmark row. ``interpret=True`` marks a row whose
+    kernels ran in Pallas interpret mode (CPU emulation): its wall time
+    measures the emulator, NOT the kernel — e.g. smoke runs at 128² show
+    fused rows SLOWER than unfused, which misreads as a regression unless
+    the flag is carried in the artifact. Comparisons (scripts/
+    bench_compare.py) only diff rows whose interpret flags match."""
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
     if len(_RECORDS) >= _RECORDS_MAX:
         del _RECORDS[: _RECORDS_MAX // 2]
-    _RECORDS.append({
+    row = {
         "section": _SECTION[0],
         "name": name,
         "wall_ms": seconds * 1e3,
         "derived": derived,
-    })
+    }
+    if interpret is not None:
+        row["interpret"] = bool(interpret)
+    _RECORDS.append(row)
+
+
+def pallas_interpreted() -> bool:
+    """Whether Pallas rows in this process run in interpret mode (the
+    kernels' auto_interpret default: everything off-TPU)."""
+    return jax.default_backend() != "tpu"
 
 
 def header(title: str):
@@ -85,6 +101,11 @@ def git_sha() -> str:
 #   second-precision ISO-8601 UTC `generated_utc` plus an explicit
 #   `schema: 2`, and benchmarks/run.py validates every artifact it writes
 #   before CI uploads it (validate_bench_file).
+#   Rows MAY carry an `interpret` bool (still schema 2 — the field is
+#   optional): True marks wall times measured through the Pallas
+#   interpreter (CPU emulation of the kernel, orders of magnitude off the
+#   compiled ratio; fused rows can read SLOWER than unfused there).
+#   Cross-run comparisons must only diff rows with matching flags.
 BENCH_SCHEMA = 2
 _REQUIRED_META = ("schema", "git_sha", "backend", "jax_version", "python",
                   "generated_utc", "rows")
@@ -134,6 +155,8 @@ def validate_bench_doc(doc: dict) -> dict:
                 raise ValueError(f"rows[{i}] missing {key!r}")
         if not isinstance(row["wall_ms"], (int, float)):
             raise ValueError(f"rows[{i}].wall_ms is not a number")
+        if "interpret" in row and not isinstance(row["interpret"], bool):
+            raise ValueError(f"rows[{i}].interpret is not a bool")
     return doc
 
 

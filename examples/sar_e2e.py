@@ -38,7 +38,8 @@ def main():
         raws.append(simulate(c, targets))
     print(f"simulated {args.scenes} scene(s)")
 
-    variants = ["unfused", "fused", "fused_tfree", "fused3", "omegak"]
+    variants = ["unfused", "fused", "fused_tfree", "fused3", "fused1",
+                "omegak"]
     pipes = {v: build_pipeline(cfg, v) for v in variants}
     fns = {v: p.jitted() for v, p in pipes.items()}
     images, times = {}, {}

@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Bench ratchet: fail CI when a fused pipeline row regresses >1.3x.
+
+Diffs a freshly generated ``BENCH_rda.json`` against the committed
+baseline ``benchmarks/baseline_rda.json`` (BENCH_*.json itself is
+gitignored — the baseline is a deliberately committed snapshot of one
+smoke run) and exits non-zero if any fused row's wall-ms grew beyond the
+threshold. This seeds the cross-PR perf trajectory: the committed
+artifact is the ratchet, and a PR that slows a fused pipeline must
+either fix it or consciously commit the slower baseline
+(``cp BENCH_rda.json benchmarks/baseline_rda.json``).
+
+Rules
+-----
+* Only rows whose name matches ``--pattern`` (default: fused rows of
+  table_2, ``rda_(?!un).*fused`` — the lookahead keeps ``rda_unfused``
+  out) are gated — the unfused oracle and per-step breakdowns are
+  informational.
+* Rows are matched by (section, name). Rows present on one side only are
+  reported but never fail the ratchet (new rows land freely).
+* Wall-ms is **normalized by a reference row** (``--reference``, default
+  ``rda_unfused``) measured in the same run when present on both sides:
+  the gated quantity is (fresh/fresh_ref) vs (base/base_ref), so a CI
+  runner that is uniformly slower than the machine that produced the
+  committed baseline does not trip the ratchet. Absolute wall-ms is the
+  fallback when the reference row is missing on either side.
+* A row pair is only compared when both sides carry the SAME ``interpret``
+  flag: interpret-mode wall time measures the Pallas emulator, not the
+  kernel, so an interpret row diffed against a compiled row (or against a
+  pre-flag baseline) would be meaningless (see benchmarks/common.py).
+* Sub-millisecond rows are skipped (``--min-ms``): at that scale CI
+  timer noise swamps any real regression.
+
+Usage::
+
+    PYTHONPATH=src python scripts/bench_compare.py            # CI step
+    python scripts/bench_compare.py --baseline old.json --fresh new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+
+# invoked as `python scripts/bench_compare.py`: the repo root (where the
+# benchmarks package and the BENCH artifacts live) is the script's parent
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+
+def load_rows(doc: dict) -> dict:
+    rows = {}
+    for row in doc.get("rows", []):
+        rows[(row.get("section", ""), row["name"])] = row
+    return rows
+
+
+DEFAULT_BASELINE = os.path.join(_ROOT, "benchmarks", "baseline_rda.json")
+
+
+def baseline_doc(path_or_none: str, ref: str) -> dict:
+    path = path_or_none or DEFAULT_BASELINE
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    # fallback: a repo that tracks BENCH_rda.json directly
+    out = subprocess.run(
+        ["git", "show", f"{ref}:BENCH_rda.json"],
+        capture_output=True, text=True, cwd=_ROOT)
+    if out.returncode != 0:
+        raise SystemExit(
+            f"no baseline at {path} and no BENCH_rda.json at {ref}: "
+            f"{out.stderr.strip()}")
+    return json.loads(out.stdout)
+
+
+def _reference_ms(rows: dict, name: str):
+    for (_, row_name), row in rows.items():
+        if row_name == name and row["wall_ms"] > 0:
+            return row["wall_ms"]
+    return None
+
+
+def compare(base: dict, fresh: dict, pattern: str, threshold: float,
+            min_ms: float, reference: str = "rda_unfused") -> list[str]:
+    """Returns the list of failure messages (empty = ratchet holds)."""
+    pat = re.compile(pattern)
+    base_rows, fresh_rows = load_rows(base), load_rows(fresh)
+    # machine normalizer: the same reference row timed in each run
+    base_ref = _reference_ms(base_rows, reference) if reference else None
+    fresh_ref = _reference_ms(fresh_rows, reference) if reference else None
+    norm = (fresh_ref / base_ref) if (base_ref and fresh_ref) else 1.0
+    if norm != 1.0:
+        print(f"  reference {reference}: {base_ref:.2f} -> {fresh_ref:.2f} "
+              f"ms (machine factor {norm:.2f}x)")
+    failures: list[str] = []
+    compared = skipped = 0
+    for key, new in sorted(fresh_rows.items()):
+        if not pat.search(new["name"]):
+            continue
+        old = base_rows.get(key)
+        if old is None:
+            print(f"  new row (no baseline): {key[1]}")
+            continue
+        if old.get("interpret") != new.get("interpret"):
+            print(f"  skipped (interpret flag mismatch "
+                  f"{old.get('interpret')}->{new.get('interpret')}): "
+                  f"{key[1]}")
+            skipped += 1
+            continue
+        if old["wall_ms"] < min_ms:
+            skipped += 1
+            continue
+        ratio = (new["wall_ms"] / (old["wall_ms"] * norm)
+                 if old["wall_ms"] else 1.0)
+        compared += 1
+        status = "OK" if ratio <= threshold else "REGRESSION"
+        print(f"  {key[1]}: {old['wall_ms']:.2f} -> {new['wall_ms']:.2f} "
+              f"ms ({ratio:.2f}x normalized) {status}")
+        if ratio > threshold:
+            failures.append(
+                f"{key[1]}: {ratio:.2f}x > {threshold:.2f}x normalized "
+                f"({old['wall_ms']:.2f} -> {new['wall_ms']:.2f} ms)")
+    print(f"# ratchet compared {compared} fused rows "
+          f"({skipped} skipped, threshold {threshold:.2f}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_rda.json",
+                    help="freshly generated artifact (default: working tree)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline artifact path (default: "
+                         "benchmarks/baseline_rda.json)")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baseline")
+    ap.add_argument("--pattern", default=r"rda_(?!un).*fused",
+                    help="regex selecting the gated rows (the default "
+                         "lookahead keeps rda_unfused informational)")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="fail when normalized fresh/base exceeds this")
+    ap.add_argument("--min-ms", type=float, default=1.0,
+                    help="skip rows whose baseline is below this (noise)")
+    ap.add_argument("--reference", default="rda_unfused",
+                    help="in-run reference row normalizing machine speed "
+                         "('' disables)")
+    args = ap.parse_args()
+
+    from benchmarks.common import validate_bench_doc
+    with open(args.fresh) as f:
+        fresh = validate_bench_doc(json.load(f))
+    base = baseline_doc(args.baseline, args.ref)
+
+    failures = compare(base, fresh, args.pattern, args.threshold,
+                       args.min_ms, reference=args.reference)
+    if failures:
+        print("# BENCH RATCHET FAILED:")
+        for msg in failures:
+            print(f"#   {msg}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,11 @@ Compiler/executor responsibilities:
   axis; transposes and custom atoms are barriers). Multiple fused ``mul``
   atoms compose into one kernel filter: shared×shared → shared,
   shared×full → full, outer×outer → rank-(K₁+K₂) outer,
-  shared×outer → shared_outer, full×outer → full.
+  shared×outer → shared_outer, full×outer → full. ``fuse=FUSE_MEGA``
+  additionally fuses ACROSS transform-axis changes — the grammar gains
+  in-kernel corner turns, ``fft? mul* ifft? (turn fft? mul* ifft?)*`` —
+  collapsing a whole transpose-free plan into ONE megakernel dispatch
+  (``ops.mega_spectral_op``; the fused1 pipeline family).
 * **Tuning** — per-dispatch :class:`repro.tuning.KernelConfig` records are
   pulled from the repro.tuning cache at compile time (device-fingerprinted,
   batch-bucketed; never re-swept here — ``tune="off"`` skips the lookup
@@ -69,6 +73,15 @@ from repro.tuning import KernelConfig, cached_config
 
 BACKEND_PALLAS = "pallas"   # fused single-dispatch Pallas kernels
 BACKEND_XLA = "xla"         # one jnp op per atom (the unfused oracle)
+
+# Fusion levels accepted by compile_plan/plan_dispatch_count's ``fuse``:
+#   False      one dispatch per atom (the unfused oracle grouping)
+#   True       per-axis fusion: fft? mul* ifft? on ONE transform axis
+#   FUSE_MEGA  cross-axis fusion: fft? mul* ifft? (turn fft? mul* ifft?)*
+#              — axis changes become IN-KERNEL corner turns and a whole
+#              transpose-free plan collapses to a single megakernel
+#              dispatch (kernels/fft4step.build_mega_call)
+FUSE_MEGA = "mega"
 
 
 def split(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -297,31 +310,44 @@ def _flatten(plan: SpectralPlan) -> list[_Atom]:
     return atoms
 
 
-def _fusable(group: list[_Atom], atom: _Atom) -> bool:
-    """May `atom` join `group` under the kernel grammar fft? mul* ifft? on
-    one axis?  (Transposes and custom kinds never fuse.)"""
+def _fusable(group: list[_Atom], atom: _Atom, mega: bool = False) -> bool:
+    """May `atom` join `group` under the kernel grammar?
+
+    Per-axis (mega=False): fft? mul* ifft? on ONE transform axis —
+    transposes and custom kinds never fuse, an ifft closes the group, a
+    forward fft only opens one. Cross-axis (mega=True): the grammar gains
+    in-kernel corner turns, `fft? mul* ifft? (turn fft? mul* ifft?)*` —
+    an axis change always starts a fresh segment (any atom kind may open
+    it), while WITHIN the trailing same-axis segment the per-axis rules
+    still hold."""
     if atom.kind not in ("fft", "ifft", "mul"):
         return False
     if not group:
         return True
     if group[0].kind not in ("fft", "ifft", "mul"):
         return False
-    if any(a.kind == "ifft" for a in group):
-        return False                       # the inverse transform closes a group
-    if atom.axis != group[0].axis:
-        return False
+    if atom.axis != group[-1].axis:
+        return mega                        # a turn: only the megakernel fuses
+    seg = []
+    for a in reversed(group):              # the trailing same-axis segment
+        if a.axis != atom.axis:
+            break
+        seg.append(a)
+    if any(a.kind == "ifft" for a in seg):
+        return False                       # the inverse transform closes a segment
     if atom.kind == "fft":
-        return False                       # a forward FFT only opens a group
+        return False                       # a forward FFT only opens a segment
     return True
 
 
-def _group_atoms(atoms: list[_Atom], fuse: bool) -> list[list[_Atom]]:
+def _group_atoms(atoms: list[_Atom], fuse) -> list[list[_Atom]]:
     if not fuse:
         return [[a] for a in atoms]
+    mega = fuse == FUSE_MEGA
     groups: list[list[_Atom]] = []
     cur: list[_Atom] = []
     for a in atoms:
-        if cur and _fusable(cur, a):
+        if cur and _fusable(cur, a, mega):
             cur.append(a)
         else:
             if cur:
@@ -332,9 +358,22 @@ def _group_atoms(atoms: list[_Atom], fuse: bool) -> list[list[_Atom]]:
     return groups
 
 
-def plan_dispatch_count(plan: SpectralPlan, fuse: bool = True) -> int:
+def _split_segments(group: list[_Atom]) -> list[list[_Atom]]:
+    """A fused group as its per-axis segments (consecutive same-axis
+    runs) — one entry for per-axis groups, several for mega groups."""
+    segs: list[list[_Atom]] = []
+    for a in group:
+        if segs and segs[-1][0].axis == a.axis:
+            segs[-1].append(a)
+        else:
+            segs.append([a])
+    return segs
+
+
+def plan_dispatch_count(plan: SpectralPlan, fuse=True) -> int:
     """Dispatches the compiler will emit — the fusion-legality invariant
-    tests assert this equals each variant's documented count."""
+    tests assert this equals each variant's documented count. ``fuse``
+    accepts False / True / :data:`FUSE_MEGA`."""
     return len(_group_atoms(_flatten(plan), fuse))
 
 
@@ -398,7 +437,12 @@ _PAYLOAD_CACHE: dict = {}
 _PAYLOAD_CACHE_MAX = 64
 
 
-def _group_payloads(plan: SpectralPlan, cfg, fuse: bool,
+# payload marker for a cross-axis (megakernel) group: the arrays slot
+# holds one (axis, mode, arrays) record per in-kernel segment
+MEGA = "mega"
+
+
+def _group_payloads(plan: SpectralPlan, cfg, fuse,
                     backend: str) -> list:
     key = (cfg, plan, fuse, backend)
     if key not in _PAYLOAD_CACHE:
@@ -406,11 +450,18 @@ def _group_payloads(plan: SpectralPlan, cfg, fuse: bool,
         groups = _group_atoms(atoms, fuse)
         payloads = []
         for g in groups:
-            if g[0].kind in ("fft", "ifft", "mul"):
+            if g[0].kind not in ("fft", "ifft", "mul"):
+                payloads.append((FILTER_NONE, ()))
+                continue
+            segs = _split_segments(g)
+            if len(segs) == 1:
                 payloads.append(
                     _compose_group_filters(g, cfg, plan.params, g[0].axis))
             else:
-                payloads.append((FILTER_NONE, ()))
+                payloads.append((MEGA, tuple(
+                    (s[0].axis,
+                     *_compose_group_filters(s, cfg, plan.params, s[0].axis))
+                    for s in segs)))
         _fifo_put(_PAYLOAD_CACHE, key, (groups, payloads),
                   _PAYLOAD_CACHE_MAX)
     return _PAYLOAD_CACHE[key]
@@ -536,7 +587,9 @@ class Pipeline:
             if step.stream_axis is None or step.strip_fn is None:
                 raise ValueError(
                     f"step {step.name!r} does not support streaming "
-                    "(global transposes need the whole scene)")
+                    "(global transposes need the whole scene; cross-axis "
+                    "megakernel steps have no single free axis to strip "
+                    "— use a per-axis variant like fused3)")
             ax = step.stream_axis
             n = x.shape[ax]
             sizes = [n // strips + (1 if i < n % strips else 0)
@@ -674,6 +727,110 @@ def _make_spectral_step(group, mode, arrays, *, cfg, transposed, backend,
                 filter_kw=filter_kw, kernel_kw=kernel_kw)
 
 
+def _seg_device_args(mode: str, arrays: tuple) -> list:
+    """One segment's scene-coordinate payload as the flat device-array
+    list `ops.mega_spectral_op` consumes (hr/hi pairs split re/im)."""
+    if mode == FILTER_NONE:
+        return []
+    if mode in (FILTER_SHARED, FILTER_FULL):
+        h = arrays[0]
+        return [jnp.asarray(h.real.astype(np.float32)),
+                jnp.asarray(h.imag.astype(np.float32))]
+    if mode == FILTER_OUTER:
+        u, v = arrays
+        return [jnp.asarray(u), jnp.asarray(v)]
+    h, u, v = arrays
+    return [jnp.asarray(h.real.astype(np.float32)),
+            jnp.asarray(h.imag.astype(np.float32)),
+            jnp.asarray(u), jnp.asarray(v)]
+
+
+def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
+    """One cross-axis fused group -> ONE megakernel dispatch (or the
+    per-segment jnp oracle chain in the xla backend).
+
+    The whole pipeline is a single `pallas_call`: per-axis segments run
+    back-to-back with the corner turns inside the kernel, in the
+    residency mode resolved here — explicit compile option > tuned cache
+    entry > VMEM-feasibility auto-cut (repro.tuning.cost.mega_residency).
+    """
+    segs = _split_segments(group)
+    name = "+".join(dict.fromkeys(a.stage.name for a in group))
+
+    segments = []
+    filter_args: list = []
+    seg_fk: list = []                     # per-segment oracle payloads
+    for atoms, (axis, mode, arrays) in zip(segs, seg_payloads):
+        fwd = any(a.kind == "fft" for a in atoms)
+        inv = any(a.kind == "ifft" for a in atoms)
+        segments.append((axis, fwd, inv, mode))
+        dev = _seg_device_args(mode, arrays)
+        filter_args += dev
+        fk = {}
+        if mode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
+            fk["hr"], fk["hi"] = dev[0], dev[1]
+        if mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+            fk["u"], fk["v"] = dev[-2], dev[-1]
+            fk["u"] = fk["u"].reshape(fk["u"].shape[0], -1)
+            fk["v"] = fk["v"].reshape(fk["v"].shape[0], -1)
+        seg_fk.append((axis, fwd, inv, mode, fk))
+    segments = tuple(segments)
+
+    tuned = _tuned_config(cfg.nr, opts["batch"]) if (
+        backend == BACKEND_PALLAS and opts["tune"] != "off") else \
+        KernelConfig()
+    if opts["fft_kw"]:
+        tuned = tuned.merge_overrides(opts["fft_kw"])
+    stage_prec = next((a.stage.precision for a in group
+                       if a.stage.precision is not None), None)
+    precision = resolve_precision(
+        opts["precision"] or stage_prec or tuned.precision).name
+
+    residency = opts["residency"] or tuned.residency
+    if residency is None:
+        from repro import tuning
+        residency = tuning.cost.mega_residency(
+            cfg.na, cfg.nr, precision=precision,
+            filter_bytes=sum(int(a.size) * 4 for a in filter_args))
+    phase_block = opts["phase_block"] or tuned.phase_block or 8
+
+    kernel_kw = dict(
+        segments=segments, residency=residency, phase_block=phase_block,
+        fft_impl=opts["fft_impl"], interpret=opts["interpret"],
+        precision=precision, n1=tuned.n1, n2=tuned.n2, n3=tuned.n3,
+        karatsuba=bool(tuned.karatsuba),
+    )
+
+    if backend == BACKEND_PALLAS:
+        def fn(x, _fa=tuple(filter_args)):
+            xr, xi = split(x)
+            yr, yi = ops.mega_spectral_op(xr, xi, *_fa, **kernel_kw)
+            return unsplit(yr, yi)
+    else:
+        # the unfused oracle: the same segment chain, one jnp op per piece
+        def fn(x, _sf=tuple(seg_fk)):
+            for axis, fwd, inv, mode, fk in _sf:
+                x = _xla_apply(x, fwd, inv, mode, fk, axis)
+            return x
+
+    fused = backend == BACKEND_PALLAS
+    # stream_axis/strip_fn stay None: a cross-axis stage has no single
+    # free axis to strip a host scene along, so run_streamed must reject
+    # it (and lower_sharded rejects kind != "spectral") — use a per-axis
+    # variant (fused3 & friends) for those execution surfaces.
+    #
+    # hbm_roundtrips=1 counts DISPATCH-BOUNDARY materializations of the
+    # working scene (raw in, image out), the metric every step reports.
+    # The staged residency additionally moves the scene through its HBM
+    # scratch once per in-kernel turn — but that traffic never crosses a
+    # dispatch boundary and is double-buffered behind the DFT matmuls,
+    # which is precisely the difference this step exists to exploit
+    # (bench rows carry residency=... so the distinction stays visible).
+    return Step(name, fn, 1, 1, fused, None, None, kind="mega",
+                phys_axis=None, filter_mode=MEGA, filter_kw=None,
+                kernel_kw=kernel_kw)
+
+
 def _xla_apply(x, fwd, inv, mode, fk, phys_axis):
     ax = -1 if phys_axis == 1 else -2
     if fwd:
@@ -731,7 +888,7 @@ def compile_plan(
     cfg,
     *,
     backend: str = BACKEND_PALLAS,
-    fuse: bool = True,
+    fuse=True,
     batch: int = 1,
     interpret: Optional[bool] = None,
     block: Optional[int] = None,
@@ -740,6 +897,8 @@ def compile_plan(
     precision: Optional[str] = None,
     tune: str = "cached",
     fft_kw: Optional[dict] = None,
+    residency: Optional[str] = None,
+    phase_block: Optional[int] = None,
 ) -> Pipeline:
     """Compile a plan against a concrete scene into a :class:`Pipeline`.
 
@@ -749,7 +908,14 @@ def compile_plan(
     not a compile parameter — see ``batch`` below).
 
     backend: 'pallas' (fused dispatches) or 'xla' (jnp oracle ops).
-    fuse: merge adjacent compatible atoms into single dispatches.
+    fuse: merge adjacent compatible atoms into single dispatches. ``True``
+      fuses per transform axis; :data:`FUSE_MEGA` ("mega") additionally
+      fuses ACROSS axis changes into single-dispatch megakernel steps
+      (in-kernel corner turns — the fused1 pipeline family).
+    residency: megakernel execution mode for mega-fused steps — 'vmem'
+      (whole slab on-chip) or 'staged' (HBM scratch + double-buffered
+      DMA); None auto-selects by the repro.tuning VMEM-feasibility cut.
+    phase_block: lines per staged-phase grid step (None = tuned or 8).
     batch: scene-batch size the tuned configs are *looked up* for
       (normalized to the serving power-of-two bucket by repro.tuning);
       it does not restrict the shapes the pipeline accepts.
@@ -776,12 +942,20 @@ def compile_plan(
     groups, payloads = _group_payloads(plan, cfg, fuse, backend)
     opts = dict(batch=batch, tune=tune, fft_kw=fft_kw or {}, block=block,
                 col_block=col_block, fft_impl=fft_impl,
-                interpret=interpret, precision=precision)
+                interpret=interpret, precision=precision,
+                residency=residency, phase_block=phase_block)
     steps: list[Step] = []
     transposed = False
     for group, (mode, arrays) in zip(groups, payloads):
         kind = group[0].kind
-        if kind in ("fft", "ifft", "mul"):
+        if mode == MEGA:
+            if transposed:
+                raise ValueError(
+                    f"mega step {group[0].stage.name!r} inside a "
+                    "transposed section is not supported")
+            steps.append(_make_mega_step(
+                group, arrays, cfg=cfg, backend=backend, opts=opts))
+        elif kind in ("fft", "ifft", "mul"):
             steps.append(_make_spectral_step(
                 group, mode, arrays, cfg=cfg, transposed=transposed,
                 backend=backend, opts=opts))

@@ -116,6 +116,13 @@ planlib.register_variant(
     plan_kw=("r_ref",), dispatches=7)
 planlib.register_variant(
     "csa_fused", plan_csa, plan_kw=("r_ref",), dispatches=3)
+# The competitor algorithm through the megakernel: the SAME stage list
+# under the cross-axis grammar is ONE dispatch — the 2-D phase screens
+# ride along as FULL filters (DMA-sliced per line block in staged mode).
+planlib.register_variant(
+    "csa_fused1", plan_csa,
+    compile_defaults=(("fuse", planlib.FUSE_MEGA),),
+    plan_kw=("r_ref",), dispatches=1)
 
 
 def build_csa(cfg: SceneConfig, r_ref: Optional[float] = None,

@@ -60,3 +60,10 @@ def plan_omegak(r_ref: Optional[float] = None) -> SpectralPlan:
 
 planlib.register_variant(
     "omegak", plan_omegak, plan_kw=("r_ref",), dispatches=3)
+# ω-K through the cross-axis megakernel grammar: the same three stages as
+# ONE single-dispatch step (in-kernel corner turns; the full 2-D Stolt
+# screen is a FULL filter, DMA-sliced per block in staged mode).
+planlib.register_variant(
+    "omegak_fused1", plan_omegak,
+    compile_defaults=(("fuse", planlib.FUSE_MEGA),),
+    plan_kw=("r_ref",), dispatches=1)

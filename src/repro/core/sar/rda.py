@@ -34,11 +34,17 @@ Variants
                  (exact sinc interpolation via the shift theorem), azimuth
                  compression a fused column dispatch. 4 dispatches, zero
                  global transposes.
-``fused3``       Beyond-paper minimum: range compression commutes with the
-                 azimuth FFT, so the plan reorders to azimuth FFT ->
-                 [range FFT * H_r * RCMC-shift * IFFT] -> [H_a * azimuth
-                 IFFT]. 3 dispatches (the distributed schedule's local
-                 compute, see core/sar/distributed.py).
+``fused3``       Beyond-paper minimum per-axis fusion: range compression
+                 commutes with the azimuth FFT, so the plan reorders to
+                 azimuth FFT -> [range FFT * H_r * RCMC-shift * IFFT] ->
+                 [H_a * azimuth IFFT]. 3 dispatches (the distributed
+                 schedule's local compute, see core/sar/distributed.py).
+``fused1``       The paper's claim fully realized: the same three stages
+                 fused ACROSS the axis changes into ONE megakernel
+                 dispatch (fuse="mega"), corner turns in-kernel —
+                 VMEM-resident for fitting scenes (zero HBM
+                 intermediates) or scratch-staged with double-buffered
+                 DMA beyond the budget. f32 bit-identical to fused3.
 
 Plus, registered by their own modules: ``csa``/``csa_fused``
 (core/sar/csa.py) and ``omegak`` (core/sar/omegak.py).
@@ -185,6 +191,24 @@ def plan_fused3(synth_phase: bool = True) -> SpectralPlan:
     ))
 
 
+def plan_fused1(synth_phase: bool = True) -> SpectralPlan:
+    """The single-dispatch RDA: the SAME stage list as ``fused3``, fused
+    under the cross-axis megakernel grammar (``fuse="mega"``) — the
+    azimuth FFT, the fused range stage, and the azimuth compression
+    become per-axis segments of ONE dispatch with the corner turns inside
+    the kernel (kernels/fft4step.build_mega_call). The paper's headline
+    claim — the whole imaging chain in one dispatch, intermediates never
+    leaving on-chip memory — realized on TPU for VMEM-fitting scenes, and
+    kept at one dispatch via the scratch-staged mode beyond that."""
+    az = "azimuth_mf_outer" if synth_phase else "azimuth_mf"
+    return SpectralPlan("fused1", (
+        Stage("azimuth_fft", axis=0, fwd=True),
+        Stage("range_comp_rcmc", axis=1, fwd=True, inv=True,
+              filters=("range_mf", "rcmc_shift")),
+        Stage("azimuth_compression", axis=0, inv=True, filters=(az,)),
+    ))
+
+
 planlib.register_variant(
     "unfused", plan_unfused,
     compile_defaults=(("backend", planlib.BACKEND_XLA), ("fuse", False)),
@@ -195,6 +219,10 @@ planlib.register_variant(
     "fused_tfree", plan_fused_tfree, plan_kw=("synth_phase",), dispatches=4)
 planlib.register_variant(
     "fused3", plan_fused3, plan_kw=("synth_phase",), dispatches=3)
+planlib.register_variant(
+    "fused1", plan_fused1,
+    compile_defaults=(("fuse", planlib.FUSE_MEGA),),
+    plan_kw=("synth_phase",), dispatches=1)
 
 
 # ---------------------------------------------------------------------------
@@ -243,5 +271,5 @@ def _build(variant: str, cfg: SceneConfig, **kw) -> Pipeline:
 
 BUILDERS: dict[str, Callable[..., Pipeline]] = {
     v: functools.partial(_build, v)
-    for v in ("unfused", "fused", "fused_tfree", "fused3")
+    for v in ("unfused", "fused", "fused_tfree", "fused3", "fused1")
 }

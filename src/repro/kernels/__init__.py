@@ -13,8 +13,14 @@ from repro.kernels.fft4step import (  # noqa: F401
     FILTER_SHARED,
     FILTER_SHARED_OUTER,
     PRECISIONS,
+    RESIDENT_STAGED,
+    RESIDENT_VMEM,
+    MegaSpec,
     Precision,
+    SegmentSpec,
     SpectralSpec,
+    auto_interpret,
+    build_mega_call,
     build_spectral_call,
     default_factorization,
     dft_constants,

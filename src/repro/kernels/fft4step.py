@@ -68,6 +68,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # Filter (pointwise multiply) modes for the fused pipeline.
 FILTER_NONE = "none"      # no multiply (pure FFT / pure IFFT dispatch)
@@ -84,6 +85,19 @@ FILTER_SHARED_OUTER = "shared_outer"  # H[sample] * exp(i sum_k u v): range
 
 
 MAX_FACTOR = 128  # MXU edge: every DFT matmul factor must be <= 128
+
+# Residency modes of the single-dispatch 2-D megakernel (build_mega_call).
+RESIDENT_VMEM = "vmem"      # whole (Bb, na, nr) slab on-chip per grid step
+RESIDENT_STAGED = "staged"  # phase-split grid + HBM scratch, DMA-staged
+
+
+def auto_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve the tri-state ``interpret`` flag every kernel wrapper takes:
+    None auto-selects interpret mode off-TPU (this container is CPU-only;
+    on a real TPU fleet the same code lowers to Mosaic)."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +232,7 @@ class SpectralSpec:
 # DFT constants (host-side numpy; passed to the kernel as broadcast operands)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
 def dft_constants(*factors: int) -> tuple[np.ndarray, ...]:
     """DFT matrices and inter-stage twiddles for a mixed-radix factor list.
 
@@ -226,6 +241,13 @@ def dft_constants(*factors: int) -> tuple[np.ndarray, ...]:
     stage-i twiddle is exp(-2j pi k_i j / prod(f_{i:})) — the classic
     four-step twiddle, applied recursively. For two factors this is exactly
     (F1, F2, tw(n1, n2)); three factors add F3 and a (f2, f3) twiddle.
+
+    Memoized per factorization (the key is the factor tuple itself):
+    ``build_spectral_call`` and every jit re-trace would otherwise rebuild
+    the same numpy matrices — an O(n·f) host cost per trace that is pure
+    waste, since the constants depend on nothing but the factors. The
+    cached arrays are marked read-only so no caller can mutate the shared
+    copies (``dft_constants.cache_info()`` is asserted in tests).
     """
     def dft(n):
         k = np.arange(n)
@@ -242,6 +264,8 @@ def dft_constants(*factors: int) -> tuple[np.ndarray, ...]:
         tw = np.exp(-2j * np.pi * k * j / (factors[i] * rest))
         out.append(tw.real.astype(np.float32))
         out.append(tw.imag.astype(np.float32))
+    for a in out:
+        a.setflags(write=False)
     return tuple(out)
 
 
@@ -479,6 +503,57 @@ def _run_fft(xr, xi, consts, spec: SpectralSpec, inverse: bool):
     return yr, yi
 
 
+def _filter_ref_count(filter_mode: str) -> int:
+    """Operand count of one kernel filter payload, by mode."""
+    return {FILTER_NONE: 0, FILTER_SHARED: 2, FILTER_FULL: 2,
+            FILTER_OUTER: 2, FILTER_SHARED_OUTER: 4}[filter_mode]
+
+
+def _apply_filters(xr, xi, axis: int, filter_mode: str, filt):
+    """Apply one composed kernel filter to an (..., L, n) / (..., n, L)
+    block. ``filt`` holds the mode's refs or arrays (hr/hi, u/v, or both);
+    2-D payloads broadcast right-aligned over any leading batch dim."""
+
+    def _apply_outer(xr, xi, u_ref, v_ref):
+        u = u_ref[...]      # rows: (L, K); cols: (K, C)  — per-line parameters
+        v = v_ref[...]      # rows: (K, N); cols: (N, K)  — per-sample parameters
+        # rank-K phase synthesized in VMEM (no 2-D filter I/O); the 2-D
+        # phase broadcasts across the leading batch-block dim
+        if axis == 1:
+            phase = jax.lax.dot_general(
+                u, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            phase = jax.lax.dot_general(
+                v, u, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        return _cmul(xr, xi, jnp.cos(phase), jnp.sin(phase))
+
+    if filter_mode in (FILTER_SHARED, FILTER_FULL):
+        # FILTER_SHARED blocks are (1, N) [rows] or (N, 1) [cols]: broadcast.
+        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
+    elif filter_mode == FILTER_OUTER:
+        xr, xi = _apply_outer(xr, xi, filt[0], filt[1])
+    elif filter_mode == FILTER_SHARED_OUTER:
+        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
+        xr, xi = _apply_outer(xr, xi, filt[2], filt[3])
+    return xr, xi
+
+
+def _block_scale_prologue(xr, xi):
+    """bs16 prologue: extract one power-of-two exponent per grid block so
+    the f16 matmul operands stay in range. The fused pipeline (FFT,
+    filter, IFFT — and every megakernel segment) is linear in x, so one
+    scale factored out here and re-applied in the epilogue is exact up to
+    f32 rounding — and since the scale is a power of two, the scaling
+    itself is bit-exact."""
+    amax = jnp.maximum(jnp.max(jnp.abs(xr)), jnp.max(jnp.abs(xi)))
+    exp = jnp.ceil(jnp.log2(jnp.maximum(amax, jnp.float32(1e-37))))
+    scale = jnp.exp2(exp)
+    inv_scale = jnp.exp2(-exp)
+    return xr * inv_scale, xi * inv_scale, scale
+
+
 def _spectral_kernel(spec: SpectralSpec, *refs):
     """Pallas kernel body. Ref layout (in order):
 
@@ -494,58 +569,20 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     consts = None
     if spec.fft_impl == "matmul" and (spec.fwd or spec.inv):
         consts = tuple(next(it)[...] for _ in range(spec.num_dft_consts))
-    filt = ()
-    if spec.filter_mode in (FILTER_SHARED, FILTER_FULL):
-        filt = (next(it), next(it))          # hr, hi
-    elif spec.filter_mode == FILTER_OUTER:
-        filt = (next(it), next(it))          # u (per-line), v (per-sample)
-    elif spec.filter_mode == FILTER_SHARED_OUTER:
-        filt = (next(it), next(it), next(it), next(it))  # hr, hi, u, v
+    filt = tuple(next(it) for _ in range(_filter_ref_count(spec.filter_mode)))
     or_ref, oi_ref = next(it), next(it)
 
     xr = xr_ref[...]
     xi = xi_ref[...]
 
-    # bs16 prologue: extract one power-of-two exponent per grid block so the
-    # f16 matmul operands stay in range. The whole fused pipeline (FFT,
-    # filter, IFFT) is linear in x, so one scale factored out here and
-    # re-applied in the epilogue is exact up to f32 rounding — and since the
-    # scale is a power of two, the scaling itself is bit-exact.
     scale = None
     if PRECISIONS[spec.precision].block_scaled:
-        amax = jnp.maximum(jnp.max(jnp.abs(xr)), jnp.max(jnp.abs(xi)))
-        exp = jnp.ceil(jnp.log2(jnp.maximum(amax, jnp.float32(1e-37))))
-        scale = jnp.exp2(exp)
-        inv_scale = jnp.exp2(-exp)
-        xr = xr * inv_scale
-        xi = xi * inv_scale
+        xr, xi, scale = _block_scale_prologue(xr, xi)
 
     if spec.fwd:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=False)
 
-    def _apply_outer(xr, xi, u_ref, v_ref):
-        u = u_ref[...]      # rows: (L, K); cols: (K, C)  — per-line parameters
-        v = v_ref[...]      # rows: (K, N); cols: (N, K)  — per-sample parameters
-        # rank-K phase synthesized in VMEM (no 2-D filter I/O); the 2-D
-        # phase broadcasts across the leading batch-block dim
-        if spec.axis == 1:
-            phase = jax.lax.dot_general(
-                u, v, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-        else:
-            phase = jax.lax.dot_general(
-                v, u, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-        return _cmul(xr, xi, jnp.cos(phase), jnp.sin(phase))
-
-    if spec.filter_mode in (FILTER_SHARED, FILTER_FULL):
-        # FILTER_SHARED blocks are (1, N) [rows] or (N, 1) [cols]: broadcast.
-        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
-    elif spec.filter_mode == FILTER_OUTER:
-        xr, xi = _apply_outer(xr, xi, filt[0], filt[1])
-    elif spec.filter_mode == FILTER_SHARED_OUTER:
-        xr, xi = _cmul(xr, xi, filt[0][...], filt[1][...])
-        xr, xi = _apply_outer(xr, xi, filt[2], filt[3])
+    xr, xi = _apply_filters(xr, xi, spec.axis, spec.filter_mode, filt)
 
     if spec.inv:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=True)
@@ -661,4 +698,460 @@ def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
         return call(*args)
 
     fn.flops = _flops_per_line(spec) * lines * batch  # nominal, for benches
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# The single-dispatch 2-D megakernel: fft? mul* ifft? (turn fft? mul* ifft?)*
+# ---------------------------------------------------------------------------
+#
+# The paper's headline is ONE dispatch for the whole imaging chain with every
+# intermediate on-chip. The per-axis kernel above still forces one dispatch
+# per transform axis because the range->azimuth corner turn is a fusion
+# barrier. The megakernel removes it: a single pallas_call runs an arbitrary
+# sequence of per-axis spectral *segments* (each `fft? mul* ifft?`, composed
+# filters included) with the corner turns INSIDE the kernel, in one of two
+# residency modes:
+#
+# RESIDENT_VMEM   The whole (Bb, na, nr) slab lives in VMEM for the entire
+#                 grid step; a "turn" is purely logical (the cols transform
+#                 contracts axis 0 of the same slab — no data movement).
+#                 Zero HBM intermediates: the paper's claim realized on TPU,
+#                 for scenes whose slab fits the ~16 MiB budget. The TPU
+#                 analogue of the Radix-8 Stockham two-tier register/
+#                 threadgroup decomposition (arXiv 2603.27569) — VMEM plays
+#                 the register tier.
+# RESIDENT_STAGED Large scenes: one dispatch whose grid is split into one
+#                 phase per segment. Each phase strips its free axis in
+#                 `phase_block`-line blocks, manually DMA-staged between an
+#                 HBM scratch buffer (the corner-turned intermediate) and
+#                 double-buffered VMEM slabs, so the corner-turn DMA of
+#                 block j+1 overlaps the DFT matmuls of block j. Bergach et
+#                 al. (arXiv 1505.08067) show the global transpose, not the
+#                 butterflies, dominates radar FFT pipelines — this schedule
+#                 hides it behind compute instead of spending a dispatch +
+#                 full HBM round-trip per axis change.
+#
+# Numerics: both modes run the exact same per-segment math as the per-axis
+# kernel (same _run_fft, same filter application, same constants), and every
+# segment treats its line blocks independently — so f32 results are
+# bit-identical between the two modes AND to the equivalent multi-dispatch
+# pipeline (asserted in tests/test_fused1.py). bs16 extracts its block
+# exponent once per grid step, so the two modes differ within the precision
+# policy's own tolerance there.
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    """One per-axis `fft? mul* ifft?` run inside a megakernel dispatch."""
+
+    axis: int                      # scene axis: 1 = range/rows, 0 = azimuth/cols
+    fwd: bool = False
+    inv: bool = False
+    filter_mode: str = FILTER_NONE
+    outer_rank: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MegaSpec:
+    """Static configuration of one single-dispatch 2-D megakernel."""
+
+    na: int                        # azimuth lines (axis-0 FFT length)
+    nr: int                        # range samples (axis-1 FFT length)
+    segments: tuple[SegmentSpec, ...]
+    residency: str = RESIDENT_VMEM
+    batch_block: Optional[int] = None  # scenes per grid step, vmem mode
+                                       # (None = 1: one scene slab per step
+                                       # keeps the VMEM cut batch-invariant;
+                                       # constants stay resident across
+                                       # steps — their block never moves)
+    phase_block: int = 8           # lines per staged-phase grid step
+    n1: Optional[int] = None       # range-axis factorization override
+    n2: Optional[int] = None       #   (azimuth uses default_factorization;
+    n3: Optional[int] = None       #    same convention as compile_plan's fft_kw)
+    fft_impl: str = "matmul"
+    karatsuba: bool = False
+    precision: str = "f32"
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("MegaSpec needs at least one segment")
+        if self.residency not in (RESIDENT_VMEM, RESIDENT_STAGED):
+            raise ValueError(f"unknown residency {self.residency!r}")
+        for s in self.segments:
+            if s.axis not in (0, 1):
+                raise ValueError(f"segment axis must be 0 or 1, got {s.axis}")
+            if not (s.fwd or s.inv or s.filter_mode != FILTER_NONE):
+                raise ValueError("empty megakernel segment")
+        resolve_precision(self.precision)
+
+    def seg_spec(self, seg: SegmentSpec) -> SpectralSpec:
+        """The per-axis SpectralSpec view of one segment (drives _run_fft
+        and the DFT-constant layout — numerics identical to the per-axis
+        kernel by construction)."""
+        kw = {}
+        if seg.axis == 1:
+            kw = dict(n1=self.n1, n2=self.n2, n3=self.n3)
+        return SpectralSpec(
+            n=self.nr if seg.axis == 1 else self.na,
+            fwd=seg.fwd, inv=seg.inv, filter_mode=seg.filter_mode,
+            axis=seg.axis, fft_impl=self.fft_impl, karatsuba=self.karatsuba,
+            precision=self.precision, outer_rank=seg.outer_rank, **kw)
+
+    @property
+    def turns(self) -> int:
+        """In-kernel corner turns (axis changes between segments)."""
+        return sum(1 for a, b in zip(self.segments, self.segments[1:])
+                   if a.axis != b.axis)
+
+
+def _mega_const_plan(spec: MegaSpec) -> list[tuple[int, tuple]]:
+    """(axis, dft_constants) per distinct transformed axis, in first-use
+    order — each axis's constants are one set of broadcast operands shared
+    by every segment (and every scene in the batch block) on that axis."""
+    out: list[tuple[int, tuple]] = []
+    if spec.fft_impl != "matmul":
+        return out
+    seen = set()
+    for seg in spec.segments:
+        if (seg.fwd or seg.inv) and seg.axis not in seen:
+            seen.add(seg.axis)
+            out.append((seg.axis, dft_constants(*spec.seg_spec(seg).factors())))
+    return out
+
+
+def _seg_filter_shapes(spec: MegaSpec, seg: SegmentSpec) -> list[tuple]:
+    """Kernel-layout shapes of one segment's filter operands (whole-scene
+    blocks; the megakernel never line-blocks its filters)."""
+    na, nr, K = spec.na, spec.nr, seg.outer_rank
+    if seg.axis == 1:
+        shared, full = (1, nr), (na, nr)
+        u, v = (na, K), (K, nr)
+    else:
+        shared, full = (na, 1), (na, nr)
+        u, v = (K, nr), (na, K)
+    return {
+        FILTER_NONE: [],
+        FILTER_SHARED: [shared, shared],
+        FILTER_FULL: [full, full],
+        FILTER_OUTER: [u, v],
+        FILTER_SHARED_OUTER: [shared, shared, u, v],
+    }[seg.filter_mode]
+
+
+def _run_segment(xr, xi, consts, sspec: SpectralSpec, seg: SegmentSpec, filt):
+    """One segment on a (Bb, na, nr) slab — the (Bb, L, n) rows layout and
+    the (Bb, n, L) cols layout are BOTH the scene layout, so the corner
+    turn between segments is purely logical."""
+    if seg.fwd:
+        xr, xi = _run_fft(xr, xi, consts, sspec, inverse=False)
+    xr, xi = _apply_filters(xr, xi, seg.axis, seg.filter_mode, filt)
+    if seg.inv:
+        xr, xi = _run_fft(xr, xi, consts, sspec, inverse=True)
+    return xr, xi
+
+
+def _mega_kernel_resident(spec: MegaSpec, *refs):
+    """VMEM-resident megakernel body. Ref order: xr, xi, [per-axis DFT
+    constants], [per-segment filter refs], or, oi. The grid step holds a
+    whole (Bb, na, nr) slab; every intermediate stays in VMEM."""
+    it = iter(refs)
+    xr_ref, xi_ref = next(it), next(it)
+    const_plan = _mega_const_plan(spec)
+    consts = {axis: tuple(next(it)[...] for _ in range(len(cs)))
+              for axis, cs in const_plan}
+    seg_filts = [tuple(next(it)
+                       for _ in range(_filter_ref_count(s.filter_mode)))
+                 for s in spec.segments]
+    or_ref, oi_ref = next(it), next(it)
+
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    scale = None
+    if PRECISIONS[spec.precision].block_scaled:
+        xr, xi, scale = _block_scale_prologue(xr, xi)
+    for seg, filt in zip(spec.segments, seg_filts):
+        xr, xi = _run_segment(xr, xi, consts.get(seg.axis),
+                              spec.seg_spec(seg), seg, filt)
+    if scale is not None:
+        xr = xr * scale
+        xi = xi * scale
+    or_ref[...] = xr.reshape(or_ref.shape)
+    oi_ref[...] = xi.reshape(oi_ref.shape)
+
+
+def _staged_phases(spec: MegaSpec) -> tuple[list[dict], int]:
+    """Static phase schedule of the scratch-staged megakernel: one phase
+    per segment, stripping its free axis in `phase_block`-line blocks.
+    Returns (phases, total grid steps). Phase p reads from the raw input
+    (p=0) or the HBM scratch, and writes to the output (last p) or back
+    to the scratch — in-place when the axis repeats, corner-turned when
+    it flips (col-blocks written, row-blocks read, or vice versa)."""
+    phases: list[dict] = []
+    off = 0
+    last = len(spec.segments) - 1
+    for i, seg in enumerate(spec.segments):
+        lines = spec.na if seg.axis == 1 else spec.nr
+        pb = min(spec.phase_block, lines)
+        if lines % pb:
+            raise ValueError(
+                f"phase_block={pb} does not divide the free axis "
+                f"({lines} lines) of segment {i}")
+        phases.append(dict(
+            seg=seg, idx=i, axis=seg.axis, pb=pb, nblocks=lines // pb,
+            offset=off, src="x" if i == 0 else "scratch",
+            dst="out" if i == last else "scratch"))
+        off += lines // pb
+    return phases, off
+
+
+# DMA semaphore channels of the staged kernel, per double-buffer slot.
+_SEM_IN_R, _SEM_IN_I, _SEM_F_R, _SEM_F_I, _SEM_OUT_R, _SEM_OUT_I = range(6)
+
+
+def _mega_kernel_staged(spec: MegaSpec, *refs):
+    """Scratch-staged megakernel body — grid (B, total_steps).
+
+    Ref order: xr, xi (ANY), [per-axis DFT constants (VMEM)],
+    [per-segment filters: FULL pairs in ANY (DMA-sliced with the line
+    block), everything else resident in VMEM], or, oi (ANY), then
+    scratch: sr, si (ANY — the HBM corner-turn intermediate), the
+    double-buffered VMEM line slabs (rows and/or cols orientation, plus
+    FULL-filter slabs where needed), and the DMA semaphores (2 slots x 6
+    channels). Each step waits for its own slot's input DMA, immediately
+    starts the NEXT block's input DMA into the other slot, then runs the
+    segment's DFT matmuls — the copy/compute overlap the dispatch count
+    alone cannot buy.
+    """
+    phases, _ = _staged_phases(spec)
+    it = iter(refs)
+    xr_ref, xi_ref = next(it), next(it)
+    const_plan = _mega_const_plan(spec)
+    consts = {axis: tuple(next(it)[...] for _ in range(len(cs)))
+              for axis, cs in const_plan}
+    seg_filts = [tuple(next(it)
+                       for _ in range(_filter_ref_count(s.filter_mode)))
+                 for s in spec.segments]
+    or_ref, oi_ref = next(it), next(it)
+    sr_ref, si_ref = next(it), next(it)
+    bufs = {}
+    if any(p["axis"] == 1 for p in phases):
+        bufs[1] = next(it)
+    if any(p["axis"] == 0 for p in phases):
+        bufs[0] = next(it)
+    fbufs = {}
+    if any(p["axis"] == 1 and p["seg"].filter_mode == FILTER_FULL
+           for p in phases):
+        fbufs[1] = next(it)
+    if any(p["axis"] == 0 and p["seg"].filter_mode == FILTER_FULL
+           for p in phases):
+        fbufs[0] = next(it)
+    sems = next(it)
+
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+
+    def _sliced(ref, axis: int, lo, pb: int, batched: bool):
+        """A (pb, nr) row / (na, pb) col slab slice of a scene ref."""
+        if axis == 1:
+            return ref.at[b, pl.ds(lo, pb), :] if batched \
+                else ref.at[pl.ds(lo, pb), :]
+        return ref.at[b, :, pl.ds(lo, pb)] if batched \
+            else ref.at[:, pl.ds(lo, pb)]
+
+    for p in phases:
+        seg, axis, pb = p["seg"], p["axis"], p["pb"]
+        off, nb = p["offset"], p["nblocks"]
+        buf = bufs[axis]
+        fbuf = fbufs.get(axis)
+        sspec = spec.seg_spec(seg)
+        filt_refs = seg_filts[p["idx"]]
+        has_full = seg.filter_mode == FILTER_FULL
+        src_r, src_i = ((xr_ref, xi_ref) if p["src"] == "x"
+                        else (sr_ref, si_ref))
+        dst_r, dst_i = ((or_ref, oi_ref) if p["dst"] == "out"
+                        else (sr_ref, si_ref))
+        src_batched = p["src"] == "x"
+        dst_batched = p["dst"] == "out"
+
+        def in_copies(j, slot, seg=seg, axis=axis, pb=pb, buf=buf, fbuf=fbuf,
+                      src_r=src_r, src_i=src_i, src_batched=src_batched,
+                      filt_refs=filt_refs, has_full=has_full):
+            lo = j * pb
+            cps = [
+                pltpu.make_async_copy(
+                    _sliced(src_r, axis, lo, pb, src_batched),
+                    buf.at[slot, 0], sems.at[slot, _SEM_IN_R]),
+                pltpu.make_async_copy(
+                    _sliced(src_i, axis, lo, pb, src_batched),
+                    buf.at[slot, 1], sems.at[slot, _SEM_IN_I]),
+            ]
+            if has_full:
+                cps += [
+                    pltpu.make_async_copy(
+                        _sliced(filt_refs[0], axis, lo, pb, False),
+                        fbuf.at[slot, 0], sems.at[slot, _SEM_F_R]),
+                    pltpu.make_async_copy(
+                        _sliced(filt_refs[1], axis, lo, pb, False),
+                        fbuf.at[slot, 1], sems.at[slot, _SEM_F_I]),
+                ]
+            return cps
+
+        @pl.when((s >= off) & (s < off + nb))
+        def _(p=p, seg=seg, axis=axis, pb=pb, off=off, nb=nb, buf=buf,
+              fbuf=fbuf, sspec=sspec, filt_refs=filt_refs,
+              has_full=has_full, dst_r=dst_r, dst_i=dst_i,
+              dst_batched=dst_batched, in_copies=in_copies):
+            j = s - off
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j == 0)
+            def _():                       # phase start: blocking first fetch
+                for cp in in_copies(0, 0):
+                    cp.start()
+            for cp in in_copies(j, slot):
+                cp.wait()
+            @pl.when(j + 1 < nb)
+            def _():                       # prefetch overlaps the matmuls
+                for cp in in_copies(j + 1, 1 - slot):
+                    cp.start()
+
+            xr = buf[slot, 0][None]
+            xi = buf[slot, 1][None]
+            scale = None
+            if PRECISIONS[spec.precision].block_scaled:
+                xr, xi, scale = _block_scale_prologue(xr, xi)
+            lo = j * pb
+            if seg.filter_mode == FILTER_NONE:
+                filt = ()
+            elif has_full:
+                filt = (fbuf[slot, 0], fbuf[slot, 1])
+            elif seg.filter_mode == FILTER_SHARED:
+                filt = (filt_refs[0][...], filt_refs[1][...])
+            else:
+                # OUTER / SHARED_OUTER: the per-line u factor is sliced to
+                # the block in VMEM; shared vectors and v ride whole.
+                if axis == 1:
+                    u = filt_refs[-2][pl.ds(lo, pb), :]
+                    v = filt_refs[-1][...]
+                else:
+                    u = filt_refs[-2][:, pl.ds(lo, pb)]
+                    v = filt_refs[-1][...]
+                if seg.filter_mode == FILTER_SHARED_OUTER:
+                    filt = (filt_refs[0][...], filt_refs[1][...], u, v)
+                else:
+                    filt = (u, v)
+            xr, xi = _run_segment(xr, xi, consts.get(axis), sspec, seg, filt)
+            if scale is not None:
+                xr = xr * scale
+                xi = xi * scale
+            buf[slot, 0] = xr[0]
+            buf[slot, 1] = xi[0]
+            out_r = pltpu.make_async_copy(
+                buf.at[slot, 0], _sliced(dst_r, axis, lo, pb, dst_batched),
+                sems.at[slot, _SEM_OUT_R])
+            out_i = pltpu.make_async_copy(
+                buf.at[slot, 1], _sliced(dst_i, axis, lo, pb, dst_batched),
+                sems.at[slot, _SEM_OUT_I])
+            out_r.start()
+            out_i.start()
+            out_r.wait()
+            out_i.wait()
+
+
+def _mega_flops(spec: MegaSpec) -> float:
+    """Nominal algorithmic FLOPs of one scene through every segment."""
+    total = 0.0
+    for seg in spec.segments:
+        lines = spec.na if seg.axis == 1 else spec.nr
+        total += _flops_per_line(spec.seg_spec(seg)) * lines
+    return total
+
+
+def build_mega_call(spec: MegaSpec, batch: int = 1,
+                    interpret: bool = False):
+    """Returns fn(xr, xi, *filter_args) -> (yr, yi): the WHOLE multi-axis
+    spectral pipeline as one pallas_call.
+
+    x is a (batch, na, nr) split re/im float32 scene batch; filter_args
+    are the per-segment payloads in segment order, each in kernel layout
+    (see :func:`_seg_filter_shapes` — the `ops.mega_spectral_op` wrapper
+    handles scene-coordinate reshapes and batching sugar).
+
+    residency RESIDENT_VMEM  : grid over batch blocks, whole (Bb, na, nr)
+      slab in VMEM per step, zero HBM intermediates.
+    residency RESIDENT_STAGED: grid (batch, phase steps), manual
+      double-buffered DMA against an HBM scratch intermediate (see
+      :func:`_mega_kernel_staged`).
+    """
+    na, nr = spec.na, spec.nr
+    const_plan = _mega_const_plan(spec)
+    const_arrays = [jnp.asarray(c) for _, cs in const_plan for c in cs]
+    x_shape = (batch, na, nr)
+    out_shape = [
+        jax.ShapeDtypeStruct(x_shape, jnp.float32),
+        jax.ShapeDtypeStruct(x_shape, jnp.float32),
+    ]
+
+    if spec.residency == RESIDENT_VMEM:
+        bb = spec.batch_block or 1
+        if batch % bb:
+            raise ValueError(
+                f"batch={batch} not divisible by batch_block={bb}")
+        x_spec = pl.BlockSpec((bb, na, nr), lambda b: (b, 0, 0))
+        in_specs = [x_spec, x_spec]
+        in_specs += [pl.BlockSpec(c.shape, lambda b: (0, 0))
+                     for c in const_arrays]
+        for seg in spec.segments:
+            in_specs += [pl.BlockSpec(shape, lambda b: (0, 0))
+                         for shape in _seg_filter_shapes(spec, seg)]
+        call = pl.pallas_call(
+            functools.partial(_mega_kernel_resident, spec),
+            grid=(batch // bb,),
+            in_specs=in_specs,
+            out_specs=[x_spec, x_spec],
+            out_shape=out_shape,
+            interpret=interpret,
+        )
+    else:
+        phases, steps = _staged_phases(spec)
+        any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        in_specs = [any_spec, any_spec]
+        in_specs += [pl.BlockSpec(c.shape, lambda b, s: (0, 0))
+                     for c in const_arrays]
+        for seg in spec.segments:
+            if seg.filter_mode == FILTER_FULL:
+                in_specs += [any_spec, any_spec]
+            else:
+                in_specs += [pl.BlockSpec(shape, lambda b, s: (0, 0))
+                             for shape in _seg_filter_shapes(spec, seg)]
+        pb_r = next((p["pb"] for p in phases if p["axis"] == 1), None)
+        pb_c = next((p["pb"] for p in phases if p["axis"] == 0), None)
+        scratch = [pltpu.ANY((na, nr), jnp.float32),
+                   pltpu.ANY((na, nr), jnp.float32)]
+        if pb_r is not None:
+            scratch.append(pltpu.VMEM((2, 2, pb_r, nr), jnp.float32))
+        if pb_c is not None:
+            scratch.append(pltpu.VMEM((2, 2, na, pb_c), jnp.float32))
+        if any(p["axis"] == 1 and p["seg"].filter_mode == FILTER_FULL
+               for p in phases):
+            scratch.append(pltpu.VMEM((2, 2, pb_r, nr), jnp.float32))
+        if any(p["axis"] == 0 and p["seg"].filter_mode == FILTER_FULL
+               for p in phases):
+            scratch.append(pltpu.VMEM((2, 2, na, pb_c), jnp.float32))
+        scratch.append(pltpu.SemaphoreType.DMA((2, 6)))
+        call = pl.pallas_call(
+            functools.partial(_mega_kernel_staged, spec),
+            grid=(batch, steps),
+            in_specs=in_specs,
+            out_specs=[any_spec, any_spec],
+            out_shape=out_shape,
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )
+
+    def fn(xr, xi, *filter_args):
+        return call(xr, xi, *const_arrays, *filter_args)
+
+    fn.flops = _mega_flops(spec) * batch  # nominal, for benches
     return fn

@@ -28,16 +28,18 @@ from repro.kernels.fft4step import (
     FILTER_OUTER,
     FILTER_SHARED,
     FILTER_SHARED_OUTER,
+    RESIDENT_VMEM,
+    MegaSpec,
+    SegmentSpec,
     SpectralSpec,
+    auto_interpret,
+    build_mega_call,
     build_spectral_call,
     resolve_precision,
 )
 
-
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is not None:
-        return interpret
-    return jax.default_backend() != "tpu"
+# the one backend check every kernel wrapper shares (fft4step.auto_interpret)
+_auto_interpret = auto_interpret
 
 
 def _pad_lines(x, axis, mult):
@@ -148,6 +150,101 @@ def spectral_op(
         yr, yi = yr[:, :lines], yi[:, :lines]
     else:
         yr, yi = yr[:, :, :lines], yi[:, :, :lines]
+    if not batched:
+        return yr[0], yi[0]
+    return yr, yi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "segments", "residency", "batch_block", "phase_block", "fft_impl",
+        "karatsuba", "precision", "interpret", "n1", "n2", "n3",
+    ),
+)
+def mega_spectral_op(
+    xr,
+    xi,
+    *filter_args,
+    segments,
+    residency: str = RESIDENT_VMEM,
+    batch_block: Optional[int] = None,
+    phase_block: int = 8,
+    fft_impl: str = "matmul",
+    karatsuba: bool = False,
+    precision: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    n1: Optional[int] = None,
+    n2: Optional[int] = None,
+    n3: Optional[int] = None,
+):
+    """The single-dispatch 2-D megakernel: a whole multi-axis spectral
+    pipeline — `fft? mul* ifft?` segments with in-kernel corner turns
+    between them — as ONE fused dispatch.
+
+    x: one scene (na, nr) or a batch (B, na, nr), split re/im float32 in
+    scene layout (azimuth rows x range samples). ``segments`` is a static
+    tuple of ``(axis, fwd, inv, filter_mode)`` records in execution order
+    (axis 1 transforms the range axis, 0 the azimuth axis).
+    ``filter_args`` follow in segment order, each segment contributing its
+    mode's payload in SCENE coordinates (n = transformed-axis length,
+    lines = the other axis):
+
+      shared:       hr (n,), hi (n,)
+      full:         hr (na, nr), hi (na, nr)
+      outer:        u (lines,) or (lines, K); v (n,) or (n, K)
+      shared_outer: hr, hi, u, v
+
+    residency 'vmem' holds the whole (Bb, na, nr) slab on-chip (zero HBM
+    intermediates — the paper's single-dispatch claim); 'staged' runs a
+    phase-split grid with an HBM scratch corner-turn intermediate and
+    double-buffered DMA (large scenes). f32 results are bit-identical
+    between the modes and to the equivalent per-axis dispatch chain.
+    n1/n2/n3 override the RANGE-axis factorization (the azimuth axis uses
+    the default split), matching ``compile_plan``'s ``fft_kw`` convention.
+    """
+    precision = resolve_precision(precision).name
+    batched = xr.ndim == 3
+    if not batched:
+        xr = xr[None]
+        xi = xi[None]
+    b, na, nr = xr.shape
+
+    segs = []
+    args = list(filter_args)
+    prepared = []
+    ai = 0
+    for (axis, fwd, inv, fmode) in segments:
+        n = nr if axis == 1 else na
+        rank = 1
+        if fmode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
+            hr, hi = args[ai], args[ai + 1]
+            ai += 2
+            if fmode == FILTER_FULL:
+                prepared += [hr, hi]
+            else:
+                shape = (1, n) if axis == 1 else (n, 1)
+                prepared += [hr.reshape(shape), hi.reshape(shape)]
+        if fmode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+            u, v = args[ai], args[ai + 1]
+            ai += 2
+            u = u.reshape(u.shape[0], -1)
+            v = v.reshape(v.shape[0], -1)
+            rank = u.shape[1]
+            prepared += ([u, v.T] if axis == 1 else [u.T, v])
+        segs.append(SegmentSpec(axis=axis, fwd=fwd, inv=inv,
+                                filter_mode=fmode, outer_rank=rank))
+    if ai != len(args):
+        raise ValueError(
+            f"got {len(args)} filter arrays but segments consume {ai}")
+
+    spec = MegaSpec(
+        na=na, nr=nr, segments=tuple(segs), residency=residency,
+        batch_block=batch_block, phase_block=phase_block, n1=n1, n2=n2,
+        n3=n3, fft_impl=fft_impl, karatsuba=karatsuba, precision=precision)
+    call = build_mega_call(spec, batch=b,
+                           interpret=_auto_interpret(interpret))
+    yr, yi = call(xr, xi, *prepared)
     if not batched:
         return yr[0], yi[0]
     return yr, yi

@@ -4,6 +4,12 @@ The paper's azimuth steps spend 80% of runtime on global transposes; our
 production pipeline eliminates them with column-slab kernels (fft4step.py,
 axis=0), but the paper-faithful variant keeps them so the reproduction and
 the beyond-paper win can be measured separately (EXPERIMENTS.md §Perf).
+
+Ragged shapes (scene dims not divisible by the tile) stay on the Pallas
+path: the input is zero-padded up to the tile grid, transposed tiled, and
+the result sliced back — the paper-faithful variant is measured through
+the same kernel regardless of shape, instead of silently falling back to
+an XLA transpose that would corrupt the comparison.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.fft4step import auto_interpret
 
 
 def _transpose_kernel(x_ref, o_ref):
@@ -26,30 +34,34 @@ def _transpose_kernel_b(x_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def transpose(x, *, tile: int = 256, interpret: Optional[bool] = None):
     """Tiled (R, C) -> (C, R) transpose; (B, R, C) -> (B, C, R) batched
-    (one dispatch, grid over B x row-tiles x col-tiles). Tile must divide
-    both scene dims."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    (one dispatch, grid over B x row-tiles x col-tiles). Ragged dims are
+    padded to the tile grid and sliced after — always the Pallas kernel,
+    never an XLA fallback."""
+    interpret = auto_interpret(interpret)
     *lead, r, c = x.shape
     t = min(tile, r, c)
-    if r % t or c % t:
-        # fall back to XLA for ragged shapes (tests exercise the tiled path)
-        return jnp.swapaxes(x, -1, -2)
+    pr, pc = (-r) % t, (-c) % t
+    if pr or pc:
+        widths = [(0, 0)] * len(lead) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, widths)
+    rp, cp = r + pr, c + pc
     if not lead:
-        return pl.pallas_call(
+        y = pl.pallas_call(
             _transpose_kernel,
-            grid=(r // t, c // t),
+            grid=(rp // t, cp // t),
             in_specs=[pl.BlockSpec((t, t), lambda i, j: (i, j))],
             out_specs=pl.BlockSpec((t, t), lambda i, j: (j, i)),
-            out_shape=jax.ShapeDtypeStruct((c, r), x.dtype),
+            out_shape=jax.ShapeDtypeStruct((cp, rp), x.dtype),
             interpret=interpret,
         )(x)
+        return y[:c, :r] if (pr or pc) else y
     b = lead[0]
-    return pl.pallas_call(
+    y = pl.pallas_call(
         _transpose_kernel_b,
-        grid=(b, r // t, c // t),
+        grid=(b, rp // t, cp // t),
         in_specs=[pl.BlockSpec((1, t, t), lambda k, i, j: (k, i, j))],
         out_specs=pl.BlockSpec((1, t, t), lambda k, i, j: (k, j, i)),
-        out_shape=jax.ShapeDtypeStruct((b, c, r), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, cp, rp), x.dtype),
         interpret=interpret,
     )(x)
+    return y[:, :c, :r] if (pr or pc) else y

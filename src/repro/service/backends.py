@@ -8,7 +8,11 @@ shipped:
 ``local``    One-device execution through the warm compiled-pipeline
              cache (`core.plan.cached_pipeline`): per BatchKey, ONE
              Pipeline whose jit traces, filter payloads, and tuned
-             configs persist across requests. `warm()` optionally sweeps
+             configs persist across requests. Scenes whose whole slab
+             fits the VMEM budget are transparently routed from their
+             per-axis variant to its single-dispatch megakernel twin
+             (FUSED1_TWINS; f32 bit-identical, `fused1="off"` opts out).
+             `warm()` optionally sweeps
              a few (block, col_block) line-block configs on the real
              batched pipeline and pins the winner — interpret-mode CPU
              timing is too shape-dependent for the kernel-level cache
@@ -38,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import plan as planlib
+from repro.kernels.fft4step import resolve_precision
 from repro.service.queue import BatchKey
 from repro import tuning
 
@@ -61,6 +66,17 @@ def _resolve_blocks(cfg, block: Optional[int], col_block: Optional[int]):
 # actually runs.
 _bucket = tuning.bucket_batch
 
+# Per-axis variants with a single-dispatch megakernel twin: when the
+# scene's whole slab fits the VMEM budget (repro.tuning.cost.mega_residency
+# says 'vmem'), the local backend transparently serves these through the
+# fused1 pipeline — same math bit-for-bit at f32 (asserted in tests), one
+# dispatch and zero HBM intermediates instead of three round-trips.
+FUSED1_TWINS = {
+    "fused3": "fused1",
+    "csa_fused": "csa_fused1",
+    "omegak": "omegak_fused1",
+}
+
 
 def _pad_batch(batch: np.ndarray) -> np.ndarray:
     b = batch.shape[0]
@@ -77,13 +93,36 @@ class LocalBackend:
     name = "local"
 
     def __init__(self, sweep: Sequence[Tuple[Optional[int], Optional[int]]]
-                 = ((None, None), (32, -1)), tune_cache=None):
+                 = ((None, None), (32, -1)), tune_cache=None,
+                 fused1: str = "auto"):
+        if fused1 not in ("auto", "off"):
+            raise ValueError(f"fused1 must be 'auto' or 'off', got "
+                             f"{fused1!r}")
         self.sweep = tuple(sweep)
+        self.fused1 = fused1
         self._tune_cache = tune_cache       # None -> the shared default
         self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
         self._fns: Dict[BatchKey, callable] = {}
 
-    def _pipeline(self, key: BatchKey, batch: int = 1):
+    def _route_variant(self, key: BatchKey) -> str:
+        """The variant actually compiled for a BatchKey: VMEM-fitting
+        scenes requesting a per-axis variant with a megakernel twin are
+        served by the single-dispatch fused1 pipeline (`fused1="off"`
+        pins the requested variant). The route must be invisible — the
+        served image equals the requested variant's bit-for-bit — which
+        holds for every precision EXCEPT the block-scaled ones: bs16
+        extracts one exponent per dispatch, so one fused dispatch and
+        three would scale differently. Block-scaled requests keep their
+        per-axis pipeline."""
+        twin = FUSED1_TWINS.get(key.variant)
+        if (self.fused1 == "auto" and twin is not None
+                and not resolve_precision(key.precision).block_scaled
+                and tuning.cost.mega_residency(key.scene.na, key.scene.nr)
+                == "vmem"):
+            return twin
+        return key.variant
+
+    def _pipeline(self, key: BatchKey, batch: int = 1, route: bool = True):
         block, col_block = _resolve_blocks(
             key.scene, *self._best.get(key, (None, None)))
         kw = dict(batch=batch)
@@ -93,7 +132,8 @@ class LocalBackend:
             kw["block"] = block
         if col_block is not None:
             kw["col_block"] = col_block
-        return planlib.cached_pipeline(key.scene, key.variant, **kw)
+        variant = self._route_variant(key) if route else key.variant
+        return planlib.cached_pipeline(key.scene, variant, **kw)
 
     def _fn(self, key: BatchKey):
         if key not in self._fns:
@@ -132,7 +172,13 @@ class LocalBackend:
                 def measure(cand, iters):
                     blk, cb = cand
                     self._best[key] = (blk, cb)
-                    f = self._pipeline(key, batch=max_batch).jitted()
+                    # sweep the REQUESTED per-axis pipeline (route=False):
+                    # a mega-routed pipeline ignores (block, col_block), so
+                    # timing it would persist a noise winner to the cache —
+                    # the swept config is what execute_streamed and
+                    # fused1="off" processes actually consume
+                    f = self._pipeline(key, batch=max_batch,
+                                       route=False).jitted()
                     jax.block_until_ready(f(zeros))   # compile
                     t0 = time.perf_counter()
                     jax.block_until_ready(f(zeros))
@@ -166,9 +212,13 @@ class LocalBackend:
     def execute_streamed(self, key: BatchKey, raw: np.ndarray,
                          strips: int = 4) -> np.ndarray:
         """One host-resident scene through Pipeline.run_streamed (strip
-        transfer overlapped with compute; bit-identical to `execute`)."""
-        return np.asarray(self._pipeline(key).run_streamed(raw,
-                                                           strips=strips))
+        transfer overlapped with compute; bit-identical to `execute`).
+        Always runs the REQUESTED per-axis variant: the streaming
+        executor strips one free axis at a time, which a cross-axis
+        megakernel step deliberately refuses (fused1 routing only applies
+        to the in-memory path)."""
+        return np.asarray(self._pipeline(key, route=False)
+                          .run_streamed(raw, strips=strips))
 
 
 class ShardedBackend:

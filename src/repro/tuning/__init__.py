@@ -45,6 +45,7 @@ from repro.tuning.space import (
     CONFIG_KEYS,
     KIND_KERNEL,
     KIND_PIPELINE,
+    MEGA_KEYS,
     SPECTRAL_KEYS,
     KernelConfig,
     TuneKey,
@@ -57,7 +58,8 @@ from repro.tuning import cost
 
 __all__ = [
     "CACHE_SCHEMA", "CONFIG_KEYS", "DEFAULT_SNR_GATE_DB", "KIND_KERNEL",
-    "KIND_PIPELINE", "KernelConfig", "SPECTRAL_KEYS", "SearchResult",
+    "KIND_PIPELINE", "KernelConfig", "MEGA_KEYS", "SPECTRAL_KEYS",
+    "SearchResult",
     "TuneCache", "TuneKey", "best_config", "bucket_batch", "cached_config",
     "candidates", "clear_memory_cache", "cost", "default_cache_path",
     "device_fingerprint", "factorizations", "get_cache",

@@ -42,6 +42,8 @@ from typing import Optional
 
 from repro.kernels.fft4step import (
     MAX_FACTOR,
+    RESIDENT_STAGED,
+    RESIDENT_VMEM,
     SpectralSpec,
     _flops_per_line,
     default_factorization,
@@ -156,6 +158,59 @@ def predicted_seconds(config: KernelConfig, key: TuneKey,
     memory = bytes_moved / PEAK_HBM_BYTES
 
     return max(compute, memory) + 0.3 * min(compute, memory)
+
+
+# ---------------------------------------------------------------------------
+# Megakernel (fused1) residency feasibility
+# ---------------------------------------------------------------------------
+#
+# The single-dispatch megakernel has two execution modes and ONE decision:
+# does a whole (Bb, na, nr) scene slab — plus both axes' DFT constants and
+# the resident filter payloads — fit the ~16 MiB VMEM budget? If yes, the
+# VMEM-resident mode realizes the paper's zero-HBM-intermediate claim; if
+# not, the scratch-staged two-phase layout keeps the dispatch count at 1
+# while double-buffered DMA hides the corner-turn traffic. This is the
+# paper's 32 KiB threadgroup-memory cut, one tier up.
+
+def mega_vmem_bytes(na: int, nr: int, batch_block: int = 1,
+                    precision: Optional[str] = None,
+                    filter_bytes: int = 0) -> int:
+    """Approximate VMEM footprint of one VMEM-resident megakernel grid
+    step: the split re/im slab x3 (in + out + one out-of-place stage
+    intermediate), both axes' DFT constants, and the filter payloads."""
+    slab = 2 * 4 * batch_block * na * nr
+    footprint = 3 * slab
+    footprint += _const_bytes(default_factorization(nr))
+    footprint += _const_bytes(default_factorization(na))
+    footprint += filter_bytes
+    if resolve_precision(precision).block_scaled:
+        footprint += slab // 2               # f16 scaled copy of the slab
+    return footprint
+
+
+def staged_vmem_bytes(na: int, nr: int, phase_block: int = 8,
+                      filter_bytes: int = 0) -> int:
+    """VMEM footprint of the scratch-staged two-phase layout: the
+    double-buffered row and column line slabs (2 slots x re/im each, and
+    potentially a FULL-filter slab alongside), plus DFT constants for
+    both axes. The scene itself lives in the HBM scratch."""
+    pb_r = min(phase_block, na)
+    pb_c = min(phase_block, nr)
+    bufs = 2 * 2 * 4 * (pb_r * nr + na * pb_c)
+    bufs *= 2                                # worst case: FULL-filter slabs
+    bufs += _const_bytes(default_factorization(nr))
+    bufs += _const_bytes(default_factorization(na))
+    return bufs + filter_bytes
+
+
+def mega_residency(na: int, nr: int, batch_block: int = 1,
+                   precision: Optional[str] = None, filter_bytes: int = 0,
+                   vmem_budget: int = VMEM_BUDGET_BYTES) -> str:
+    """The residency mode the compiler picks when none is pinned: VMEM-
+    resident iff the whole slab fits the budget, else scratch-staged."""
+    fits = mega_vmem_bytes(na, nr, batch_block, precision,
+                           filter_bytes) <= vmem_budget
+    return RESIDENT_VMEM if fits else RESIDENT_STAGED
 
 
 def nominal_flops(key: TuneKey, fwd: bool = True, inv: bool = True,

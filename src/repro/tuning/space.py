@@ -34,6 +34,8 @@ import jax
 
 from repro.kernels.fft4step import (
     MAX_FACTOR,
+    RESIDENT_STAGED,
+    RESIDENT_VMEM,
     SpectralSpec,
     default_factorization,
     resolve_precision,
@@ -43,7 +45,10 @@ KIND_KERNEL = "kernel"       # one fused spectral dispatch (rows, fwd+inv)
 KIND_PIPELINE = "pipeline"   # a whole compiled plan (service warm sweep)
 
 SPECTRAL_KEYS = ("block", "n1", "n2", "n3", "karatsuba", "precision")
-CONFIG_KEYS = SPECTRAL_KEYS + ("col_block",)
+# megakernel (fused1) knobs: execution-residency mode of a cross-axis
+# single-dispatch step and its staged-phase line block
+MEGA_KEYS = ("residency", "phase_block")
+CONFIG_KEYS = SPECTRAL_KEYS + ("col_block",) + MEGA_KEYS
 
 
 def bucket_batch(b: int) -> int:
@@ -152,6 +157,8 @@ class KernelConfig:
     karatsuba: Optional[bool] = None     # tri-state: None defers too
     precision: Optional[str] = None
     col_block: Optional[int] = None
+    residency: Optional[str] = None      # megakernel mode: vmem | staged
+    phase_block: Optional[int] = None    # staged-phase line block
 
     def __post_init__(self):
         if self.precision is not None:
@@ -161,6 +168,15 @@ class KernelConfig:
             if f is not None and (f < 1 or f & (f - 1) or f > MAX_FACTOR):
                 raise ValueError(
                     f"{name}={f} is not a power of two <= {MAX_FACTOR}")
+        if self.residency not in (None, RESIDENT_VMEM, RESIDENT_STAGED):
+            raise ValueError(
+                f"residency={self.residency!r} is not one of "
+                f"{(RESIDENT_VMEM, RESIDENT_STAGED)}")
+        pb = self.phase_block
+        if pb is not None and (pb < 1 or pb & (pb - 1)):
+            raise ValueError(
+                f"phase_block={pb} is not a power of two (staged phases "
+                "strip power-of-two scene axes)")
 
     # -- views ---------------------------------------------------------------
     def spectral_kwargs(self) -> dict:
@@ -201,7 +217,7 @@ class KernelConfig:
         if any(k in overrides for k in ("n1", "n2", "n3")):
             for k in ("n1", "n2", "n3"):
                 d[k] = overrides.get(k)
-        for k in ("block", "karatsuba", "precision", "col_block"):
+        for k in ("block", "karatsuba", "precision", "col_block") + MEGA_KEYS:
             if overrides.get(k) is not None:
                 d[k] = overrides[k]
         return KernelConfig.from_dict(d)
