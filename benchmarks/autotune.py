@@ -71,6 +71,22 @@ def autotune(n: int, batch: int = 1, lines: int = 16, iters: int = 2,
     return dict(result.config.to_dict(), seconds=result.seconds)
 
 
+def explain(n: int, batch: int = 1, lines: int = 16,
+            blocks=(4, 8, 16), precisions=("f32",)) -> list[dict]:
+    """The cost model's itemized verdict on every candidate for (n, batch),
+    in rank order — what ``--explain`` prints, so the guided search's
+    candidate ordering (and the schedule graph's edge weights, which share
+    the same ``_dispatch_terms`` arithmetic) is debuggable without running
+    anything."""
+    key = tuning.TuneKey.kernel(n, batch, lines=lines)
+    pool = tuning.candidates(n, blocks=blocks, precisions=precisions)
+    rows = []
+    for cfg in tuning.cost.rank(pool, key):
+        bd = tuning.cost.cost_breakdown(cfg, key)
+        rows.append(dict(config=cfg.to_dict(), **bd))
+    return rows
+
+
 def best_config(n: int, batch: int = 1, cache_path: str = None,
                 tune_missing: bool = True) -> dict:
     """Cached best config for (n, batch) as a dict; guided search on
@@ -91,11 +107,34 @@ def main() -> None:
                          "pass the SNR-deviation gate)")
     ap.add_argument("--snr-gate-db", type=float, default=0.1)
     ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the cost model's per-candidate breakdown "
+                         "(matmul/vpu/memory seconds, roofline total, VMEM "
+                         "and structural feasibility) instead of searching")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     for n in args.n:
         for b in args.batch:
+            if args.explain:
+                header(f"cost model n={n} B={b} (no measurements)")
+                for i, row in enumerate(explain(
+                        n, b, lines=args.lines,
+                        precisions=tuple(args.precisions))):
+                    c = row["config"]
+                    n3 = f"x{c['n3']}" if c["n3"] else ""
+                    emit(f"explain_B{tuning.bucket_batch(b)}_n{n}"
+                         f"_{c['n1']}x{c['n2']}{n3}_blk{c['block']}"
+                         f"{'_kara' if c['karatsuba'] else ''}"
+                         f"_{c['precision'] or 'f32'}",
+                         row["predicted_seconds"],
+                         f"rank={i};matmul_us={row['matmul_seconds']*1e6:.2f};"
+                         f"vpu_us={row['vpu_seconds']*1e6:.2f};"
+                         f"memory_us={row['memory_seconds']*1e6:.2f};"
+                         f"vmem_kib={row['vmem_bytes']/1024:.0f};"
+                         f"vmem_ok={row['vmem_feasible']};"
+                         f"structural_ok={row['structurally_feasible']}")
+                continue
             header(f"autotune n={n} B={b} "
                    f"(guided search, device={tuning.device_fingerprint()})")
             best = autotune(n, b, lines=args.lines, verbose=args.verbose,

@@ -6,7 +6,15 @@ same workload (the fused fwd+inv rows dispatch):
 * **exhaustive** — time every feasible candidate, the pre-subsystem
   benchmarks/autotune.py behavior;
 * **guided** — `repro.tuning.search_kernel`: roofline-cost ranking,
-  measure only the top fraction, successive halving.
+  measure only the top fraction, successive halving;
+* **graph** — `repro.tuning.search_schedule`: the schedule-DAG
+  shortest-path frontier (budgeted to the guided replay's measurement
+  count) refined by the same halving engine, replayed against the
+  exhaustive pass's memoized timings. Its row carries the two booleans
+  the CI tuning ratchet gates (`scripts/bench_compare.py --tuning`
+  against ``benchmarks/baseline_tuning.json``): it timed no more
+  candidates than the guided replay, and its winner matched or beat the
+  guided winner on the shared numbers.
 
 and records, per point: each search's winner + wall time, how many
 candidates each actually timed (the guided search must time strictly
@@ -89,6 +97,18 @@ def run_point(n: int, batch: int, lines: int = 16,
         key, precisions=precisions, persist=False,
         measure=lambda c, iters: measured[c])
 
+    # graph-search policy replay against the SAME memoized measurements,
+    # with the frontier budget set to the flat replay's measurement count
+    # (budget parity): the schedule-graph search must time no more
+    # candidates than successive halving while matching or beating its
+    # winner — the two booleans the table_7 ratchet
+    # (scripts/bench_compare.py --tuning) gates in CI.
+    problem = tuning.ScheduleProblem.kernel(n, batch=batch, lines=lines)
+    graph = tuning.search_schedule(
+        problem, key, persist=False, precisions=precisions,
+        k=max(1, replay.measured),
+        measure=lambda s, iters: measured[s.to_config()])
+
     ranked = cost.rank(list(measured), key)
     pred_rank_of_winner = ranked.index(ex_cfg) if ex_cfg in ranked else -1
     rho = _spearman(ranked, measured)
@@ -110,13 +130,21 @@ def run_point(n: int, batch: int, lines: int = 16,
          f"winner={_fmt(replay.config)};timed={replay.measured};"
          f"same_winner={same};"
          f"fewer_timed={replay.measured < ex_timed}")
+    emit(f"tuning_graph_B{key.batch}_n{n}", graph.seconds,
+         f"winner={_fmt(graph.config)};timed={graph.measured};"
+         f"space={graph.space};"
+         f"no_more_timed={graph.measured <= replay.measured};"
+         f"winner_le={graph.seconds <= replay.seconds}")
     emit(f"tuning_rank_quality_B{key.batch}_n{n}", 0.0,
          f"spearman_rho={rho:.3f};"
          f"predicted_rank_of_measured_best={pred_rank_of_winner};"
          f"feasible={len(ranked)}")
     return {"same_winner": same,
             "fewer_timed": replay.measured < ex_timed,
-            "guided_timed": replay.measured, "exhaustive_timed": ex_timed}
+            "guided_timed": replay.measured, "exhaustive_timed": ex_timed,
+            "graph_timed": graph.measured,
+            "graph_no_more_timed": graph.measured <= replay.measured,
+            "graph_winner_le": graph.seconds <= replay.seconds}
 
 
 def run(full: bool = False, smoke: bool = False) -> None:

@@ -60,6 +60,8 @@ def load_rows(doc: dict) -> dict:
 
 
 DEFAULT_BASELINE = os.path.join(_ROOT, "benchmarks", "baseline_rda.json")
+DEFAULT_TUNING_BASELINE = os.path.join(_ROOT, "benchmarks",
+                                       "baseline_tuning.json")
 
 
 def baseline_doc(path_or_none: str, ref: str) -> dict:
@@ -130,6 +132,62 @@ def compare(base: dict, fresh: dict, pattern: str, threshold: float,
     return failures
 
 
+def _derived(row: dict) -> dict:
+    """A row's ``k=v;k=v`` derived string as a dict."""
+    out = {}
+    for part in (row.get("derived") or "").split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def compare_tuning(base: dict, fresh: dict) -> list[str]:
+    """The table_7 policy ratchet over ``BENCH_tuning.json``.
+
+    Wall time is the wrong gate for the tuner bench (interpret-mode
+    timings measure the emulator); what must not regress is the SEARCH
+    POLICY, which is deterministic. Every fresh ``tuning_graph_*`` row
+    must (a) hold its in-run invariants — the schedule-graph search timed
+    no more candidates than the flat successive-halving replay and its
+    winner matched or beat the replay's on the shared memoized
+    measurements — and (b) not time MORE candidates than the committed
+    baseline's matching row (counts are deterministic, so this leg is
+    machine-independent; rows are matched by name because the section
+    header embeds the device fingerprint)."""
+    base_by_name = {r["name"]: r for r in base.get("rows", [])}
+    failures: list[str] = []
+    compared = 0
+    for row in sorted(fresh.get("rows", []), key=lambda r: r["name"]):
+        if not row["name"].startswith("tuning_graph_"):
+            continue
+        compared += 1
+        d = _derived(row)
+        if d.get("no_more_timed") != "True":
+            failures.append(
+                f"{row['name']}: graph search timed more candidates than "
+                f"the flat successive-halving replay (timed={d.get('timed')})")
+        if d.get("winner_le") != "True":
+            failures.append(
+                f"{row['name']}: graph winner ({d.get('winner')}) slower "
+                f"than the flat replay winner on shared measurements")
+        old = base_by_name.get(row["name"])
+        if old is None:
+            print(f"  new row (no baseline): {row['name']}")
+            continue
+        ob, nb = _derived(old).get("timed"), d.get("timed")
+        if ob is not None and nb is not None and int(nb) > int(ob):
+            failures.append(f"{row['name']}: timed {nb} candidates > "
+                            f"baseline {ob}")
+        else:
+            print(f"  {row['name']}: timed {nb} (baseline {ob}), "
+                  f"winner {d.get('winner')} OK")
+    if compared == 0:
+        failures.append("no tuning_graph_* rows in the fresh artifact")
+    print(f"# tuning ratchet compared {compared} graph rows")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_rda.json",
@@ -149,9 +207,30 @@ def main() -> int:
     ap.add_argument("--reference", default="rda_unfused",
                     help="in-run reference row normalizing machine speed "
                          "('' disables)")
+    ap.add_argument("--tuning", action="store_true",
+                    help="ratchet the table_7 tuner-policy artifact "
+                         "(BENCH_tuning.json vs benchmarks/"
+                         "baseline_tuning.json) instead of wall time")
     args = ap.parse_args()
 
     from benchmarks.common import validate_bench_doc
+    if args.tuning:
+        fresh_path = ("BENCH_tuning.json" if args.fresh == "BENCH_rda.json"
+                      else args.fresh)
+        with open(fresh_path) as f:
+            fresh = validate_bench_doc(json.load(f))
+        bpath = args.baseline or DEFAULT_TUNING_BASELINE
+        if not os.path.exists(bpath):
+            raise SystemExit(f"no tuning baseline at {bpath}")
+        with open(bpath) as f:
+            base = json.load(f)
+        failures = compare_tuning(base, fresh)
+        if failures:
+            print("# TUNING RATCHET FAILED:")
+            for msg in failures:
+                print(f"#   {msg}")
+            return 1
+        return 0
     with open(args.fresh) as f:
         fresh = validate_bench_doc(json.load(f))
     base = baseline_doc(args.baseline, args.ref)

@@ -69,7 +69,7 @@ from repro.kernels.fft4step import (
     resolve_precision,
 )
 from repro.kernels.transpose import transpose as tiled_transpose
-from repro.tuning import KernelConfig, cached_config
+from repro.tuning import KernelConfig, Schedule, SegmentConfig, cached_config
 
 BACKEND_PALLAS = "pallas"   # fused single-dispatch Pallas kernels
 BACKEND_XLA = "xla"         # one jnp op per atom (the unfused oracle)
@@ -628,6 +628,37 @@ def _tuned_config(n: int, batch: int) -> KernelConfig:
     return cached_config(n, batch) or KernelConfig()
 
 
+def _schedule_segments(opts, count: int) -> tuple:
+    """Consume ``count`` per-segment configs from the compile-wide
+    schedule cursor. Spectral steps take one, a mega-fused group one per
+    in-kernel segment, so a Schedule's segments map onto the plan's
+    spectral segments in compile order. Empty configs when compiling
+    without a schedule; a schedule shorter than the plan pads with empty
+    configs too (``Schedule.segment`` past-the-end behaviour)."""
+    sched = opts["schedule"]
+    if sched is None:
+        return (SegmentConfig(),) * count
+    lo = opts["_seg_cursor"][0]
+    opts["_seg_cursor"][0] = lo + count
+    return tuple(sched.segment(lo + i) for i in range(count))
+
+
+def _schedule_globals(tuned: KernelConfig, opts) -> KernelConfig:
+    """The schedule's dispatch-global knobs applied over the tuned-cache
+    config. Runs BEFORE the explicit fft_kw merge, so the resolution
+    order stays: explicit compile args > schedule > tuned cache >
+    library defaults."""
+    sched = opts["schedule"]
+    if sched is None:
+        return tuned
+    knobs = dict(block=sched.block, col_block=sched.col_block,
+                 precision=sched.precision, residency=sched.residency,
+                 phase_block=sched.phase_block,
+                 buffer_depth=sched.buffer_depth)
+    return tuned.merge_overrides(
+        {k: v for k, v in knobs.items() if v is not None})
+
+
 def _payload_to_device(mode: str, arrays: tuple, axis: int,
                        transposed: bool) -> dict:
     """Scene-coordinate payload -> ops.spectral_op kwargs in the physical
@@ -672,10 +703,16 @@ def _make_spectral_step(group, mode, arrays, *, cfg, transposed, backend,
     name = group[0].stage.name
 
     # per-dispatch kernel config: explicit compile args > stage precision >
-    # tuned cache entry > library defaults
+    # schedule > tuned cache entry > library defaults
     tuned = _tuned_config(n, opts["batch"]) if (
         backend == BACKEND_PALLAS and opts["tune"] != "off") else \
         KernelConfig()
+    tuned = _schedule_globals(tuned, opts)
+    seg = _schedule_segments(opts, 1)[0]
+    if seg.n1 is not None:
+        tuned = tuned.merge_overrides(dict(n1=seg.n1, n2=seg.n2, n3=seg.n3))
+    if seg.karatsuba is not None:
+        tuned = tuned.merge_overrides(dict(karatsuba=seg.karatsuba))
     fkw = opts["fft_kw"] if axis == 1 else None
     if fkw:
         tuned = tuned.merge_overrides(fkw)
@@ -779,6 +816,8 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
     tuned = _tuned_config(cfg.nr, opts["batch"]) if (
         backend == BACKEND_PALLAS and opts["tune"] != "off") else \
         KernelConfig()
+    tuned = _schedule_globals(tuned, opts)
+    seg_cfgs = _schedule_segments(opts, len(segs))
     if opts["fft_kw"]:
         tuned = tuned.merge_overrides(opts["fft_kw"])
     stage_prec = next((a.stage.precision for a in group
@@ -794,12 +833,22 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
             filter_bytes=sum(int(a.size) * 4 for a in filter_args))
     phase_block = opts["phase_block"] or tuned.phase_block or 8
 
+    # per-segment schedule decisions ride as extended 8-field segment
+    # records (axis, fwd, inv, mode, n1, n2, n3, karatsuba) — the kernel
+    # resolves each against the dispatch-global factorization/karatsuba
+    if any(sc != SegmentConfig() for sc in seg_cfgs):
+        segments = tuple(
+            rec + (sc.n1, sc.n2, sc.n3, sc.karatsuba)
+            for rec, sc in zip(segments, seg_cfgs))
+
     kernel_kw = dict(
         segments=segments, residency=residency, phase_block=phase_block,
         fft_impl=opts["fft_impl"], interpret=opts["interpret"],
         precision=precision, n1=tuned.n1, n2=tuned.n2, n3=tuned.n3,
         karatsuba=bool(tuned.karatsuba),
     )
+    if tuned.buffer_depth is not None:
+        kernel_kw["buffer_depth"] = tuned.buffer_depth
 
     if backend == BACKEND_PALLAS:
         def fn(x, _fa=tuple(filter_args)):
@@ -899,6 +948,7 @@ def compile_plan(
     fft_kw: Optional[dict] = None,
     residency: Optional[str] = None,
     phase_block: Optional[int] = None,
+    schedule: Optional[Schedule] = None,
 ) -> Pipeline:
     """Compile a plan against a concrete scene into a :class:`Pipeline`.
 
@@ -928,6 +978,14 @@ def compile_plan(
       repro.tuning cache; 'off' uses library defaults.
     fft_kw: explicit config for range-axis (axis=1) dispatches — e.g. a
       just-measured factorization from a repro.tuning search.
+    schedule: a :class:`repro.tuning.Schedule` (the schedule-graph search
+      winner) to compile through. Its dispatch-global knobs override the
+      tuned-cache entry and its per-segment factorization/karatsuba
+      decisions map onto the plan's spectral segments in compile order —
+      a mega-fused group consumes one per in-kernel segment, reaching
+      the kernel as extended segment records; other spectral steps one
+      each. Explicit per-knob compile args (block, precision, fft_kw,
+      residency, ...) still win over the schedule.
 
     Cache behaviour: composed filter payloads are served from the bounded
     ``(cfg, plan, fuse, backend)`` payload cache and the underlying host
@@ -943,7 +1001,8 @@ def compile_plan(
     opts = dict(batch=batch, tune=tune, fft_kw=fft_kw or {}, block=block,
                 col_block=col_block, fft_impl=fft_impl,
                 interpret=interpret, precision=precision,
-                residency=residency, phase_block=phase_block)
+                residency=residency, phase_block=phase_block,
+                schedule=schedule, _seg_cursor=[0])
     steps: list[Step] = []
     transposed = False
     for group, (mode, arrays) in zip(groups, payloads):

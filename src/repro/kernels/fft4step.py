@@ -743,13 +743,24 @@ def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
 
 @dataclasses.dataclass(frozen=True)
 class SegmentSpec:
-    """One per-axis `fft? mul* ifft?` run inside a megakernel dispatch."""
+    """One per-axis `fft? mul* ifft?` run inside a megakernel dispatch.
+
+    The per-segment scheduling fields (``n1/n2/n3``, ``karatsuba``) let a
+    tuned Schedule give EACH segment its own factorization and complex-
+    product algorithm — the part of the schedule space a single global
+    MegaSpec knob cannot express. ``None`` defers to the MegaSpec-level
+    value (and from there to the library default), so legacy specs are
+    unchanged."""
 
     axis: int                      # scene axis: 1 = range/rows, 0 = azimuth/cols
     fwd: bool = False
     inv: bool = False
     filter_mode: str = FILTER_NONE
     outer_rank: int = 1
+    n1: Optional[int] = None       # per-segment factorization override
+    n2: Optional[int] = None
+    n3: Optional[int] = None
+    karatsuba: Optional[bool] = None   # tri-state: None defers to MegaSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -766,6 +777,7 @@ class MegaSpec:
                                        # constants stay resident across
                                        # steps — their block never moves)
     phase_block: int = 8           # lines per staged-phase grid step
+    buffer_depth: int = 2          # staged DMA slots (1 = no overlap)
     n1: Optional[int] = None       # range-axis factorization override
     n2: Optional[int] = None       #   (azimuth uses default_factorization;
     n3: Optional[int] = None       #    same convention as compile_plan's fft_kw)
@@ -778,6 +790,9 @@ class MegaSpec:
             raise ValueError("MegaSpec needs at least one segment")
         if self.residency not in (RESIDENT_VMEM, RESIDENT_STAGED):
             raise ValueError(f"unknown residency {self.residency!r}")
+        if self.buffer_depth < 1:
+            raise ValueError(
+                f"buffer_depth must be >= 1, got {self.buffer_depth}")
         for s in self.segments:
             if s.axis not in (0, 1):
                 raise ValueError(f"segment axis must be 0 or 1, got {s.axis}")
@@ -788,14 +803,20 @@ class MegaSpec:
     def seg_spec(self, seg: SegmentSpec) -> SpectralSpec:
         """The per-axis SpectralSpec view of one segment (drives _run_fft
         and the DFT-constant layout — numerics identical to the per-axis
-        kernel by construction)."""
+        kernel by construction). Factorization precedence: the segment's
+        own override > the MegaSpec range-axis knobs (axis 1 only, the
+        compile_plan fft_kw convention) > library default; karatsuba:
+        segment override > MegaSpec global."""
         kw = {}
         if seg.axis == 1:
             kw = dict(n1=self.n1, n2=self.n2, n3=self.n3)
+        if seg.n1 is not None:
+            kw = dict(n1=seg.n1, n2=seg.n2, n3=seg.n3)
+        kara = self.karatsuba if seg.karatsuba is None else seg.karatsuba
         return SpectralSpec(
             n=self.nr if seg.axis == 1 else self.na,
             fwd=seg.fwd, inv=seg.inv, filter_mode=seg.filter_mode,
-            axis=seg.axis, fft_impl=self.fft_impl, karatsuba=self.karatsuba,
+            axis=seg.axis, fft_impl=self.fft_impl, karatsuba=kara,
             precision=self.precision, outer_rank=seg.outer_rank, **kw)
 
     @property
@@ -805,18 +826,28 @@ class MegaSpec:
                    if a.axis != b.axis)
 
 
-def _mega_const_plan(spec: MegaSpec) -> list[tuple[int, tuple]]:
-    """(axis, dft_constants) per distinct transformed axis, in first-use
-    order — each axis's constants are one set of broadcast operands shared
-    by every segment (and every scene in the batch block) on that axis."""
-    out: list[tuple[int, tuple]] = []
+def _seg_const_key(spec: MegaSpec, seg: SegmentSpec) -> tuple:
+    """The constants-sharing key of one segment: (axis, factorization).
+    Segments on one axis share one broadcast-operand set ONLY while they
+    agree on the factorization — a schedule that gives two same-axis
+    segments different radix splits gets one set each."""
+    return (seg.axis, spec.seg_spec(seg).factors())
+
+
+def _mega_const_plan(spec: MegaSpec) -> list[tuple[tuple, tuple]]:
+    """((axis, factors), dft_constants) per distinct transformed
+    (axis, factorization), in first-use order — one set of broadcast
+    operands shared by every segment (and every scene in the batch block)
+    that transforms that axis with those factors."""
+    out: list[tuple[tuple, tuple]] = []
     if spec.fft_impl != "matmul":
         return out
     seen = set()
     for seg in spec.segments:
-        if (seg.fwd or seg.inv) and seg.axis not in seen:
-            seen.add(seg.axis)
-            out.append((seg.axis, dft_constants(*spec.seg_spec(seg).factors())))
+        key = _seg_const_key(spec, seg)
+        if (seg.fwd or seg.inv) and key not in seen:
+            seen.add(key)
+            out.append((key, dft_constants(*key[1])))
     return out
 
 
@@ -858,8 +889,8 @@ def _mega_kernel_resident(spec: MegaSpec, *refs):
     it = iter(refs)
     xr_ref, xi_ref = next(it), next(it)
     const_plan = _mega_const_plan(spec)
-    consts = {axis: tuple(next(it)[...] for _ in range(len(cs)))
-              for axis, cs in const_plan}
+    consts = {key: tuple(next(it)[...] for _ in range(len(cs)))
+              for key, cs in const_plan}
     seg_filts = [tuple(next(it)
                        for _ in range(_filter_ref_count(s.filter_mode)))
                  for s in spec.segments]
@@ -871,7 +902,7 @@ def _mega_kernel_resident(spec: MegaSpec, *refs):
     if PRECISIONS[spec.precision].block_scaled:
         xr, xi, scale = _block_scale_prologue(xr, xi)
     for seg, filt in zip(spec.segments, seg_filts):
-        xr, xi = _run_segment(xr, xi, consts.get(seg.axis),
+        xr, xi = _run_segment(xr, xi, consts.get(_seg_const_key(spec, seg)),
                               spec.seg_spec(seg), seg, filt)
     if scale is not None:
         xr = xr * scale
@@ -927,8 +958,8 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
     it = iter(refs)
     xr_ref, xi_ref = next(it), next(it)
     const_plan = _mega_const_plan(spec)
-    consts = {axis: tuple(next(it)[...] for _ in range(len(cs)))
-              for axis, cs in const_plan}
+    consts = {key: tuple(next(it)[...] for _ in range(len(cs)))
+              for key, cs in const_plan}
     seg_filts = [tuple(next(it)
                        for _ in range(_filter_ref_count(s.filter_mode)))
                  for s in spec.segments]
@@ -1003,18 +1034,27 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
               has_full=has_full, dst_r=dst_r, dst_i=dst_i,
               dst_batched=dst_batched, in_copies=in_copies):
             j = s - off
-            slot = jax.lax.rem(j, 2)
+            depth = spec.buffer_depth
+            if depth == 1:
+                # single slot: no copy/compute overlap — fetch, wait, run
+                slot = 0
+                for cp in in_copies(j, 0):
+                    cp.start()
+                for cp in in_copies(j, 0):
+                    cp.wait()
+            else:
+                slot = jax.lax.rem(j, depth)
 
-            @pl.when(j == 0)
-            def _():                       # phase start: blocking first fetch
-                for cp in in_copies(0, 0):
-                    cp.start()
-            for cp in in_copies(j, slot):
-                cp.wait()
-            @pl.when(j + 1 < nb)
-            def _():                       # prefetch overlaps the matmuls
-                for cp in in_copies(j + 1, 1 - slot):
-                    cp.start()
+                @pl.when(j == 0)
+                def _():                   # phase start: blocking first fetch
+                    for cp in in_copies(0, 0):
+                        cp.start()
+                for cp in in_copies(j, slot):
+                    cp.wait()
+                @pl.when(j + 1 < nb)
+                def _():                   # prefetch overlaps the matmuls
+                    for cp in in_copies(j + 1, jax.lax.rem(j + 1, depth)):
+                        cp.start()
 
             xr = buf[slot, 0][None]
             xi = buf[slot, 1][None]
@@ -1041,7 +1081,8 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
                     filt = (filt_refs[0][...], filt_refs[1][...], u, v)
                 else:
                     filt = (u, v)
-            xr, xi = _run_segment(xr, xi, consts.get(axis), sspec, seg, filt)
+            xr, xi = _run_segment(xr, xi, consts.get(_seg_const_key(spec, seg)),
+                                  sspec, seg, filt)
             if scale is not None:
                 xr = xr * scale
                 xi = xi * scale
@@ -1127,19 +1168,20 @@ def build_mega_call(spec: MegaSpec, batch: int = 1,
                              for shape in _seg_filter_shapes(spec, seg)]
         pb_r = next((p["pb"] for p in phases if p["axis"] == 1), None)
         pb_c = next((p["pb"] for p in phases if p["axis"] == 0), None)
+        depth = spec.buffer_depth
         scratch = [pltpu.ANY((na, nr), jnp.float32),
                    pltpu.ANY((na, nr), jnp.float32)]
         if pb_r is not None:
-            scratch.append(pltpu.VMEM((2, 2, pb_r, nr), jnp.float32))
+            scratch.append(pltpu.VMEM((depth, 2, pb_r, nr), jnp.float32))
         if pb_c is not None:
-            scratch.append(pltpu.VMEM((2, 2, na, pb_c), jnp.float32))
+            scratch.append(pltpu.VMEM((depth, 2, na, pb_c), jnp.float32))
         if any(p["axis"] == 1 and p["seg"].filter_mode == FILTER_FULL
                for p in phases):
-            scratch.append(pltpu.VMEM((2, 2, pb_r, nr), jnp.float32))
+            scratch.append(pltpu.VMEM((depth, 2, pb_r, nr), jnp.float32))
         if any(p["axis"] == 0 and p["seg"].filter_mode == FILTER_FULL
                for p in phases):
-            scratch.append(pltpu.VMEM((2, 2, na, pb_c), jnp.float32))
-        scratch.append(pltpu.SemaphoreType.DMA((2, 6)))
+            scratch.append(pltpu.VMEM((depth, 2, na, pb_c), jnp.float32))
+        scratch.append(pltpu.SemaphoreType.DMA((depth, 6)))
         call = pl.pallas_call(
             functools.partial(_mega_kernel_staged, spec),
             grid=(batch, steps),

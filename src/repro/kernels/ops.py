@@ -158,7 +158,8 @@ def spectral_op(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "segments", "residency", "batch_block", "phase_block", "fft_impl",
+        "segments", "residency", "batch_block", "phase_block",
+        "buffer_depth", "fft_impl",
         "karatsuba", "precision", "interpret", "n1", "n2", "n3",
     ),
 )
@@ -170,6 +171,7 @@ def mega_spectral_op(
     residency: str = RESIDENT_VMEM,
     batch_block: Optional[int] = None,
     phase_block: int = 8,
+    buffer_depth: int = 2,
     fft_impl: str = "matmul",
     karatsuba: bool = False,
     precision: Optional[str] = None,
@@ -185,7 +187,11 @@ def mega_spectral_op(
     x: one scene (na, nr) or a batch (B, na, nr), split re/im float32 in
     scene layout (azimuth rows x range samples). ``segments`` is a static
     tuple of ``(axis, fwd, inv, filter_mode)`` records in execution order
-    (axis 1 transforms the range axis, 0 the azimuth axis).
+    (axis 1 transforms the range axis, 0 the azimuth axis); a record may
+    extend to ``(axis, fwd, inv, filter_mode, n1, n2, n3, karatsuba)`` to
+    pin THAT segment's factorization and complex-product algorithm — the
+    per-segment decisions a tuned ``repro.tuning.Schedule`` carries
+    (``None`` fields defer to the global knobs below).
     ``filter_args`` follow in segment order, each segment contributing its
     mode's payload in SCENE coordinates (n = transformed-axis length,
     lines = the other axis):
@@ -198,8 +204,9 @@ def mega_spectral_op(
     residency 'vmem' holds the whole (Bb, na, nr) slab on-chip (zero HBM
     intermediates — the paper's single-dispatch claim); 'staged' runs a
     phase-split grid with an HBM scratch corner-turn intermediate and
-    double-buffered DMA (large scenes). f32 results are bit-identical
-    between the modes and to the equivalent per-axis dispatch chain.
+    ``buffer_depth``-slot DMA buffering (large scenes; depth 1 disables
+    the copy/compute overlap). f32 results are bit-identical between the
+    modes and to the equivalent per-axis dispatch chain.
     n1/n2/n3 override the RANGE-axis factorization (the azimuth axis uses
     the default split), matching ``compile_plan``'s ``fft_kw`` convention.
     """
@@ -214,7 +221,17 @@ def mega_spectral_op(
     args = list(filter_args)
     prepared = []
     ai = 0
-    for (axis, fwd, inv, fmode) in segments:
+    for seg_rec in segments:
+        if len(seg_rec) == 4:
+            (axis, fwd, inv, fmode), seg_kw = seg_rec, {}
+        elif len(seg_rec) == 8:
+            axis, fwd, inv, fmode = seg_rec[:4]
+            seg_kw = dict(zip(("n1", "n2", "n3", "karatsuba"), seg_rec[4:]))
+        else:
+            raise ValueError(
+                f"segment record must have 4 fields (axis, fwd, inv, "
+                f"filter_mode) or 8 (+ n1, n2, n3, karatsuba), got "
+                f"{len(seg_rec)}")
         n = nr if axis == 1 else na
         rank = 1
         if fmode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
@@ -233,14 +250,16 @@ def mega_spectral_op(
             rank = u.shape[1]
             prepared += ([u, v.T] if axis == 1 else [u.T, v])
         segs.append(SegmentSpec(axis=axis, fwd=fwd, inv=inv,
-                                filter_mode=fmode, outer_rank=rank))
+                                filter_mode=fmode, outer_rank=rank,
+                                **seg_kw))
     if ai != len(args):
         raise ValueError(
             f"got {len(args)} filter arrays but segments consume {ai}")
 
     spec = MegaSpec(
         na=na, nr=nr, segments=tuple(segs), residency=residency,
-        batch_block=batch_block, phase_block=phase_block, n1=n1, n2=n2,
+        batch_block=batch_block, phase_block=phase_block,
+        buffer_depth=buffer_depth, n1=n1, n2=n2,
         n3=n3, fft_impl=fft_impl, karatsuba=karatsuba, precision=precision)
     call = build_mega_call(spec, batch=b,
                            interpret=_auto_interpret(interpret))

@@ -102,6 +102,7 @@ class LocalBackend:
         self.fused1 = fused1
         self._tune_cache = tune_cache       # None -> the shared default
         self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
+        self._sched: Dict[BatchKey, "tuning.Schedule"] = {}
         self._fns: Dict[BatchKey, callable] = {}
 
     def _route_variant(self, key: BatchKey) -> str:
@@ -132,6 +133,9 @@ class LocalBackend:
             kw["block"] = block
         if col_block is not None:
             kw["col_block"] = col_block
+        sched = self._sched.get(key)
+        if sched is not None:
+            kw["schedule"] = sched
         variant = self._route_variant(key) if route else key.variant
         return planlib.cached_pipeline(key.scene, variant, **kw)
 
@@ -163,11 +167,21 @@ class LocalBackend:
             tkey = self._tune_key(key, max_batch)
             try:
                 hit = tune_cache.get(tkey)
+                sched = tune_cache.get_schedule(tkey)
             except Exception:
-                hit = None    # corrupt/foreign-schema file: fall back to
+                hit = sched = None
+                              # corrupt/foreign-schema file: fall back to
                               # the in-process sweep, never fail warm-up
             if hit is not None:
                 self._best[key] = (hit.block, hit.col_block)
+                # a persisted graph-search Schedule carries per-segment
+                # decisions the flat config can't express — compile the
+                # served pipeline through it; a degenerate (flat-derived)
+                # schedule adds nothing, so skip it and keep the cache
+                # key identical to the pre-schedule one
+                if sched is not None and \
+                        sched != tuning.Schedule.from_config(hit):
+                    self._sched[key] = sched
             else:
                 def measure(cand, iters):
                     blk, cb = cand

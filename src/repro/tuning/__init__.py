@@ -30,24 +30,35 @@ from repro.tuning.cache import (
     default_cache_path,
     get_cache,
     migrate_legacy_doc,
+    migrate_schema1_doc,
     validate_cache_doc,
 )
 from repro.tuning.search import (
     DEFAULT_SNR_GATE_DB,
+    TIMING_REPEATS_FLOOR,
     SearchResult,
     kernel_measure,
     best_config,
     cached_config,
+    cached_schedule,
     measured_search,
+    mega_measure,
+    schedule_frontier,
     search_kernel,
+    search_schedule,
 )
 from repro.tuning.space import (
     CONFIG_KEYS,
     KIND_KERNEL,
     KIND_PIPELINE,
     MEGA_KEYS,
+    SEGMENT_KEYS,
     SPECTRAL_KEYS,
     KernelConfig,
+    Schedule,
+    ScheduleProblem,
+    SegmentConfig,
+    SegmentShape,
     TuneKey,
     bucket_batch,
     candidates,
@@ -58,11 +69,13 @@ from repro.tuning import cost
 
 __all__ = [
     "CACHE_SCHEMA", "CONFIG_KEYS", "DEFAULT_SNR_GATE_DB", "KIND_KERNEL",
-    "KIND_PIPELINE", "KernelConfig", "MEGA_KEYS", "SPECTRAL_KEYS",
-    "SearchResult",
+    "KIND_PIPELINE", "KernelConfig", "MEGA_KEYS", "SEGMENT_KEYS",
+    "SPECTRAL_KEYS", "Schedule", "ScheduleProblem", "SearchResult",
+    "SegmentConfig", "SegmentShape", "TIMING_REPEATS_FLOOR",
     "TuneCache", "TuneKey", "best_config", "bucket_batch", "cached_config",
-    "candidates", "clear_memory_cache", "cost", "default_cache_path",
-    "device_fingerprint", "factorizations", "get_cache",
-    "kernel_measure", "measured_search", "migrate_legacy_doc", "search_kernel",
-    "validate_cache_doc",
+    "cached_schedule", "candidates", "clear_memory_cache", "cost",
+    "default_cache_path", "device_fingerprint", "factorizations",
+    "get_cache", "kernel_measure", "measured_search", "mega_measure",
+    "migrate_legacy_doc", "migrate_schema1_doc", "schedule_frontier",
+    "search_kernel", "search_schedule", "validate_cache_doc",
 ]

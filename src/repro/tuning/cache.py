@@ -5,13 +5,17 @@ plan compiler, serving warm sweep), so a config measured anywhere is
 reusable everywhere — including across process restarts, which is what
 makes serving warms survive a redeploy.
 
-Schema (version 1, the first *versioned* schema)::
+Schema (version 2 — version 1 plus an optional per-entry ``schedule``)::
 
     {
-      "schema": 1,
+      "schema": 2,
       "entries": {
         "<TuneKey.encode()>": {
-          "config":  {block, n1, n2, n3, karatsuba, precision, col_block},
+          "config":  {block, n1, n2, n3, karatsuba, precision, col_block,
+                      residency, phase_block, buffer_depth},
+          "schedule": {segments: [{n1, n2, n3, karatsuba}, ...],
+                       block, col_block, precision, residency,
+                       phase_block, buffer_depth},   # optional
           "seconds": <measured wall seconds or null>,
           "source":  "search" | "sweep" | "migrated",
           "updated_utc": "YYYY-MM-DDTHH:MM:SSZ"
@@ -19,13 +23,24 @@ Schema (version 1, the first *versioned* schema)::
       }
     }
 
-Legacy migration: the pre-subsystem cache (benchmarks/autotune.py) was a
-flat ``{"<backend>_B<batch>_n<n>": {config..., seconds}}`` dict — exact
-batch, no device fingerprint, no version. Loading one transparently
-migrates every entry: batch normalizes to its power-of-two bucket (the
-fastest entry wins a bucket collision), the current process's device
-fingerprint is stamped (the legacy cache was by definition measured
-here), and the file is rewritten in schema 1 on the next ``put``.
+``config`` is always present — every consumer that only understands flat
+configs (``get``) keeps working; ``schedule`` appears when the entry was
+produced by the schedule-graph search and carries per-segment decisions
+a flat config cannot express. ``get_schedule`` resolves EITHER form: an
+entry without a ``schedule`` resolves as its config's degenerate
+one-segment schedule, so schema-1 entries serve schedule consumers
+without re-search.
+
+Migrations, both transparent on load:
+
+* schema 1 -> 2: entries pass through untouched (schema 1 is a strict
+  subset); the file is rewritten in schema 2 on the next ``put``.
+* the pre-subsystem flat cache (benchmarks/autotune.py) — a
+  ``{"<backend>_B<batch>_n<n>": {config..., seconds}}`` dict with exact
+  batch, no device fingerprint, no version: batch normalizes to its
+  power-of-two bucket (the fastest entry wins a bucket collision), the
+  current process's device fingerprint is stamped (the legacy cache was
+  by definition measured here).
 
 The in-process layer keeps the parsed document per path and re-reads only
 when the file's mtime changes, so compile-time lookups (one per dispatch)
@@ -48,12 +63,15 @@ except ImportError:          # non-POSIX: in-process locking only
 from repro.tuning.space import (
     KIND_KERNEL,
     KernelConfig,
+    Schedule,
     TuneKey,
     bucket_batch,
     device_fingerprint,
 )
 
-CACHE_SCHEMA = 1
+CACHE_SCHEMA = 2
+# schema versions a loaded document may carry; anything else is rejected
+_KNOWN_SCHEMAS = (1, CACHE_SCHEMA)
 
 
 def default_cache_path() -> str:
@@ -73,13 +91,16 @@ def _utc_now() -> str:
 
 
 def validate_cache_doc(doc: dict) -> dict:
-    """Assert ``doc`` is a well-formed schema-1 cache; raises ValueError
-    with the first defect, returns the doc so callers can chain."""
+    """Assert ``doc`` is a well-formed schema-1 or schema-2 cache; raises
+    ValueError with the first defect, returns the doc so callers can
+    chain. (Schema 1 stays valid: a loaded 1 migrates to 2 in memory —
+    see ``migrate_schema1_doc`` — but rejecting it here would break every
+    process still holding an un-rewritten file.)"""
     if not isinstance(doc, dict):
         raise ValueError("cache doc must be a JSON object")
-    if doc.get("schema") != CACHE_SCHEMA:
+    if doc.get("schema") not in _KNOWN_SCHEMAS:
         raise ValueError(
-            f"cache schema {doc.get('schema')!r} != {CACHE_SCHEMA}")
+            f"cache schema {doc.get('schema')!r} not in {_KNOWN_SCHEMAS}")
     entries = doc.get("entries")
     if not isinstance(entries, dict):
         raise ValueError("cache entries must be an object")
@@ -88,6 +109,8 @@ def validate_cache_doc(doc: dict) -> dict:
         if not isinstance(entry, dict) or "config" not in entry:
             raise ValueError(f"entry {key!r} missing 'config'")
         KernelConfig.from_dict(entry["config"])  # raises on bad knobs
+        if entry.get("schedule") is not None:
+            Schedule.from_dict(entry["schedule"])   # raises on bad knobs
         sec = entry.get("seconds")
         if sec is not None and not isinstance(sec, (int, float)):
             raise ValueError(f"entry {key!r}: seconds is not a number")
@@ -126,6 +149,16 @@ def migrate_legacy_doc(doc: dict) -> dict:
     return {"schema": CACHE_SCHEMA, "entries": entries}
 
 
+def migrate_schema1_doc(doc: dict) -> dict:
+    """A schema-1 document -> schema 2. Entries pass through untouched —
+    schema 1 is a strict subset of 2 (no ``schedule`` field); a flat
+    entry resolves through ``get_schedule`` as its degenerate one-segment
+    schedule, so no re-search is ever needed."""
+    out = dict(doc)
+    out["schema"] = CACHE_SCHEMA
+    return out
+
+
 class TuneCache:
     """One cache file + its in-process layer. Thread-safe."""
 
@@ -151,11 +184,13 @@ class TuneCache:
             doc = migrate_legacy_doc(raw)
         else:
             doc = validate_cache_doc(raw)
+            if doc.get("schema") == 1:            # schema 1: bump in memory
+                doc = migrate_schema1_doc(doc)
         self._mtime, self._doc = mtime, doc
         return doc
 
     def doc(self) -> dict:
-        """The parsed (and, if needed, migrated) schema-1 document."""
+        """The parsed (and, if needed, migrated) schema-2 document."""
         with self._lock:
             return self._load_locked()
 
@@ -185,6 +220,18 @@ class TuneCache:
             return None
         return KernelConfig.from_dict(entry["config"])
 
+    def get_schedule(self, key: TuneKey) -> Optional[Schedule]:
+        """The entry's Schedule: the stored one when the graph search
+        persisted it, else the flat config's degenerate one-segment
+        schedule — so schema-1(-migrated) entries serve schedule
+        consumers WITHOUT re-search."""
+        entry = self.get_entry(key)
+        if entry is None:
+            return None
+        if entry.get("schedule") is not None:
+            return Schedule.from_dict(entry["schedule"])
+        return Schedule.from_config(KernelConfig.from_dict(entry["config"]))
+
     @contextlib.contextmanager
     def _file_lock(self):
         """Advisory cross-process lock around read-modify-write: two
@@ -203,23 +250,40 @@ class TuneCache:
             finally:
                 fcntl.flock(lf, fcntl.LOCK_UN)
 
-    def put(self, key: TuneKey, config: KernelConfig,
-            seconds: Optional[float] = None, source: str = "search") -> None:
-        """Insert/replace the entry for ``key`` and persist atomically
-        (also rewrites a legacy-format file in schema 1). The merge is
-        done under a cross-process file lock against a freshly re-read
+    def _put_entry(self, key: TuneKey, entry: dict) -> None:
+        """Insert/replace one entry and persist atomically (also rewrites
+        a legacy- or schema-1-format file in schema 2). The merge is done
+        under a cross-process file lock against a freshly re-read
         document, so concurrent writers keep each other's entries."""
         with self._lock, self._file_lock():
             self._mtime = None           # force a re-read under the lock
             self._doc = None
             doc = dict(self._load_locked())
             doc["entries"] = dict(doc["entries"])
-            doc["entries"][key.encode()] = {
-                "config": config.to_dict(),
-                "seconds": None if seconds is None else float(seconds),
-                "source": source, "updated_utc": _utc_now(),
-            }
+            doc["entries"][key.encode()] = entry
             self._save_locked(doc)
+
+    def put(self, key: TuneKey, config: KernelConfig,
+            seconds: Optional[float] = None, source: str = "search") -> None:
+        """Insert/replace the flat-config entry for ``key``."""
+        self._put_entry(key, {
+            "config": config.to_dict(),
+            "seconds": None if seconds is None else float(seconds),
+            "source": source, "updated_utc": _utc_now(),
+        })
+
+    def put_schedule(self, key: TuneKey, schedule: Schedule,
+                     seconds: Optional[float] = None,
+                     source: str = "search") -> None:
+        """Insert/replace a Schedule entry for ``key``. The flat-config
+        view is derived and stored alongside, so flat-only consumers
+        (``get``) keep resolving the entry."""
+        self._put_entry(key, {
+            "config": schedule.to_config().to_dict(),
+            "schedule": schedule.to_dict(),
+            "seconds": None if seconds is None else float(seconds),
+            "source": source, "updated_utc": _utc_now(),
+        })
 
 
 # per-path singletons so every layer shares one in-process view

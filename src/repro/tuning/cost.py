@@ -49,7 +49,15 @@ from repro.kernels.fft4step import (
     default_factorization,
     resolve_precision,
 )
-from repro.tuning.space import KernelConfig, TuneKey
+from repro.tuning.space import (
+    KernelConfig,
+    Schedule,
+    ScheduleProblem,
+    SegmentConfig,
+    SegmentShape,
+    TuneKey,
+    bucket_batch,
+)
 
 # Nominal device constants. Ranking, not prediction, is the contract:
 # these are TPU-class magnitudes (peak matrix FLOP/s, HBM bytes/s, VMEM
@@ -119,6 +127,54 @@ def feasible(config: KernelConfig, key: TuneKey,
         vmem_bytes(config, key) <= vmem_budget
 
 
+def _dispatch_terms(*, n: int, lines: int, batch: int, factors: tuple,
+                    karatsuba, precision, transforms: int, filtered: bool,
+                    block: int) -> dict:
+    """The roofline ingredients of one fused dispatch, itemized.
+
+    This is THE cost kernel: `predicted_seconds` (flat configs), the
+    schedule-graph edge weights (`segment_seconds`), and the CLI
+    `--explain` breakdown all price through this one function, so a
+    schedule edge and the equivalent flat config are costed by
+    bit-identical arithmetic."""
+    lines_total = batch * lines
+    prec = resolve_precision(precision)
+    matmul_rate = PEAK_MATMUL_FLOPS * _PRECISION_SPEEDUP[prec.name]
+
+    # compute: per-stage dense-DFT matmuls at factor-dependent efficiency
+    mac_flops = 6.0 if karatsuba else 8.0
+    matmul = 0.0
+    for f in factors:
+        util = (f / MAX_FACTOR) ** 0.5
+        matmul += transforms * lines_total * mac_flops * n * f / (
+            matmul_rate * util)
+    # twiddles (one complex multiply per element per stage boundary) and
+    # the filter multiply run on the vector unit
+    pointwise = transforms * (len(factors) - 1) * 6.0 * n * lines_total
+    if filtered:
+        pointwise += 6.0 * n * lines_total
+    vpu = pointwise / PEAK_VPU_FLOPS
+    compute = matmul + vpu
+
+    # memory: slab in+out once per dispatch, constants once per grid step
+    grid_steps = max(1, math.ceil(lines / block))
+    bytes_moved = 2 * 2 * 4 * n * lines_total          # x and y, re+im f32
+    bytes_moved += grid_steps * _const_bytes(factors)
+    if filtered:
+        bytes_moved += 2 * 4 * n                       # shared filter
+    memory = bytes_moved / PEAK_HBM_BYTES
+
+    return {
+        "matmul_seconds": matmul,
+        "vpu_seconds": vpu,
+        "compute_seconds": compute,
+        "bytes_moved": bytes_moved,
+        "memory_seconds": memory,
+        "predicted_seconds": max(compute, memory) + 0.3 * min(compute,
+                                                              memory),
+    }
+
+
 def predicted_seconds(config: KernelConfig, key: TuneKey,
                       fwd: bool = True, inv: bool = True,
                       filtered: bool = True) -> float:
@@ -127,37 +183,35 @@ def predicted_seconds(config: KernelConfig, key: TuneKey,
     Relative ordering is the contract (search.py measures the top of the
     ranking); see the module docstring for the model.
     """
-    n = key.n
-    lines_total = key.batch * key.lines
-    fs = _factors(config, n)
-    prec = resolve_precision(config.precision)
-    matmul_rate = PEAK_MATMUL_FLOPS * _PRECISION_SPEEDUP[prec.name]
-    transforms = (1 if fwd else 0) + (1 if inv else 0)
+    terms = _dispatch_terms(
+        n=key.n, lines=key.lines, batch=key.batch,
+        factors=_factors(config, key.n), karatsuba=config.karatsuba,
+        precision=config.precision,
+        transforms=(1 if fwd else 0) + (1 if inv else 0),
+        filtered=filtered, block=config.block or 8)
+    return terms["predicted_seconds"]
 
-    # compute: per-stage dense-DFT matmuls at factor-dependent efficiency
-    mac_flops = 6.0 if config.karatsuba else 8.0
-    compute = 0.0
-    for f in fs:
-        util = (f / MAX_FACTOR) ** 0.5
-        compute += transforms * lines_total * mac_flops * n * f / (
-            matmul_rate * util)
-    # twiddles (one complex multiply per element per stage boundary) and
-    # the filter multiply run on the vector unit
-    pointwise = transforms * (len(fs) - 1) * 6.0 * n * lines_total
-    if filtered:
-        pointwise += 6.0 * n * lines_total
-    compute += pointwise / PEAK_VPU_FLOPS
 
-    # memory: slab in+out once per dispatch, constants once per grid step
-    block = config.block or 8
-    grid_steps = max(1, math.ceil(key.lines / block))
-    bytes_moved = 2 * 2 * 4 * n * lines_total          # x and y, re+im f32
-    bytes_moved += grid_steps * _const_bytes(fs)
-    if filtered:
-        bytes_moved += 2 * 4 * n                       # shared filter
-    memory = bytes_moved / PEAK_HBM_BYTES
-
-    return max(compute, memory) + 0.3 * min(compute, memory)
+def cost_breakdown(config: KernelConfig, key: TuneKey,
+                   fwd: bool = True, inv: bool = True,
+                   filtered: bool = True,
+                   vmem_budget: int = VMEM_BUDGET_BYTES) -> dict:
+    """The itemized cost-model verdict on one candidate — what the CLI's
+    ``--explain`` prints so schedule choices are debuggable: matmul vs
+    VPU vs bytes seconds, the roofline total, and both feasibility cuts."""
+    terms = _dispatch_terms(
+        n=key.n, lines=key.lines, batch=key.batch,
+        factors=_factors(config, key.n), karatsuba=config.karatsuba,
+        precision=config.precision,
+        transforms=(1 if fwd else 0) + (1 if inv else 0),
+        filtered=filtered, block=config.block or 8)
+    vb = vmem_bytes(config, key)
+    terms.update({
+        "vmem_bytes": vb,
+        "vmem_feasible": vb <= vmem_budget,
+        "structurally_feasible": structurally_feasible(config, key),
+    })
+    return terms
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +265,163 @@ def mega_residency(na: int, nr: int, batch_block: int = 1,
     fits = mega_vmem_bytes(na, nr, batch_block, precision,
                            filter_bytes) <= vmem_budget
     return RESIDENT_VMEM if fits else RESIDENT_STAGED
+
+
+# ---------------------------------------------------------------------------
+# Schedule-graph edge weights
+# ---------------------------------------------------------------------------
+#
+# The schedule DAG (docs/tuning.md §Schedule DAG) layers one node set per
+# transform segment; an edge through layer i fixes that segment's
+# factorization and complex-product algorithm, and the lane (precision,
+# block / residency, phase_block, buffer_depth) is fixed per path. Edge
+# weights reuse the SAME roofline terms as `predicted_seconds`
+# (`_dispatch_terms`), plus a corner-turn term between segments on
+# different axes — zero for a VMEM-resident slab (the turn is a logical
+# index remap), HBM round-trip bytes for the scratch-staged tier, scaled
+# down when double-buffered DMA overlaps the turn with compute (the
+# Radix-8 Stockham two-tier observation, arXiv 2603.27569).
+
+# fraction of the corner-turn HBM traffic left on the critical path when
+# depth>=2 double-buffering overlaps DMA with the neighbor segment's DFTs
+TURN_OVERLAP = 0.6
+
+
+def segment_seconds(problem: ScheduleProblem, shape: SegmentShape,
+                    seg: SegmentConfig, *, precision=None,
+                    karatsuba=None, block: Optional[int] = None,
+                    residency: Optional[str] = None,
+                    phase_block: Optional[int] = None) -> float:
+    """Roofline seconds for ONE schedule-DAG segment edge.
+
+    For a staged megakernel the segment streams its lines through VMEM in
+    phase_block blocks (constants re-loaded per step, slab in+out through
+    the scratch); for a VMEM-resident one the slab is already on-chip, so
+    only the compute terms and one constants load remain."""
+    n = problem.seg_n(shape)
+    lines = problem.seg_lines(shape)
+    fs = seg.factors() or default_factorization(n)
+    kara = seg.karatsuba if seg.karatsuba is not None else karatsuba
+    transforms = (1 if shape.fwd else 0) + (1 if shape.inv else 0)
+    if problem.mega and residency == RESIDENT_VMEM:
+        # slab resident: no per-segment HBM slab traffic — price compute
+        # plus one constants load (entry/exit slab traffic is charged
+        # once per path in schedule_seconds)
+        terms = _dispatch_terms(
+            n=n, lines=lines, batch=problem.batch, factors=fs,
+            karatsuba=kara, precision=precision, transforms=transforms,
+            filtered=shape.filtered, block=lines)
+        return terms["compute_seconds"] + _const_bytes(fs) / PEAK_HBM_BYTES
+    eff_block = phase_block if problem.mega else block
+    terms = _dispatch_terms(
+        n=n, lines=lines, batch=problem.batch, factors=fs,
+        karatsuba=kara, precision=precision, transforms=transforms,
+        filtered=shape.filtered, block=eff_block or 8)
+    return terms["predicted_seconds"]
+
+
+def turn_seconds(problem: ScheduleProblem, *,
+                 residency: Optional[str] = None,
+                 buffer_depth: Optional[int] = None) -> float:
+    """The corner-turn edge weight between two segments on different
+    axes: free for a VMEM-resident slab (logical remap), an HBM
+    write+read of the scene for the staged tier — overlapped with
+    compute when the DMA is double-buffered (depth >= 2)."""
+    if residency != RESIDENT_STAGED:
+        return 0.0
+    traffic = 2 * 2 * 4 * problem.na * problem.nr * problem.batch
+    overlap = TURN_OVERLAP if (buffer_depth or 2) >= 2 else 1.0
+    return traffic / PEAK_HBM_BYTES * overlap
+
+
+def schedule_vmem_bytes(schedule: Schedule,
+                        problem: ScheduleProblem,
+                        filter_bytes: int = 0) -> int:
+    """Per-grid-step VMEM footprint of a whole schedule.
+
+    Flat problems defer to `vmem_bytes` via the flat-config view. Mega
+    problems price the residency tier's slabs plus one set of DFT
+    constants per DISTINCT (axis, factorization) — per-segment
+    factorizations that agree share their constants, differing ones
+    each pay."""
+    if not problem.mega:
+        key = TuneKey(kind="kernel", backend="-", device="-",
+                      n=problem.nr, batch=bucket_batch(problem.batch),
+                      lines=problem.na)
+        return vmem_bytes(schedule.to_config(), key)
+    const = 0
+    seen = set()
+    for i, shape in enumerate(problem.segments):
+        fs = schedule.segment(i).factors() or default_factorization(
+            problem.seg_n(shape))
+        if (shape.axis, fs) in seen:
+            continue
+        seen.add((shape.axis, fs))
+        const += _const_bytes(fs)
+    if schedule.residency == RESIDENT_STAGED:
+        pb = schedule.phase_block or 8
+        pb_r = min(pb, problem.na)
+        pb_c = min(pb, problem.nr)
+        depth = schedule.buffer_depth or 2
+        bufs = depth * 2 * 4 * (pb_r * problem.nr + problem.na * pb_c)
+        bufs *= 2                        # worst case: FULL-filter slabs
+        return bufs + const + filter_bytes
+    slab = 2 * 4 * problem.batch * problem.na * problem.nr
+    footprint = 3 * slab + const + filter_bytes
+    if resolve_precision(schedule.precision).block_scaled:
+        footprint += slab // 2
+    return footprint
+
+
+def schedule_structurally_feasible(schedule: Schedule,
+                                   problem: ScheduleProblem) -> bool:
+    """Shape legality of every segment's factorization for its length."""
+    for i, shape in enumerate(problem.segments):
+        n = problem.seg_n(shape)
+        fs = schedule.segment(i).factors() or default_factorization(n)
+        if math.prod(fs) != n:
+            return False
+        if any(f > MAX_FACTOR or f & (f - 1) for f in fs):
+            return False
+    if not problem.mega:
+        block = schedule.block or 8
+        lines = problem.na
+        if block > lines and lines % block:
+            return False
+    return True
+
+
+def schedule_feasible(schedule: Schedule, problem: ScheduleProblem,
+                      filter_bytes: int = 0,
+                      vmem_budget: int = VMEM_BUDGET_BYTES) -> bool:
+    """Structural + VMEM feasibility of a complete schedule path."""
+    return schedule_structurally_feasible(schedule, problem) and \
+        schedule_vmem_bytes(schedule, problem, filter_bytes) <= vmem_budget
+
+
+def schedule_seconds(schedule: Schedule,
+                     problem: ScheduleProblem) -> float:
+    """Predicted seconds of a complete schedule: the sum of the SAME
+    per-segment and per-turn edge weights the graph search accumulates
+    (plus, for mega problems, the scene slab's one HBM entry/exit)."""
+    total = 0.0
+    for i, shape in enumerate(problem.segments):
+        total += segment_seconds(
+            problem, shape, schedule.segment(i),
+            precision=schedule.precision, block=schedule.block,
+            residency=schedule.residency,
+            phase_block=schedule.phase_block)
+    prev = None
+    for shape in problem.segments:
+        if prev is not None and prev.axis != shape.axis:
+            total += turn_seconds(problem, residency=schedule.residency,
+                                  buffer_depth=schedule.buffer_depth)
+        prev = shape
+    if problem.mega:
+        # the scene enters and leaves HBM exactly once per dispatch
+        slab_io = 2 * 2 * 4 * problem.na * problem.nr * problem.batch
+        total += slab_io / PEAK_HBM_BYTES
+    return total
 
 
 def nominal_flops(key: TuneKey, fwd: bool = True, inv: bool = True,

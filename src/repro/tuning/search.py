@@ -8,24 +8,33 @@ measurement budget grows — so the search reaches the same winner as the
 exhaustive sweep while timing strictly fewer candidates ("Shortest-Path
 FFT", arXiv 2604.04311: guided beats enumeration).
 
-Two entry points:
+Three entry points:
 
 * :func:`measured_search` — the generic engine: any candidate list, any
   measure callable. The serving warm sweep (service/backends.py) runs its
   (block, col_block) pipeline candidates through this.
-* :func:`search_kernel` — the kernel tuner: builds the candidate space
-  for a :class:`TuneKey`, applies the cost ranking, the SNR gate (non-f32
-  precisions must pass ``repro.tuning.quality`` at <= ``snr_gate_db``),
-  times the fused fwd+inv rows dispatch, and persists the winner to the
-  shared cache.
+* :func:`search_kernel` — the kernel tuner: builds the schedule graph
+  for a :class:`TuneKey`, solves it for the ranked frontier
+  (:func:`schedule_frontier`), applies the SNR gate (non-f32 precisions
+  must pass ``repro.tuning.quality`` at <= ``snr_gate_db``), times the
+  fused fwd+inv rows dispatch, and persists the winner to the shared
+  cache.
+* :func:`search_schedule` — the megakernel schedule tuner: solves a
+  multi-segment :class:`~repro.tuning.space.ScheduleProblem` (where
+  per-segment factorizations make the space exponential in the segment
+  count — exactly where shortest-path enumeration beats the product
+  sweep), measures the top of the frontier, persists the winning
+  Schedule.
 
 Plus the cache-only lookups the plan compiler uses at compile time
-(:func:`cached_config`, never sweeps) and :func:`best_config`
-(cached-or-tuned, the CLI/bench entry).
+(:func:`cached_config` / :func:`cached_schedule`, never sweep) and
+:func:`best_config` (cached-or-tuned, the CLI/bench entry).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
 import time
 from typing import Callable, Optional, Sequence
@@ -36,17 +45,39 @@ import jax.numpy as jnp
 
 from repro.tuning import cache as cachelib
 from repro.tuning import cost as costlib
-from repro.tuning.space import KernelConfig, TuneKey, candidates
+from repro.tuning.space import (
+    KernelConfig,
+    Schedule,
+    ScheduleProblem,
+    SegmentConfig,
+    TuneKey,
+    candidates,
+    factorizations,
+)
 
 DEFAULT_SNR_GATE_DB = 0.1
 
+# Timing-jitter floor: every measured rung times a candidate at least
+# this many times and takes the median, regardless of how few iterations
+# the rung schedule asks for — a 1-iteration rung 0 on a noisy host
+# otherwise crowns whichever candidate got lucky.
+TIMING_REPEATS_FLOOR = 3
 
-def _timeit(fn, warmup: int = 1, iters: int = 2) -> float:
-    """Median wall seconds per call (blocks on jax arrays)."""
+
+def _timeit(fn, warmup: int = 1, iters: int = 2,
+            min_repeats: Optional[int] = None) -> float:
+    """Median wall seconds per call (blocks on jax arrays).
+
+    Runs ``max(iters, min_repeats)`` timed repeats (the floor defaults to
+    :data:`TIMING_REPEATS_FLOOR`) so a low-iteration successive-halving
+    rung still medians away scheduler hiccups instead of ranking on a
+    single sample."""
+    floor = TIMING_REPEATS_FLOOR if min_repeats is None else min_repeats
+    repeats = max(int(iters), int(floor), 1)
     for _ in range(warmup):
         jax.block_until_ready(fn())
     ts = []
-    for _ in range(iters):
+    for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
@@ -59,13 +90,14 @@ class SearchResult:
     """Outcome + audit trail of one guided search."""
 
     key: TuneKey
-    config: KernelConfig              # the winner
+    config: KernelConfig              # the winner (flat view)
     seconds: float                    # its best measured time
     measured: int                     # distinct candidates actually timed
     space: int                        # full candidate-space size
     predicted_rank: Optional[int]     # winner's rank in the cost ordering
     trace: list = dataclasses.field(default_factory=list)
     # trace rows: (config, seconds | None if infeasible at measure time)
+    schedule: Optional[Schedule] = None   # the winner as a Schedule
 
 
 def measured_search(cands: Sequence, measure: Callable,
@@ -110,6 +142,142 @@ def measured_search(cands: Sequence, measure: Callable,
             timed = timed[:max(1, math.ceil(len(timed) / 2))]
     best_t, _, best = timed[0]
     return best, best_t, trace
+
+
+# ---------------------------------------------------------------------------
+# Schedule-graph solver
+# ---------------------------------------------------------------------------
+#
+# The schedule space is a layered DAG: layer i's nodes are "segments 0..i
+# scheduled", an edge through layer i fixes segment i's factorization and
+# complex-product algorithm, and every path additionally commits to one
+# LANE — the dispatch-global decisions (precision and line block for a
+# flat kernel; precision, residency tier, phase block, and DMA buffer
+# depth for a megakernel). Edge weights come from cost.segment_seconds /
+# cost.turn_seconds (the same roofline terms as cost.predicted_seconds),
+# so a uniform path and the equivalent flat KernelConfig are priced by
+# bit-identical arithmetic. Uniform-cost (Dijkstra-style) expansion over
+# one shared heap emits COMPLETE paths in increasing predicted cost —
+# k-shortest enumeration, lazy, so a 6-segment megakernel with 7
+# factorization choices per segment never materializes its ~10^5-path
+# product space ("Shortest-Path FFT", arXiv 2604.04311).
+
+# backstop against pathological exploration when every path is VMEM-
+# infeasible and the caller asked for a large k
+_FRONTIER_POP_BUDGET = 500_000
+
+
+def _lane_schedules(problem: ScheduleProblem, blocks, precisions,
+                    residencies, phase_blocks, buffer_depths) -> list:
+    """The dispatch-global decision lanes of the schedule DAG."""
+    lanes = []
+    if problem.mega:
+        if residencies is None:
+            residencies = (costlib.RESIDENT_VMEM, costlib.RESIDENT_STAGED)
+        for prec in precisions:
+            for res in residencies:
+                if res == costlib.RESIDENT_STAGED:
+                    for pb in phase_blocks:
+                        for bd in buffer_depths:
+                            lanes.append(dict(
+                                precision=prec, residency=res,
+                                phase_block=pb, buffer_depth=bd))
+                else:
+                    lanes.append(dict(precision=prec, residency=res))
+    else:
+        for prec in precisions:
+            for blk in blocks:
+                lanes.append(dict(precision=prec, block=blk))
+    return lanes
+
+
+def schedule_frontier(problem: ScheduleProblem, *,
+                      k: Optional[int] = None,
+                      blocks: Sequence[int] = (4, 8, 16),
+                      precisions: Sequence[str] = ("f32",),
+                      residencies: Optional[Sequence[str]] = None,
+                      phase_blocks: Sequence[int] = (8,),
+                      buffer_depths: Sequence[int] = (2,),
+                      filter_bytes: int = 0,
+                      vmem_budget: int = costlib.VMEM_BUDGET_BYTES
+                      ) -> list:
+    """Solve the schedule DAG: the ``k`` cheapest complete schedules in
+    increasing predicted cost (``k=None`` enumerates the whole space —
+    fine for flat kernel problems, exponential for multi-segment mega
+    problems, so pass ``k`` there).
+
+    VMEM-infeasible paths are cut like cost.rank's feasibility cut, with
+    the same never-empty guarantee: if NO complete path fits the budget,
+    the structurally-feasible paths are returned ordered by (footprint,
+    predicted) instead."""
+    segs = problem.segments
+    if not segs:
+        raise ValueError("ScheduleProblem has no segments to schedule")
+    lanes = _lane_schedules(problem, blocks, precisions, residencies,
+                            phase_blocks, buffer_depths)
+
+    # per-(lane, layer) edge sets, weighted once and reused
+    edge_cache: dict = {}
+
+    def edges(lane_idx: int, depth: int):
+        hit = edge_cache.get((lane_idx, depth))
+        if hit is not None:
+            return hit
+        lane = lanes[lane_idx]
+        shape = segs[depth]
+        out = []
+        for fs in factorizations(problem.seg_n(shape)):
+            for kara in (False, True):
+                seg = SegmentConfig(
+                    n1=fs[0], n2=fs[1],
+                    n3=fs[2] if len(fs) > 2 else None, karatsuba=kara)
+                w = costlib.segment_seconds(
+                    problem, shape, seg, precision=lane.get("precision"),
+                    block=lane.get("block"),
+                    residency=lane.get("residency"),
+                    phase_block=lane.get("phase_block"))
+                out.append((w, seg))
+        edge_cache[(lane_idx, depth)] = out
+        return out
+
+    heap: list = []
+    counter = itertools.count()       # insertion-order tie break
+    for i, lane in enumerate(lanes):
+        # lane-level fixed weight: corner turns + (mega) slab entry/exit
+        base = problem.turns() * costlib.turn_seconds(
+            problem, residency=lane.get("residency"),
+            buffer_depth=lane.get("buffer_depth"))
+        if problem.mega:
+            base += (2 * 2 * 4 * problem.na * problem.nr * problem.batch
+                     / costlib.PEAK_HBM_BYTES)
+        heapq.heappush(heap, (base, next(counter), i, ()))
+
+    feasible: list = []
+    over_budget: list = []            # (vmem_bytes, cost, schedule)
+    pops = 0
+    while heap and (k is None or len(feasible) < k) \
+            and pops < _FRONTIER_POP_BUDGET:
+        pops += 1
+        cost_so_far, _, lane_idx, chosen = heapq.heappop(heap)
+        if len(chosen) == len(segs):
+            sched = Schedule(segments=chosen, **lanes[lane_idx])
+            if costlib.schedule_feasible(sched, problem, filter_bytes,
+                                         vmem_budget):
+                feasible.append(sched)
+            elif costlib.schedule_structurally_feasible(sched, problem):
+                over_budget.append((
+                    costlib.schedule_vmem_bytes(sched, problem,
+                                                filter_bytes),
+                    cost_so_far, sched))
+            continue
+        for w, seg in edges(lane_idx, len(chosen)):
+            heapq.heappush(heap, (cost_so_far + w, next(counter),
+                                  lane_idx, chosen + (seg,)))
+    if feasible:
+        return feasible               # popped in increasing cost already
+    over_budget.sort(key=lambda t: (t[0], t[1]))
+    out = [s for _, _, s in over_budget]
+    return out[:k] if k is not None else out
 
 
 def _default_gate(precision: str) -> float:
@@ -176,6 +344,21 @@ def search_kernel(key: TuneKey, *,
                 continue
         pool.append(c)
 
+    # Solve the (degenerate, one-segment) schedule DAG for this key: the
+    # frontier's flat-config views are the schedulable subset of the
+    # product space. Keeping the pool in candidates() order and ranking
+    # through cost.rank preserves the legacy ordering bit-for-bit — the
+    # graph search strictly generalizes the flat sweep, it never times
+    # more than it.
+    problem = ScheduleProblem.kernel(key.n, batch=key.batch,
+                                     lines=key.lines)
+    gated_precisions = tuple(
+        p for p in dict.fromkeys(c.precision or "f32" for c in pool))
+    frontier = schedule_frontier(problem, blocks=tuple(blocks),
+                                 precisions=gated_precisions or ("f32",))
+    allowed = {s.to_config() for s in frontier}
+    pool = [c for c in pool if c in allowed]
+
     ranked = costlib.rank(pool, key)
     if not ranked:
         raise RuntimeError(f"feasibility cut emptied the space for {key}")
@@ -190,10 +373,89 @@ def search_kernel(key: TuneKey, *,
     measured = len({c for c, t in trace if t is not None})
     result = SearchResult(
         key=key, config=best, seconds=best_t, measured=measured,
-        space=space_size, predicted_rank=ranked.index(best), trace=trace)
+        space=space_size, predicted_rank=ranked.index(best), trace=trace,
+        schedule=Schedule.from_config(best))
     if persist:
         (cache or cachelib.get_cache()).put(key, best, seconds=best_t,
                                             source="search")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Megakernel schedule search
+# ---------------------------------------------------------------------------
+
+def mega_measure(problem: ScheduleProblem, seed: int = 0) -> Callable:
+    """measure(schedule, iters) for a cross-axis megakernel problem:
+    times ops.mega_spectral_op with the schedule's per-segment
+    factorizations/karatsuba carried in extended segment tuples."""
+    from repro.kernels import ops             # deferred: keeps import light
+    rng = np.random.default_rng(seed)
+    shape = (problem.batch, problem.na, problem.nr)
+    xr = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    xi = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    filters = []
+    modes = []
+    for s in problem.segments:
+        modes.append("shared" if s.filtered else "none")
+        if s.filtered:
+            n = problem.seg_n(s)
+            filters.append(jnp.asarray(rng.standard_normal(n), jnp.float32))
+            filters.append(jnp.asarray(rng.standard_normal(n), jnp.float32))
+
+    def measure(schedule: Schedule, iters: int) -> float:
+        segments = tuple(
+            (s.axis, s.fwd, s.inv, modes[i],
+             schedule.segment(i).n1, schedule.segment(i).n2,
+             schedule.segment(i).n3, schedule.segment(i).karatsuba)
+            for i, s in enumerate(problem.segments))
+        kw = dict(segments=segments)
+        if schedule.residency is not None:
+            kw["residency"] = schedule.residency
+        if schedule.phase_block is not None:
+            kw["phase_block"] = schedule.phase_block
+        if schedule.buffer_depth is not None:
+            kw["buffer_depth"] = schedule.buffer_depth
+        if schedule.precision is not None:
+            kw["precision"] = schedule.precision
+        return _timeit(lambda: ops.mega_spectral_op(xr, xi, *filters, **kw),
+                       warmup=1, iters=iters)
+
+    return measure
+
+
+def search_schedule(problem: ScheduleProblem, key: Optional[TuneKey] = None,
+                    *, k: int = 8,
+                    measure: Optional[Callable] = None,
+                    rungs: Sequence[int] = (1, 2),
+                    cache: Optional[cachelib.TuneCache] = None,
+                    persist: bool = True,
+                    log: Optional[Callable] = None,
+                    **frontier_kw) -> SearchResult:
+    """Graph-guided schedule search for a multi-segment problem: solve
+    the DAG for the ``k`` cheapest schedules, refine them through the
+    same successive-halving engine the flat tuner uses, persist the
+    winning Schedule (schema-2 cache) under ``key``.
+
+    This is the search the flat ``candidates()`` sweep cannot express:
+    the frontier's paths may give every segment its own factorization and
+    complex-product algorithm."""
+    frontier = schedule_frontier(problem, k=k, **frontier_kw)
+    if not frontier:
+        raise RuntimeError(
+            f"schedule graph produced no feasible path for {problem}")
+    measure = measure or mega_measure(problem)
+    best, best_t, trace = measured_search(
+        frontier, measure, rungs=rungs,
+        log=(lambda c, t, r: log(c, t, r)) if log is not None else None)
+    measured = len({s for s, t in trace if t is not None})
+    result = SearchResult(
+        key=key, config=best.to_config(), seconds=best_t,
+        measured=measured, space=len(frontier),
+        predicted_rank=frontier.index(best), trace=trace, schedule=best)
+    if persist and key is not None:
+        (cache or cachelib.get_cache()).put_schedule(
+            key, best, seconds=best_t, source="search")
     return result
 
 
@@ -209,6 +471,20 @@ def cached_config(n: int, batch: int = 1, lines: int = 16,
     try:
         key = TuneKey.kernel(n, batch, lines=lines)
         return (cache or cachelib.get_cache()).get(key)
+    except Exception:
+        return None
+
+
+def cached_schedule(n: int, batch: int = 1, lines: int = 16,
+                    cache: Optional[cachelib.TuneCache] = None
+                    ) -> Optional[Schedule]:
+    """Best-known Schedule for (n, batch-bucket) on THIS device, or None.
+    A flat (schema-1-migrated) entry resolves as its degenerate
+    one-segment schedule — no re-search. Pure lookup, like
+    :func:`cached_config`."""
+    try:
+        key = TuneKey.kernel(n, batch, lines=lines)
+        return (cache or cachelib.get_cache()).get_schedule(key)
     except Exception:
         return None
 

@@ -46,9 +46,13 @@ KIND_PIPELINE = "pipeline"   # a whole compiled plan (service warm sweep)
 
 SPECTRAL_KEYS = ("block", "n1", "n2", "n3", "karatsuba", "precision")
 # megakernel (fused1) knobs: execution-residency mode of a cross-axis
-# single-dispatch step and its staged-phase line block
-MEGA_KEYS = ("residency", "phase_block")
+# single-dispatch step, its staged-phase line block, and the staged DMA
+# double-buffer depth
+MEGA_KEYS = ("residency", "phase_block", "buffer_depth")
 CONFIG_KEYS = SPECTRAL_KEYS + ("col_block",) + MEGA_KEYS
+# the per-segment scheduling decisions a Schedule can vary where a flat
+# KernelConfig holds one global value
+SEGMENT_KEYS = ("n1", "n2", "n3", "karatsuba")
 
 
 def bucket_batch(b: int) -> int:
@@ -159,6 +163,7 @@ class KernelConfig:
     col_block: Optional[int] = None
     residency: Optional[str] = None      # megakernel mode: vmem | staged
     phase_block: Optional[int] = None    # staged-phase line block
+    buffer_depth: Optional[int] = None   # staged DMA double-buffer depth
 
     def __post_init__(self):
         if self.precision is not None:
@@ -177,6 +182,10 @@ class KernelConfig:
             raise ValueError(
                 f"phase_block={pb} is not a power of two (staged phases "
                 "strip power-of-two scene axes)")
+        bd = self.buffer_depth
+        if bd is not None and (not isinstance(bd, int) or bd < 1):
+            raise ValueError(
+                f"buffer_depth={bd!r} is not a positive integer")
 
     # -- views ---------------------------------------------------------------
     def spectral_kwargs(self) -> dict:
@@ -231,6 +240,213 @@ class KernelConfig:
         """Build from a dict, tolerating extra keys (legacy autotune cache
         entries carry ``seconds`` etc.)."""
         return cls(**{k: d[k] for k in CONFIG_KEYS if k in d})
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR — per-segment decisions over a multi-segment dispatch
+# ---------------------------------------------------------------------------
+#
+# A flat KernelConfig holds ONE global factorization/karatsuba for every
+# transform segment of a dispatch. A Schedule is the generalized record:
+# one SegmentConfig per segment (the per-segment edge choices of the
+# schedule DAG — factorization and complex-product algorithm) plus the
+# dispatch-global lane decisions (block, precision, residency,
+# phase_block, buffer_depth). KernelConfig is the degenerate one-segment
+# (or uniform) schedule: Schedule.from_config / Schedule.to_config
+# convert losslessly in that case.
+
+@dataclasses.dataclass(frozen=True)
+class SegmentConfig:
+    """Per-segment scheduling decisions: the mixed-radix factorization of
+    THIS segment's transform and its complex-product algorithm. ``None``
+    defers to the next layer's default, exactly like KernelConfig."""
+
+    n1: Optional[int] = None
+    n2: Optional[int] = None
+    n3: Optional[int] = None
+    karatsuba: Optional[bool] = None     # tri-state, like KernelConfig
+
+    def __post_init__(self):
+        for name in ("n1", "n2", "n3"):
+            f = getattr(self, name)
+            if f is not None and (f < 1 or f & (f - 1) or f > MAX_FACTOR):
+                raise ValueError(
+                    f"{name}={f} is not a power of two <= {MAX_FACTOR}")
+
+    def factors(self) -> Optional[tuple]:
+        """The explicit factorization (n1, n2[, n3]), or None if deferred."""
+        if self.n1 is None:
+            return None
+        fs = [self.n1]
+        if self.n2 is not None:
+            fs.append(self.n2)
+        if self.n3 is not None:
+            fs.append(self.n3)
+        return tuple(fs)
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in SEGMENT_KEYS}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SegmentConfig":
+        return cls(**{k: d[k] for k in SEGMENT_KEYS if k in d})
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """One complete path through the schedule DAG: per-segment decisions
+    (``segments``) plus the dispatch-global lane (block/precision/
+    residency/phase_block/buffer_depth). Hashable and JSON-serializable —
+    schedules persist in the schema-2 tuning cache and key the compiled-
+    pipeline cache."""
+
+    segments: tuple = ()                 # tuple[SegmentConfig, ...]
+    block: Optional[int] = None
+    col_block: Optional[int] = None
+    precision: Optional[str] = None
+    residency: Optional[str] = None      # megakernel mode: vmem | staged
+    phase_block: Optional[int] = None    # staged-phase line block
+    buffer_depth: Optional[int] = None   # staged DMA buffer depth
+
+    def __post_init__(self):
+        segs = tuple(
+            s if isinstance(s, SegmentConfig) else SegmentConfig.from_dict(s)
+            for s in self.segments)
+        object.__setattr__(self, "segments", segs)
+        # reuse KernelConfig's knob validation for the global lane
+        KernelConfig(block=self.block, col_block=self.col_block,
+                     precision=self.precision, residency=self.residency,
+                     phase_block=self.phase_block,
+                     buffer_depth=self.buffer_depth)
+
+    def segment(self, i: int) -> SegmentConfig:
+        """Segment ``i``'s decisions; a deferred (all-None) config past
+        the end, so consumers never index-error on shorter schedules."""
+        if 0 <= i < len(self.segments):
+            return self.segments[i]
+        return SegmentConfig()
+
+    def uniform(self) -> bool:
+        """Whether every segment carries identical decisions (the flat-
+        KernelConfig-expressible subset of the schedule space)."""
+        return len(set(self.segments)) <= 1
+
+    # -- KernelConfig bridge -------------------------------------------------
+    def to_config(self) -> KernelConfig:
+        """The flat-config view: exact when the schedule is uniform (or
+        empty); otherwise the per-segment fields drop to None — a
+        non-uniform schedule is NOT expressible as a KernelConfig, which
+        is the point of the IR."""
+        d = dict(block=self.block, col_block=self.col_block,
+                 precision=self.precision, residency=self.residency,
+                 phase_block=self.phase_block,
+                 buffer_depth=self.buffer_depth)
+        if self.segments and self.uniform():
+            d.update(self.segments[0].to_dict())
+        return KernelConfig(**d)
+
+    @classmethod
+    def from_config(cls, config: KernelConfig,
+                    n_segments: int = 1) -> "Schedule":
+        """The degenerate schedule a flat KernelConfig denotes: the same
+        per-segment decisions replicated across ``n_segments``."""
+        seg = SegmentConfig(n1=config.n1, n2=config.n2, n3=config.n3,
+                            karatsuba=config.karatsuba)
+        return cls(segments=(seg,) * max(1, n_segments),
+                   block=config.block, col_block=config.col_block,
+                   precision=config.precision, residency=config.residency,
+                   phase_block=config.phase_block,
+                   buffer_depth=config.buffer_depth)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "segments": [s.to_dict() for s in self.segments],
+            "block": self.block, "col_block": self.col_block,
+            "precision": self.precision, "residency": self.residency,
+            "phase_block": self.phase_block,
+            "buffer_depth": self.buffer_depth,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Schedule":
+        """Build from a dict, tolerating extra keys (cache entries carry
+        ``seconds`` etc. alongside)."""
+        keys = ("block", "col_block", "precision", "residency",
+                "phase_block", "buffer_depth")
+        kw = {k: d[k] for k in keys if k in d}
+        return cls(segments=tuple(
+            SegmentConfig.from_dict(s) for s in d.get("segments", ())), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentShape:
+    """The WORKLOAD of one schedule-DAG layer: which scene axis the
+    segment transforms, in which directions, and whether a filter
+    multiply rides along. The transform length and free-axis line count
+    derive from the owning ScheduleProblem's scene geometry."""
+
+    axis: int                            # 0 = columns, 1 = rows
+    fwd: bool = False
+    inv: bool = False
+    filtered: bool = False
+
+    def __post_init__(self):
+        if self.axis not in (0, 1):
+            raise ValueError(f"axis must be 0 or 1, got {self.axis}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleProblem:
+    """What the schedule-graph search optimizes over: an (na, nr) scene,
+    a batch, and the ordered transform segments. ``mega=False`` is the
+    single-dispatch rows problem the flat kernel tuner times (one
+    segment, so the graph degenerates to the old product sweep);
+    ``mega=True`` is a cross-axis megakernel whose segments may each pick
+    their own factorization — the part of the space no flat KernelConfig
+    can express."""
+
+    na: int
+    nr: int
+    batch: int = 1
+    segments: tuple = ()                 # tuple[SegmentShape, ...]
+    mega: bool = False
+
+    def __post_init__(self):
+        segs = tuple(
+            s if isinstance(s, SegmentShape) else SegmentShape(**s)
+            for s in self.segments)
+        object.__setattr__(self, "segments", segs)
+
+    @classmethod
+    def kernel(cls, n: int, batch: int = 1, lines: int = 16
+               ) -> "ScheduleProblem":
+        """The flat kernel tuner's workload: one fused fwd+inv filtered
+        rows dispatch on a (batch, lines, n) slab."""
+        return cls(na=int(lines), nr=int(n), batch=int(batch),
+                   segments=(SegmentShape(axis=1, fwd=True, inv=True,
+                                          filtered=True),), mega=False)
+
+    @classmethod
+    def mega_2d(cls, na: int, nr: int, segments, batch: int = 1
+                ) -> "ScheduleProblem":
+        """A cross-axis megakernel workload; ``segments`` is a sequence
+        of SegmentShape (or kwargs dicts) in dispatch order."""
+        return cls(na=int(na), nr=int(nr), batch=int(batch),
+                   segments=tuple(segments), mega=True)
+
+    def seg_n(self, shape: SegmentShape) -> int:
+        """The transform length of a segment (the scene axis it strips)."""
+        return self.nr if shape.axis == 1 else self.na
+
+    def seg_lines(self, shape: SegmentShape) -> int:
+        """The free-axis line count the segment's matmuls fold over."""
+        return self.na if shape.axis == 1 else self.nr
+
+    def turns(self) -> int:
+        """Corner turns between consecutive segments on different axes."""
+        return sum(1 for a, b in zip(self.segments, self.segments[1:])
+                   if a.axis != b.axis)
 
 
 # ---------------------------------------------------------------------------

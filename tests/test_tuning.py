@@ -10,6 +10,10 @@ import os
 import numpy as np
 import pytest
 import jax.numpy as jnp
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - see requirements-dev.txt
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro import tuning
 from repro.tuning import cost
@@ -491,3 +495,280 @@ def test_shim_best_config_matches_subsystem(tmp_path, monkeypatch):
     d2 = autotune.best_config(8192, 1, tune_missing=False)
     assert d2["n1"] is None and d2["block"] == 8
     tuning.clear_memory_cache()
+
+# ---------------------------------------------------------------------------
+# Property tests: key/config/schedule round-trips (hypothesis or fallback)
+# ---------------------------------------------------------------------------
+
+_PROP_NS = (64, 128, 256, 512, 1024)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from([tuning.KIND_KERNEL, tuning.KIND_PIPELINE]),
+       n=st.sampled_from(_PROP_NS), bexp=st.integers(0, 6),
+       lines=st.sampled_from([16, 64, 128]),
+       precision=st.sampled_from([None, "f32", "bf16", "bs16"]),
+       variant=st.sampled_from([None, "fused3", "csa_fused"]))
+def test_prop_tune_key_encode_decode_roundtrip(kind, n, bexp, lines,
+                                               precision, variant):
+    key = tuning.TuneKey(kind=kind, backend="cpu", device="cpu", n=n,
+                         batch=2 ** bexp, lines=lines,
+                         precision=precision, variant=variant)
+    assert tuning.TuneKey.decode(key.encode()) == key
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from(_PROP_NS), fi=st.integers(0, 10 ** 6),
+       block=st.sampled_from([None, 4, 8, 16]),
+       karatsuba=st.sampled_from([None, False, True]),
+       precision=st.sampled_from([None, "f32", "bf16", "bs16"]),
+       col_block=st.sampled_from([None, 128, 256]),
+       residency=st.sampled_from([None, "vmem", "staged"]),
+       phase_block=st.sampled_from([None, 8, 16]),
+       buffer_depth=st.sampled_from([None, 1, 2, 3]))
+def test_prop_kernel_config_dict_roundtrip(n, fi, block, karatsuba,
+                                           precision, col_block, residency,
+                                           phase_block, buffer_depth):
+    """to_dict/from_dict must round-trip every knob — the tri-state
+    karatsuba, the mega knobs incl. buffer_depth — including through the
+    JSON wire format the cache stores."""
+    fs = tuning.factorizations(n)
+    f = (tuple(fs[fi % len(fs)]) + (None,))[:3]
+    cfg = tuning.KernelConfig(block=block, n1=f[0], n2=f[1], n3=f[2],
+                              karatsuba=karatsuba, precision=precision,
+                              col_block=col_block, residency=residency,
+                              phase_block=phase_block,
+                              buffer_depth=buffer_depth)
+    assert tuning.KernelConfig.from_dict(cfg.to_dict()) == cfg
+    assert tuning.KernelConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from(_PROP_NS), nseg=st.integers(1, 3),
+       fi=st.integers(0, 10 ** 6),
+       karatsuba=st.sampled_from([None, False, True]),
+       residency=st.sampled_from([None, "vmem", "staged"]),
+       buffer_depth=st.sampled_from([None, 1, 2]))
+def test_prop_schedule_dict_roundtrip(n, nseg, fi, karatsuba, residency,
+                                      buffer_depth):
+    fs = tuning.factorizations(n)
+    segs = tuple(
+        tuning.SegmentConfig(*(tuple(fs[(fi + i) % len(fs)]) + (None,))[:3],
+                             karatsuba=karatsuba)
+        for i in range(nseg))
+    s = tuning.Schedule(segments=segs, block=8, residency=residency,
+                        buffer_depth=buffer_depth)
+    assert tuning.Schedule.from_dict(s.to_dict()) == s
+    assert tuning.Schedule.from_dict(
+        json.loads(json.dumps(s.to_dict()))) == s
+
+
+def test_kernel_config_is_degenerate_one_segment_schedule():
+    cfg = tuning.KernelConfig(block=8, n1=32, n2=16, karatsuba=True,
+                              residency="staged", phase_block=8,
+                              buffer_depth=2)
+    s = tuning.Schedule.from_config(cfg)
+    assert s.uniform() and s.to_config() == cfg
+    multi = tuning.Schedule(segments=(tuning.SegmentConfig(32, 16),
+                                      tuning.SegmentConfig(16, 32)),
+                            block=8)
+    assert not multi.uniform()
+    assert multi.to_config().n1 is None   # flat-inexpressible, by design
+
+
+def test_timeit_enforces_repeat_floor():
+    """A 1-iteration halving rung must still take TIMING_REPEATS_FLOOR
+    timed samples so the median washes out scheduler jitter."""
+    from repro.tuning import search as searchlib
+
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return jnp.zeros(())
+
+    searchlib._timeit(fn, warmup=1, iters=1)
+    assert len(calls) == 1 + max(1, tuning.TIMING_REPEATS_FLOOR)
+    calls.clear()
+    searchlib._timeit(fn, warmup=0, iters=tuning.TIMING_REPEATS_FLOOR + 4)
+    assert len(calls) == tuning.TIMING_REPEATS_FLOOR + 4
+
+
+# ---------------------------------------------------------------------------
+# The schedule graph: cache schema 2, migration, search, compiler, service
+# ---------------------------------------------------------------------------
+
+def test_cache_schema1_migrates_to_schema2_without_research(tmp_path,
+                                                           monkeypatch):
+    """A schema-1 file must resolve through the schema-2 cache with NO
+    re-search: flat entries serve both get() and get_schedule() (as the
+    degenerate one-segment schedule), their payload — the fastest-known
+    measurement — passes through untouched, and the next put rewrites
+    the file in schema 2 keeping the migrated entry."""
+    key = tuning.TuneKey.kernel(512, 1)
+    cfg = tuning.KernelConfig(block=16, n1=32, n2=16, karatsuba=True)
+    path = str(tmp_path / "c.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "entries": {key.encode(): {
+            "config": cfg.to_dict(), "seconds": 3.25e-4,
+            "source": "search", "updated_utc": "2026-01-01T00:00:00Z"}}}, f)
+
+    def boom(*a, **k):
+        raise AssertionError("re-searched a migrated schema-1 entry")
+
+    monkeypatch.setattr(tuning, "measured_search", boom)
+    monkeypatch.setattr(tuning, "search_kernel", boom)
+    cache = tuning.TuneCache(path)
+    doc = cache.doc()
+    assert doc["schema"] == tuning.CACHE_SCHEMA == 2
+    assert cache.get(key) == cfg
+    sched = cache.get_schedule(key)
+    assert sched == tuning.Schedule.from_config(cfg)
+    assert sched.to_config() == cfg
+    assert cache.get_entry(key)["seconds"] == 3.25e-4
+
+    cache.put(tuning.TuneKey.kernel(256, 1), tuning.KernelConfig(block=8))
+    with open(path) as f:
+        ondisk = json.load(f)
+    assert ondisk["schema"] == 2
+    assert ondisk["entries"][key.encode()]["config"] == cfg.to_dict()
+
+
+def test_cache_schedule_roundtrip_and_flat_view(tmp_path):
+    """put_schedule persists the Schedule AND its derived flat view, so
+    schedule consumers round-trip exactly while flat-only consumers keep
+    resolving the entry; the stored document schema-validates."""
+    path = str(tmp_path / "c.json")
+    key = tuning.TuneKey.kernel(256, 1)
+    sched = tuning.Schedule(
+        segments=(tuning.SegmentConfig(16, 16, None, True),
+                  tuning.SegmentConfig(8, 32, None, False)),
+        block=8, precision="f32", residency="staged", phase_block=8,
+        buffer_depth=2)
+    tuning.TuneCache(path).put_schedule(key, sched, seconds=1e-3)
+
+    fresh = tuning.TuneCache(path)           # independent view, same file
+    assert fresh.get_schedule(key) == sched
+    flat = fresh.get(key)
+    assert flat == sched.to_config()
+    assert flat.n1 is None        # non-uniform: no flat factorization
+    assert flat.residency == "staged" and flat.buffer_depth == 2
+    tuning.validate_cache_doc(fresh.doc())
+
+
+def test_graph_search_finds_flat_inexpressible_schedule():
+    """The acceptance bar for the schedule graph: on a multi-segment
+    megakernel problem whose axes differ, the search returns a schedule
+    with DIFFERENT factorizations across segments (no flat KernelConfig
+    can express it) whose predicted and measured cost match-or-beat the
+    best flat-expressible schedule."""
+    from repro.kernels.fft4step import default_factorization
+
+    problem = tuning.ScheduleProblem.mega_2d(
+        na=64, nr=256,
+        segments=(tuning.SegmentShape(0, fwd=True),
+                  tuning.SegmentShape(1, fwd=True, inv=True, filtered=True),
+                  tuning.SegmentShape(0, inv=True, filtered=True)))
+
+    def measure(s, iters):                 # deterministic oracle
+        return cost.schedule_seconds(s, problem)
+
+    res = tuning.search_schedule(problem, k=8, measure=measure,
+                                 persist=False)
+    win = res.schedule
+    assert win is not None and len(win.segments) == 3
+    assert not win.uniform()
+    assert win.to_config().n1 is None      # the flat sweep can't say this
+
+    # flat baseline: what compiling WITHOUT a schedule reaches — one
+    # global candidates(nr) config (range segments take its split,
+    # azimuth segments fall back to the default factorization), same
+    # residency lane as the winner for a fair comparison
+    def flat_schedule(c):
+        segs = []
+        for shp in problem.segments:
+            if shp.axis == 1:
+                segs.append(tuning.SegmentConfig(c.n1, c.n2, c.n3,
+                                                 bool(c.karatsuba)))
+            else:
+                f = (tuple(default_factorization(problem.na)) + (None,))[:3]
+                segs.append(tuning.SegmentConfig(*f, bool(c.karatsuba)))
+        return tuning.Schedule(
+            segments=tuple(segs), block=c.block, precision=c.precision,
+            residency=win.residency, phase_block=win.phase_block,
+            buffer_depth=win.buffer_depth)
+
+    flats = [flat_schedule(c) for c in tuning.candidates(problem.nr)]
+    flat_best = min(cost.schedule_seconds(s, problem) for s in flats)
+    assert cost.schedule_seconds(win, problem) <= flat_best   # predicted
+    assert res.seconds <= min(measure(s, 1) for s in flats)   # measured
+
+
+def test_plan_compiles_through_schedule_to_kernel(tmp_path, monkeypatch):
+    """compile_plan(schedule=...) routes per-segment factorization and
+    karatsuba into the megakernel's extended segment records (and
+    buffer_depth into the kernel kwargs), and the scheduled image stays
+    allclose to the unscheduled pipeline."""
+    from repro.core import plan as planlib
+    from repro.core.sar import build_pipeline
+    from repro.core.sar.geometry import test_scene
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    tuning.clear_memory_cache()
+    planlib.clear_pipeline_cache()
+    cfg = test_scene(128)
+    sched = tuning.Schedule(
+        segments=(tuning.SegmentConfig(16, 8, None, True),
+                  tuning.SegmentConfig(8, 16, None, False),
+                  tuning.SegmentConfig(8, 16, None, None)),
+        residency="staged", phase_block=8, buffer_depth=3)
+    pipe = build_pipeline(cfg, "fused1", schedule=sched)
+    mega = [s for s in pipe.steps if s.kind == "mega"]
+    assert len(mega) == 1
+    kk = mega[0].kernel_kw
+    assert kk["residency"] == "staged" and kk["buffer_depth"] == 3
+    assert [rec[4:] for rec in kk["segments"]] == [
+        (16, 8, None, True), (8, 16, None, False), (8, 16, None, None)]
+
+    rng = np.random.default_rng(3)
+    raw = jnp.asarray(rng.standard_normal((128, 128))
+                      + 1j * rng.standard_normal((128, 128)), jnp.complex64)
+    img = np.asarray(pipe.run(raw))
+    ref_img = np.asarray(build_pipeline(cfg, "fused1", tune="off").run(raw))
+    scale = max(1.0, float(np.abs(ref_img).max()))
+    np.testing.assert_allclose(img, ref_img, atol=2e-4 * scale, rtol=0)
+    tuning.clear_memory_cache()
+    planlib.clear_pipeline_cache()
+
+
+def test_service_warm_consumes_persisted_schedule(tmp_path, monkeypatch):
+    """A graph-search Schedule persisted under the pipeline key must be
+    picked up by the warm path and compiled into the served pipeline —
+    its per-segment decisions reaching each dispatch in step order."""
+    from repro.core import plan as planlib
+    from repro.core.sar.geometry import test_scene
+    from repro.service import LocalBackend
+    from repro.service.queue import BatchKey
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    tuning.clear_memory_cache()
+    planlib.clear_pipeline_cache()
+    cfg = test_scene(128)
+    bkey = BatchKey(cfg, "fused3", None, False)
+    tkey = tuning.TuneKey.pipeline(variant="fused3", na=128, nr=128, batch=2)
+    sched = tuning.Schedule(
+        segments=(tuning.SegmentConfig(16, 8, None, True),
+                  tuning.SegmentConfig(8, 16, None, False),
+                  tuning.SegmentConfig(16, 8, None, True)),
+        block=4, col_block=128)
+    tuning.get_cache().put_schedule(tkey, sched, seconds=1e-3)
+
+    b = LocalBackend(sweep=((None, None), (32, -1)), fused1="off")
+    b.warm(bkey, max_batch=2)
+    assert b._sched[bkey] == sched
+    spect = [s for s in b._pipeline(bkey).steps if s.kind == "spectral"]
+    assert [(s.kernel_kw["n1"], s.kernel_kw["n2"], s.kernel_kw["karatsuba"])
+            for s in spect] == [(16, 8, True), (8, 16, False), (16, 8, True)]
+    tuning.clear_memory_cache()
+    planlib.clear_pipeline_cache()
