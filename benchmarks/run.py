@@ -6,10 +6,11 @@
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI smoke + artifacts
 
 Every run also writes machine-readable BENCH_fft.json / BENCH_rda.json /
-BENCH_serve.json / BENCH_tuning.json (wall-ms per variant/size/batch +
-git SHA + backend; BENCH_tuning records guided-search wall time and
-predicted-vs-measured rank quality) so the perf trajectory is tracked
-across PRs; CI uploads them as workflow artifacts.
+BENCH_serve.json / BENCH_tuning.json / BENCH_sharded.json (wall-ms per
+variant/size/batch + git SHA + backend; BENCH_tuning records guided-search
+wall time and predicted-vs-measured rank quality; BENCH_sharded records the
+8-device sharded-megakernel dispatch/turn counts) so the perf trajectory is
+tracked across PRs; CI uploads them as workflow artifacts.
 """
 from __future__ import annotations
 
@@ -37,7 +38,7 @@ def main() -> None:
                          "artifacts")
     ap.add_argument("--only", default=None,
                     help="table_1|table_2|table_3|table_4|table_5|table_6|"
-                         "table_7")
+                         "table_7|table_8")
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -73,6 +74,10 @@ def main() -> None:
         bench_tuning.run(full=args.full, smoke=args.smoke)
         write_bench_json("BENCH_tuning.json", take_records(), **meta)
         written.append("BENCH_tuning.json")
+    if want("table_8"):
+        bench_rda.run_sharded(full=args.full, smoke=args.smoke)
+        write_bench_json("BENCH_sharded.json", take_records(), **meta)
+        written.append("BENCH_sharded.json")
     if args.smoke:
         # CI uploads these as workflow artifacts — refuse to hand it a
         # malformed document (schema 2: versioned, ISO-8601 stamped).

@@ -62,6 +62,8 @@ def load_rows(doc: dict) -> dict:
 DEFAULT_BASELINE = os.path.join(_ROOT, "benchmarks", "baseline_rda.json")
 DEFAULT_TUNING_BASELINE = os.path.join(_ROOT, "benchmarks",
                                        "baseline_tuning.json")
+DEFAULT_SHARDED_BASELINE = os.path.join(_ROOT, "benchmarks",
+                                        "baseline_sharded.json")
 
 
 def baseline_doc(path_or_none: str, ref: str) -> dict:
@@ -188,6 +190,52 @@ def compare_tuning(base: dict, fresh: dict) -> list[str]:
     return failures
 
 
+def compare_sharded(base: dict, fresh: dict) -> list[str]:
+    """The table_8 architecture ratchet over ``BENCH_sharded.json``.
+
+    Wall time is the wrong gate here too (the 8 devices are emulated and
+    the kernels run through the Pallas interpreter); what must not regress
+    is the DISPATCH STRUCTURE, which is deterministic: each device must
+    still see exactly ``dispatches_per_device`` megakernel launches and
+    the pipeline exactly ``turns`` collective corner turns. A PR that
+    splits a phase group (more dispatches) or adds a corner turn (more
+    collective payload) fails even on a fast machine. Rows match by name
+    — the section header embeds the scene size, which --smoke vs --full
+    legitimately changes — and device count, dispatch count, and turn
+    count must not GROW versus the committed baseline."""
+    base_by_name = {r["name"]: r for r in base.get("rows", [])}
+    failures: list[str] = []
+    compared = 0
+    for row in sorted(fresh.get("rows", []), key=lambda r: r["name"]):
+        if not row["name"].endswith("_sharded"):
+            continue
+        compared += 1
+        d = _derived(row)
+        old = base_by_name.get(row["name"])
+        if old is None:
+            print(f"  new row (no baseline): {row['name']}")
+            continue
+        od = _derived(old)
+        for key in ("devices", "dispatches_per_device", "turns"):
+            ov, nv = od.get(key), d.get(key)
+            if ov is None or nv is None:
+                failures.append(
+                    f"{row['name']}: derived field {key!r} missing "
+                    f"(baseline={ov}, fresh={nv})")
+            elif int(nv) > int(ov):
+                failures.append(
+                    f"{row['name']}: {key} grew {ov} -> {nv} (more "
+                    "dispatches/collectives per device than the baseline)")
+        if not any(f.startswith(row["name"]) for f in failures):
+            print(f"  {row['name']}: devices={d.get('devices')} "
+                  f"dispatches_per_device={d.get('dispatches_per_device')} "
+                  f"turns={d.get('turns')} OK")
+    if compared == 0:
+        failures.append("no *_sharded rows in the fresh artifact")
+    print(f"# sharded ratchet compared {compared} rows")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_rda.json",
@@ -211,9 +259,31 @@ def main() -> int:
                     help="ratchet the table_7 tuner-policy artifact "
                          "(BENCH_tuning.json vs benchmarks/"
                          "baseline_tuning.json) instead of wall time")
+    ap.add_argument("--sharded", action="store_true",
+                    help="ratchet the table_8 sharded-megakernel artifact "
+                         "(BENCH_sharded.json vs benchmarks/"
+                         "baseline_sharded.json): gate dispatch and "
+                         "collective-turn counts, not wall time")
     args = ap.parse_args()
 
     from benchmarks.common import validate_bench_doc
+    if args.sharded:
+        fresh_path = ("BENCH_sharded.json" if args.fresh == "BENCH_rda.json"
+                      else args.fresh)
+        with open(fresh_path) as f:
+            fresh = validate_bench_doc(json.load(f))
+        bpath = args.baseline or DEFAULT_SHARDED_BASELINE
+        if not os.path.exists(bpath):
+            raise SystemExit(f"no sharded baseline at {bpath}")
+        with open(bpath) as f:
+            base = json.load(f)
+        failures = compare_sharded(base, fresh)
+        if failures:
+            print("# SHARDED RATCHET FAILED:")
+            for msg in failures:
+                print(f"#   {msg}")
+            return 1
+        return 0
     if args.tuning:
         fresh_path = ("BENCH_tuning.json" if args.fresh == "BENCH_rda.json"
                       else args.fresh)

@@ -497,6 +497,12 @@ class Step:
     filter_mode: str = FILTER_NONE        # composed kernel filter mode
     filter_kw: Optional[dict] = None      # device filter payloads (line-indexed)
     kernel_kw: Optional[dict] = None      # ops.spectral_op config kwargs
+    # mega steps only: per-segment scene-coordinate filter payloads,
+    # aligned with kernel_kw["segments"] — one tuple of device arrays per
+    # segment record, in the flat order ops.mega_spectral_op consumes.
+    # This is what lets lower_sharded split the in-kernel segment chain at
+    # corner-turn boundaries and re-shard each group's filters per device.
+    seg_filter_args: Optional[tuple] = None
 
 
 @dataclasses.dataclass
@@ -511,7 +517,9 @@ class Pipeline:
     * :meth:`run_streamed` — strip-wise over a host-resident scene that
       exceeds device memory.
     * :meth:`lower_sharded` — re-lower to multi-device shard_map slabs
-      with corner-turn collectives (transpose-free plans only).
+      with corner-turn collectives (transpose-free spectral plans and
+      mega plans; in a mega step the in-kernel corner turns become the
+      all_to_alls).
 
     A Pipeline holds materialized device filter payloads for one
     ``(SceneConfig, plan)`` pair; the payloads come from the bounded
@@ -562,9 +570,13 @@ class Pipeline:
         """Lower this compiled pipeline onto a device mesh: every
         spectral step runs on slabs sharded along its free (line) axis,
         with an all_to_all corner turn inserted wherever consecutive
-        steps transform different axes. Transpose-free spectral plans
-        only. See :func:`repro.core.sar.distributed.lower_pipeline` for
-        the collective-bytes story; returns ``fn(raw) -> image``."""
+        steps transform different axes. A mega step is split at its
+        in-kernel turn boundaries into per-device segment groups — one
+        staged megakernel dispatch per device per group, the turns
+        between groups becoming the collectives. Transpose/custom stages
+        do not lower. See
+        :func:`repro.core.sar.distributed.lower_pipeline` for the
+        collective-bytes story; returns ``fn(raw) -> image``."""
         from repro.core.sar import distributed
         return distributed.lower_pipeline(self, mesh, axes=axes, **kw)
 
@@ -796,6 +808,7 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
 
     segments = []
     filter_args: list = []
+    seg_args: list = []                   # per-segment device payloads
     seg_fk: list = []                     # per-segment oracle payloads
     for atoms, (axis, mode, arrays) in zip(segs, seg_payloads):
         fwd = any(a.kind == "fft" for a in atoms)
@@ -803,6 +816,7 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
         segments.append((axis, fwd, inv, mode))
         dev = _seg_device_args(mode, arrays)
         filter_args += dev
+        seg_args.append(tuple(dev))
         fk = {}
         if mode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
             fk["hr"], fk["hi"] = dev[0], dev[1]
@@ -865,8 +879,10 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
     fused = backend == BACKEND_PALLAS
     # stream_axis/strip_fn stay None: a cross-axis stage has no single
     # free axis to strip a host scene along, so run_streamed must reject
-    # it (and lower_sharded rejects kind != "spectral") — use a per-axis
-    # variant (fused3 & friends) for those execution surfaces.
+    # it — use a per-axis variant (fused3 & friends) there. lower_sharded
+    # DOES accept this step: seg_filter_args below carries the
+    # per-segment payloads it needs to split the in-kernel segment chain
+    # at corner-turn boundaries into per-device groups.
     #
     # hbm_roundtrips=1 counts DISPATCH-BOUNDARY materializations of the
     # working scene (raw in, image out), the metric every step reports.
@@ -877,7 +893,7 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
     # (bench rows carry residency=... so the distinction stays visible).
     return Step(name, fn, 1, 1, fused, None, None, kind="mega",
                 phys_axis=None, filter_mode=MEGA, filter_kw=None,
-                kernel_kw=kernel_kw)
+                kernel_kw=kernel_kw, seg_filter_args=tuple(seg_args))
 
 
 def _xla_apply(x, fwd, inv, mode, fk, phys_axis):

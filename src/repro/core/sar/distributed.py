@@ -19,6 +19,13 @@ schedules are provided (the collective-bytes trade-off is a §Perf experiment):
              all-to-all. all_to_all bytes halve; permute bytes are
              O(halo/nr_local) of a corner turn.
 
+Beyond the two hand-written schedules, `lower_pipeline` lowers ANY
+transpose-free compiled plan — including the single-dispatch megakernel
+family (fused1 / csa_fused1 / omegak_fused1): a mega step splits at its
+in-kernel corner-turn boundaries into per-device segment groups, one
+megakernel dispatch per device per group, with the turns between groups
+becoming the all_to_alls (docs/distributed.md §Mega lowering).
+
 Both return the focused image range-sharded (na, nr/P). Ingest layouts differ
 (each matches a physically sensible way to distribute arriving pulses):
   corner2: raw sharded P(None, axes) — each pulse scattered across devices
@@ -39,7 +46,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.sar import filters
-from repro.kernels.fft4step import FILTER_FULL
+from repro.kernels.fft4step import (
+    FILTER_FULL,
+    FILTER_NONE,
+    FILTER_OUTER,
+    FILTER_SHARED,
+    FILTER_SHARED_OUTER,
+)
 from repro.core.sar.geometry import SceneConfig
 from repro.core.sar.rda import split, unsplit
 from repro.kernels import ops
@@ -49,6 +62,37 @@ def _axis_size(mesh: Mesh, axes) -> int:
     if isinstance(axes, str):
         axes = (axes,)
     return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_sar_mesh(axes=("data",), devices=None) -> Mesh:
+    """A corner-turn-friendly mesh over every visible device, multi-host
+    capable.
+
+    Devices sort by ``(process_index, id)`` so each host owns a CONTIGUOUS
+    block of the sharded axis (the corner2 layout): a corner-turn
+    all_to_all then moves the bulk of its (P-1)/P payload between
+    neighbouring slabs on the same host's links, and only the slab
+    fraction crossing a host boundary rides the network. With two axis
+    names the mesh is processes x local-devices (e.g. ``("pod", "data")``
+    for per-host sharding with a pod axis for data parallelism); with one
+    it is the flat 1-D mesh every single-host path uses today.
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    if devices is None:
+        devices = sorted(jax.devices(),
+                         key=lambda d: (d.process_index, d.id))
+    devs = np.asarray(devices, dtype=object)
+    if len(axes) == 1:
+        return Mesh(devs, axes)
+    if len(axes) == 2:
+        nproc = len({d.process_index for d in devices})
+        if nproc == 0 or len(devices) % nproc:
+            raise ValueError(
+                f"{len(devices)} devices do not tile {nproc} processes")
+        return Mesh(devs.reshape(nproc, -1), axes)
+    raise ValueError(f"make_sar_mesh supports 1 or 2 axis names, got "
+                     f"{axes!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -244,13 +288,27 @@ def _lowerable_steps(pipe) -> list:
     if not steps:
         raise ValueError(f"pipeline {pipe.name!r} has no steps")
     for s in steps:
+        if s.kind == "mega":
+            if s.kernel_kw is None or s.seg_filter_args is None:
+                raise ValueError(
+                    f"mega step {s.name!r} carries no per-segment filter "
+                    "payloads (seg_filter_args) — it was compiled by a "
+                    "pre-sharding build; recompile the plan (e.g. "
+                    "core.plan.compile_plan / cached_pipeline) and lower "
+                    "the fresh pipeline")
+            continue
         if (s.kind != "spectral" or s.stream_axis is None
                 or s.kernel_kw is None):
             raise ValueError(
                 f"step {s.name!r} (kind {s.kind!r}) cannot lower to "
-                "shard_map slabs; only transpose-free spectral pipelines "
-                "shard (compile a transpose-free variant, e.g. fused3 / "
-                "csa_fused / omegak)")
+                "shard_map slabs: a transpose/custom stage reorders the "
+                "whole scene, which no per-device slab can do locally. "
+                "Compile a transpose-free per-axis variant (fused3 / "
+                "csa_fused / omegak), or their single-dispatch megakernel "
+                "twins (fused1 / csa_fused1 / omegak_fused1, "
+                "fuse=FUSE_MEGA) whose in-kernel corner turns lower to "
+                "all_to_all collectives; transposing variants run locally "
+                "via Pipeline.run / run_streamed instead")
     return steps
 
 
@@ -264,43 +322,206 @@ def _clamped_block(kernel_kw: dict, lines_local: int) -> dict:
     return kw
 
 
-def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None):
+def _divisor_block(want: int, lines: int) -> int:
+    """Largest block <= want that divides lines (>= 1)."""
+    blk = min(int(want), int(lines))
+    while lines % blk:
+        blk -= 1
+    return max(1, blk)
+
+
+def _mega_groups(step):
+    """Split a mega step's in-kernel segment chain at its corner-turn
+    boundaries: consecutive same-axis segment records (with their
+    scene-coordinate filter payloads) form one per-device group — one
+    staged megakernel dispatch per device, the turns BETWEEN groups
+    becoming all_to_all collectives. Returns
+    ``[(axis, [records], [per-seg farg tuples]), ...]``."""
+    recs = step.kernel_kw["segments"]
+    fargs = step.seg_filter_args
+    if len(recs) != len(fargs):
+        raise ValueError(
+            f"mega step {step.name!r}: {len(recs)} segment records but "
+            f"{len(fargs)} per-segment filter payloads")
+    groups: list = []
+    for rec, fa in zip(recs, fargs):
+        axis = rec[0]
+        if groups and groups[-1][0] == axis:
+            groups[-1][1].append(rec)
+            groups[-1][2].append(tuple(fa))
+        else:
+            groups.append((axis, [rec], [tuple(fa)]))
+    return groups
+
+
+def _mega_filter_specs(mode: str, arrays, stream_axis: int, axes) -> list:
+    """PartitionSpecs for one mega segment's scene-coordinate payload.
+
+    The free (line) axis is the sharded one: FULL 2-D filters and OUTER
+    ``u`` factors slice with the slab; SHARED vectors (the complete
+    transform axis) and OUTER ``v`` factors replicate."""
+    def line_sharded(a):
+        if a.ndim != 2:
+            return P(None)
+        return P(axes, None) if stream_axis == 0 else P(None, axes)
+
+    specs: list = []
+    arrays = list(arrays)
+    if mode in (FILTER_SHARED, FILTER_FULL, FILTER_SHARED_OUTER):
+        hr, hi = arrays[0], arrays[1]
+        for a in (hr, hi):
+            # SHARED payloads are 1-D (whole transform axis, replicated);
+            # a 2-D payload is a FULL scene-shaped filter, sliced like x
+            specs.append(line_sharded(a) if mode != FILTER_SHARED
+                         else P(None))
+    if mode in (FILTER_OUTER, FILTER_SHARED_OUTER):
+        u, v = arrays[-2], arrays[-1]
+        # u is (lines, K) — lines IS the sharded free axis; v is (n, K)
+        # on the complete transform axis
+        specs.append(P(axes, *([None] * (u.ndim - 1))))
+        specs.append(P(*([None] * v.ndim)))
+    if mode == FILTER_NONE and arrays:
+        raise ValueError("filter-less segment carries payload arrays")
+    return specs
+
+
+# kernel knobs a mega step's kernel_kw shares with every per-device group
+_MEGA_GROUP_KW = ("fft_impl", "interpret", "precision", "karatsuba",
+                  "buffer_depth")
+
+
+def _group_mega_kw(src: dict, recs, stream_axis: int, lines_local: int,
+                   na_local: int, nr_local: int, filter_bytes: int,
+                   residency: Optional[str]) -> dict:
+    """The `ops.mega_spectral_op` kwargs for ONE per-device segment
+    group: the parent dispatch's global knobs, the group's own segment
+    records, a phase_block clamped to divide the LOCAL free-axis lines,
+    and the residency re-resolved for the 1/P slab (unless pinned)."""
+    kw = {k: src[k] for k in _MEGA_GROUP_KW if k in src}
+    kw["segments"] = tuple(recs)
+    if stream_axis == 0:
+        # row slab (na/P, nr): the global n1/n2/n3 range-axis override
+        # still factors this slab's full-width range axis. Column slabs
+        # slice the range axis, so a full-width factorization would no
+        # longer multiply out — axis-0 groups fall back to the default
+        # split (per-segment 8-field records stay valid either way: they
+        # factor the transform axis, which sharding never slices).
+        for k in ("n1", "n2", "n3"):
+            kw[k] = src.get(k)
+    kw["phase_block"] = _divisor_block(src.get("phase_block") or 8,
+                                       lines_local)
+    if residency is None:
+        from repro import tuning
+        residency = tuning.cost.mega_residency(
+            na_local, nr_local, precision=src.get("precision"),
+            filter_bytes=filter_bytes)
+    kw["residency"] = residency
+    return kw
+
+
+def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
+                   residency: Optional[str] = None):
     """Lower a compiled :class:`~repro.core.plan.Pipeline` onto `mesh`.
 
     Returns a jit-ed ``fn(raw) -> image`` accepting one scene ``(na, nr)``
     or a batch ``(B, na, nr)``, complex64. The input arrives sharded along
-    the FIRST step's line axis and the image leaves sharded along the
-    LAST step's line axis (for the RDA family both are
+    the FIRST unit's line axis and the image leaves sharded along the
+    LAST unit's line axis (for the RDA family both are
     ``P(None, axes)`` — range columns distributed, matching `corner2`).
+
+    Spectral steps lower one-to-one: each runs `ops.spectral_op` on the
+    slab sharded along its free (line) axis. A MEGA step is split at its
+    in-kernel corner-turn boundaries into per-device segment groups
+    (range segments on range-sharded ``(na/P, nr)`` slabs, azimuth
+    segments on ``(na, nr/P)``): each group is ONE
+    `ops.mega_spectral_op` megakernel dispatch per device — zero HBM
+    intermediates within the group — and the in-kernel turns between
+    groups become the all_to_alls. ``residency`` pins every group's mode
+    ('vmem' | 'staged'); the default re-resolves per group on the 1/P
+    local slab (`repro.tuning.cost.mega_residency`), so a 4096² scene
+    that must stage locally can run VMEM-resident per device.
 
     Collective cost: one all_to_all of the full scene per axis change
     (2 · 8 · na · nr · (P−1)/P bytes each for split float32 re/im, halved
-    by ``turn_dtype=jnp.bfloat16``). A K-dispatch transpose-free plan has
-    at most K−1 turns; fused3/csa_fused/omegak all have exactly 2 — the
-    `corner2` schedule generalized to any plan the compiler accepts.
+    by ``turn_dtype=jnp.bfloat16``; `tuning.cost.collective_turn_bytes` /
+    `turn_seconds` price exactly this). A K-unit lowering has at most
+    K−1 turns; fused3/csa_fused/omegak AND the fused1 megakernel family
+    all have exactly 2 — the `corner2` schedule generalized to any plan
+    the compiler accepts.
+
+    The returned runner carries the lowering's shape as attributes:
+    ``devices``, ``dispatches_per_device`` (units), ``turns``
+    (collective corner turns), and ``unit_info`` (name / stream axis /
+    kind / residency per unit) — the compiler dispatch-count invariant
+    benchmarks and tests assert.
     """
     p = _axis_size(mesh, axes)
     cfg = pipe.cfg
     steps = _lowerable_steps(pipe)
-    for s in steps:
-        lines = cfg.na if s.stream_axis == 0 else cfg.nr
-        if lines % p:
-            raise ValueError(
-                f"step {s.name!r}: {lines} lines not divisible by {p} "
-                "devices")
 
-    # flatten per-step filter operands (deterministic order) + their specs
-    farg_names: list[list[str]] = []
+    # ---- flatten steps into UNITS: one shard_map-local dispatch each ----
     farg_arrays: list = []
     farg_specs: list = []
-    for s in steps:
+    units: list = []          # (stream_axis, label, kind, residency, apply)
+
+    def add_spectral(s):
         names = sorted((s.filter_kw or {}).keys())
-        farg_names.append(names)
+        start = len(farg_arrays)
         for name in names:
             arr = s.filter_kw[name]
             farg_arrays.append(arr)
             farg_specs.append(_spec_for_filter(name, arr, s.filter_mode,
                                                s.stream_axis, axes))
+        lines_local = (cfg.na if s.stream_axis == 0 else cfg.nr) // p
+        kw = _clamped_block(s.kernel_kw, lines_local)
+
+        def apply(xr, xi, fargs, _names=tuple(names), _kw=kw, _i=start):
+            fk = {n: fargs[_i + j] for j, n in enumerate(_names)}
+            return ops.spectral_op(xr, xi, **fk, **_kw)
+
+        units.append((s.stream_axis, s.name, "spectral", None, apply))
+
+    def add_mega(s):
+        for gi, (axis, recs, seg_fargs) in enumerate(_mega_groups(s)):
+            stream = 1 - axis
+            lines_local = (cfg.na if stream == 0 else cfg.nr) // p
+            start = len(farg_arrays)
+            fbytes = 0
+            for rec, fa in zip(recs, seg_fargs):
+                mode = rec[3]
+                specs = _mega_filter_specs(mode, fa, stream, axes)
+                if len(specs) != len(fa):
+                    raise ValueError(
+                        f"mega step {s.name!r} group {gi}: segment mode "
+                        f"{mode!r} expects {len(specs)} payload arrays, "
+                        f"got {len(fa)}")
+                farg_arrays.extend(fa)
+                farg_specs.extend(specs)
+                fbytes += sum(int(np.prod(a.shape)) * 4 // p for a in fa)
+            count = len(farg_arrays) - start
+            na_l = cfg.na // p if stream == 0 else cfg.na
+            nr_l = cfg.nr if stream == 0 else cfg.nr // p
+            kw = _group_mega_kw(s.kernel_kw, recs, stream, lines_local,
+                                na_l, nr_l, fbytes, residency)
+
+            def apply(xr, xi, fargs, _kw=kw, _i=start, _c=count):
+                return ops.mega_spectral_op(
+                    xr, xi, *fargs[_i:_i + _c], **_kw)
+
+            units.append((stream, f"{s.name}[g{gi}]", "mega",
+                          kw["residency"], apply))
+
+    for s in steps:
+        (add_mega if s.kind == "mega" else add_spectral)(s)
+
+    for stream, label, _kind, _res, _apply in units:
+        lines = cfg.na if stream == 0 else cfg.nr
+        if lines % p:
+            raise ValueError(
+                f"unit {label!r}: {lines} lines not divisible by {p} "
+                "devices")
+
+    n_turns = sum(1 for a, b in zip(units, units[1:]) if a[0] != b[0])
 
     def _turn(x, from_axis: int, bpre: int):
         # re-shard: sharded rows -> sharded cols (or back). split/concat in
@@ -325,26 +546,19 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None):
             return P(*([None] * bpre), *scene)
 
         def local(xr, xi, *fargs):
-            cur = steps[0].stream_axis
-            i = 0
-            for s, names in zip(steps, farg_names):
-                if s.stream_axis != cur:
+            cur = units[0][0]
+            for stream, _label, _kind, _res, apply in units:
+                if stream != cur:
                     xr = _turn(xr, cur, bpre)
                     xi = _turn(xi, cur, bpre)
-                    cur = s.stream_axis
-                fk = {n: fargs[i + j] for j, n in enumerate(names)}
-                i += len(names)
-                lines_local = (cfg.na if cur == 0 else cfg.nr) // p
-                xr, xi = ops.spectral_op(
-                    xr, xi, **fk, **_clamped_block(s.kernel_kw, lines_local))
+                    cur = stream
+                xr, xi = apply(xr, xi, fargs)
             return xr, xi
 
         shard = functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(dspec(steps[0].stream_axis),
-                      dspec(steps[0].stream_axis), *farg_specs),
-            out_specs=(dspec(steps[-1].stream_axis),
-                       dspec(steps[-1].stream_axis)),
+            in_specs=(dspec(units[0][0]), dspec(units[0][0]), *farg_specs),
+            out_specs=(dspec(units[-1][0]), dspec(units[-1][0])),
             check_vma=False)
 
         @jax.jit
@@ -365,6 +579,14 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None):
             runners[nd] = _build(nd)
         return runners[nd](raw)
 
+    # the lowering's shape, for dispatch-count invariants and BENCH rows
+    run.devices = p
+    run.dispatches_per_device = len(units)
+    run.turns = n_turns
+    run.unit_info = tuple(
+        {"name": label, "stream_axis": stream, "kind": kind,
+         "residency": res}
+        for stream, label, kind, res, _apply in units)
     return run
 
 
@@ -388,7 +610,7 @@ def build_sharded(cfg: SceneConfig, variant: str = "fused3",
     (repro.service.backends.ShardedBackend).
     """
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        mesh = make_sar_mesh(axes)
     if schedule == "halo":
         if variant not in ("fused3", "fused_tfree", "fused", "unfused"):
             raise ValueError(

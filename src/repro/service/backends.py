@@ -21,7 +21,10 @@ shipped:
              its winner persists to the shared device-fingerprinted
              tuning cache under a pipeline-kind TuneKey, so serving
              warms survive process restarts: the next process's `warm()`
-             is a cache hit and pays only the jit traces.
+             is a cache hit and pays only the jit traces. Big streamed
+             scenes route to the SHARDED megakernel twin when multiple
+             devices are visible and the cost model prefers it
+             (`sharded="off"` opts out; see `execute_streamed`).
 
 ``sharded``  Multi-device execution via the shard_map corner-turn
              lowering (`core.sar.distributed.build_sharded`): schedule
@@ -94,16 +97,21 @@ class LocalBackend:
 
     def __init__(self, sweep: Sequence[Tuple[Optional[int], Optional[int]]]
                  = ((None, None), (32, -1)), tune_cache=None,
-                 fused1: str = "auto"):
+                 fused1: str = "auto", sharded: str = "auto"):
         if fused1 not in ("auto", "off"):
             raise ValueError(f"fused1 must be 'auto' or 'off', got "
                              f"{fused1!r}")
+        if sharded not in ("auto", "off"):
+            raise ValueError(f"sharded must be 'auto' or 'off', got "
+                             f"{sharded!r}")
         self.sweep = tuple(sweep)
         self.fused1 = fused1
+        self.sharded = sharded
         self._tune_cache = tune_cache       # None -> the shared default
         self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
         self._sched: Dict[BatchKey, "tuning.Schedule"] = {}
         self._fns: Dict[BatchKey, callable] = {}
+        self._sharded_fns: Dict[BatchKey, callable] = {}
 
     def _route_variant(self, key: BatchKey) -> str:
         """The variant actually compiled for a BatchKey: VMEM-fitting
@@ -223,14 +231,55 @@ class LocalBackend:
         out = np.asarray(self._fn(key)(jnp.asarray(_pad_batch(batch))))
         return out[:b]
 
+    def _sharded_twin(self, key: BatchKey) -> Optional[str]:
+        """The megakernel twin to run SHARDED for a big streamed scene,
+        or None to keep the host-strip path. Routes only when the whole
+        route is invisible (a twin exists and the precision is not
+        block-scaled — same rule as `_route_variant`), the scene tiles
+        the mesh, and the roofline prefers P per-device megakernels plus
+        collective corner turns over strip-streaming one device
+        (`repro.tuning.cost.sharded_preferred`)."""
+        twin = FUSED1_TWINS.get(key.variant)
+        p = len(jax.devices())
+        if (self.sharded != "auto" or self.fused1 == "off" or twin is None
+                or p <= 1 or resolve_precision(key.precision).block_scaled):
+            return None
+        cfg = key.scene
+        prec = resolve_precision(key.precision).name
+        if not tuning.cost.sharded_preferred(cfg.na, cfg.nr, devices=p,
+                                             precision=prec):
+            return None
+        return twin
+
+    def _sharded_fn(self, key: BatchKey):
+        if key not in self._sharded_fns:
+            from repro.core.sar.distributed import make_sar_mesh
+            kw = {}
+            if key.precision is not None:
+                kw["precision"] = key.precision
+            pipe = planlib.cached_pipeline(
+                key.scene, self._sharded_twin(key), **kw)
+            self._sharded_fns[key] = pipe.lower_sharded(make_sar_mesh())
+        return self._sharded_fns[key]
+
     def execute_streamed(self, key: BatchKey, raw: np.ndarray,
                          strips: int = 4) -> np.ndarray:
-        """One host-resident scene through Pipeline.run_streamed (strip
-        transfer overlapped with compute; bit-identical to `execute`).
-        Always runs the REQUESTED per-axis variant: the streaming
-        executor strips one free axis at a time, which a cross-axis
-        megakernel step deliberately refuses (fused1 routing only applies
-        to the in-memory path)."""
+        """One host-resident scene, over the single-device budget.
+
+        Default path: Pipeline.run_streamed on the REQUESTED per-axis
+        variant (strip transfer overlapped with compute; bit-identical
+        to `execute`) — the streaming executor strips one free axis at a
+        time, which a cross-axis megakernel step deliberately refuses.
+
+        Multi-device path: when the cost model prefers it
+        (`_sharded_twin`), the scene runs as the variant's megakernel
+        twin lowered through shard_map — one staged megakernel dispatch
+        per device per phase group, all_to_all corner turns between
+        groups, each device holding a 1/P slab. f32 is bit-identical to
+        the per-axis strip path (asserted in tests), so the route stays
+        invisible."""
+        if self._sharded_twin(key) is not None:
+            return np.asarray(self._sharded_fn(key)(jnp.asarray(raw)))
         return np.asarray(self._pipeline(key, route=False)
                           .run_streamed(raw, strips=strips))
 
@@ -243,7 +292,10 @@ class ShardedBackend:
     def __init__(self, mesh=None, axes=("data",), schedule: str = "corner2",
                  turn_dtype=None):
         if mesh is None:
-            mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+            # multi-host capable: contiguous per-host device blocks
+            # (corner2 layout) — see distributed.make_sar_mesh
+            from repro.core.sar.distributed import make_sar_mesh
+            mesh = make_sar_mesh(axes)
         self.mesh = mesh
         self.axes = axes
         self.schedule = schedule

@@ -67,6 +67,7 @@ PEAK_MATMUL_FLOPS = 2.0e14      # dense f32 matrix throughput
 PEAK_VPU_FLOPS = 4.0e12         # pointwise (twiddle/filter) throughput
 PEAK_HBM_BYTES = 1.2e12         # HBM <-> VMEM bandwidth
 VMEM_BUDGET_BYTES = 16 * 2**20  # per-grid-step on-chip footprint budget
+PEAK_LINK_BYTES = 5.0e10        # per-device inter-chip (ICI-class) b/w
 
 # Matmul-throughput multiplier per operand precision ("Range, Not
 # Precision": narrow operands double matrix-unit throughput; bs16 spends
@@ -320,13 +321,41 @@ def segment_seconds(problem: ScheduleProblem, shape: SegmentShape,
     return terms["predicted_seconds"]
 
 
+def collective_turn_bytes(na: int, nr: int, batch: int = 1,
+                          devices: int = 1, elem_bytes: int = 4) -> int:
+    """Per-device all_to_all wire bytes of ONE corner turn: each device
+    holds a split re/im 1/P slab and keeps 1/P of it, so (P-1)/P of the
+    slab crosses links (docs/distributed.md §collective bytes; halve via
+    ``turn_dtype=bfloat16`` -> elem_bytes=2)."""
+    slab = 2 * elem_bytes * na * nr * batch // max(1, devices)
+    return slab * (devices - 1) // max(1, devices)
+
+
 def turn_seconds(problem: ScheduleProblem, *,
                  residency: Optional[str] = None,
                  buffer_depth: Optional[int] = None) -> float:
     """The corner-turn edge weight between two segments on different
-    axes: free for a VMEM-resident slab (logical remap), an HBM
-    write+read of the scene for the staged tier — overlapped with
-    compute when the DMA is double-buffered (depth >= 2)."""
+    axes.
+
+    Local (devices == 1): free for a VMEM-resident slab (logical remap),
+    an HBM write+read of the scene for the staged tier — overlapped with
+    compute when the DMA is double-buffered (depth >= 2).
+
+    Sharded (devices > 1): every turn is a dispatch-boundary all_to_all
+    regardless of residency — each device writes its 1/P slab out, moves
+    (P-1)/P of it over inter-chip links, and reads the re-sharded slab
+    back. The link term dominates (PEAK_LINK_BYTES << PEAK_HBM_BYTES);
+    with ``buffer_depth >= 2`` the staged megakernel's double-buffered
+    DMA phases earn the same TURN_OVERLAP credit as the local tier (the
+    collective for block j+1 overlaps block j's DFT matmuls)."""
+    if problem.devices > 1:
+        p = problem.devices
+        slab = 2 * 2 * 4 * problem.na * problem.nr * problem.batch // p
+        wire = collective_turn_bytes(problem.na, problem.nr,
+                                     problem.batch, p)
+        secs = slab * 2 / PEAK_HBM_BYTES + wire / PEAK_LINK_BYTES
+        overlap = TURN_OVERLAP if (buffer_depth or 2) >= 2 else 1.0
+        return secs * overlap
     if residency != RESIDENT_STAGED:
         return 0.0
     traffic = 2 * 2 * 4 * problem.na * problem.nr * problem.batch
@@ -366,7 +395,11 @@ def schedule_vmem_bytes(schedule: Schedule,
         bufs = depth * 2 * 4 * (pb_r * problem.nr + problem.na * pb_c)
         bufs *= 2                        # worst case: FULL-filter slabs
         return bufs + const + filter_bytes
-    slab = 2 * 4 * problem.batch * problem.na * problem.nr
+    # devices > 1: each device's VMEM holds a 1/P slab (the staged line
+    # buffers above are NOT divided — their long axis is the transform
+    # axis, which sharding never splits)
+    slab = 2 * 4 * problem.batch * problem.na * problem.nr \
+        // problem.devices
     footprint = 3 * slab + const + filter_bytes
     if resolve_precision(schedule.precision).block_scaled:
         footprint += slab // 2
@@ -418,10 +451,66 @@ def schedule_seconds(schedule: Schedule,
                                   buffer_depth=schedule.buffer_depth)
         prev = shape
     if problem.mega:
-        # the scene enters and leaves HBM exactly once per dispatch
-        slab_io = 2 * 2 * 4 * problem.na * problem.nr * problem.batch
+        # the scene enters and leaves HBM exactly once per dispatch —
+        # 1/P of it per device when sharded
+        slab_io = (2 * 2 * 4 * problem.na * problem.nr * problem.batch
+                   / problem.devices)
         total += slab_io / PEAK_HBM_BYTES
     return total
+
+
+# RDA-family megakernel shape (fused1 / csa_fused1 / omegak_fused1 all
+# lower to an azimuth -> range -> azimuth segment chain): the canonical
+# workload `sharded_preferred` prices when the caller has no plan in hand.
+_MEGA_SEGMENTS_2D = (
+    SegmentShape(axis=0, fwd=True, inv=False, filtered=False),
+    SegmentShape(axis=1, fwd=True, inv=True, filtered=True),
+    SegmentShape(axis=0, fwd=False, inv=True, filtered=True),
+)
+
+
+def _default_mega_schedule(na: int, nr: int, devices: int = 1,
+                           precision: Optional[str] = None,
+                           filter_bytes: int = 0) -> Schedule:
+    """The schedule the compiler would pick unprompted: auto residency on
+    the (per-device) slab, default phase_block/buffer_depth."""
+    res = mega_residency(na // devices if devices > 1 else na, nr,
+                         precision=precision, filter_bytes=filter_bytes)
+    return Schedule(segments=(SegmentConfig(),) * len(_MEGA_SEGMENTS_2D),
+                    precision=precision, residency=res,
+                    phase_block=8, buffer_depth=2)
+
+
+def sharded_preferred(na: int, nr: int, batch: int = 1, devices: int = 1,
+                      precision: Optional[str] = None,
+                      filter_bytes: int = 0) -> bool:
+    """Whether the roofline prefers the P-device sharded megakernel over
+    ONE local dispatch for this scene — the service's big-scene routing
+    predicate (`LocalBackend.execute_streamed`).
+
+    Prices the canonical azimuth->range->azimuth megakernel both ways
+    with `schedule_seconds`: locally the corner turns are free (VMEM) or
+    HBM-priced (staged); sharded they become all_to_all collectives
+    (`collective_turn_bytes` over PEAK_LINK_BYTES) but every compute and
+    slab-I/O term divides by P. Scenes whose whole slab fits the local
+    VMEM budget never shard — the local single-dispatch megakernel route
+    already serves them with zero HBM intermediates, and a collective
+    would only add latency; a staged (over-budget) scene shards whenever
+    the roofline says P slabs + wire beat one staged device."""
+    if devices <= 1 or na % devices or nr % devices:
+        return False
+    if mega_residency(na, nr, precision=precision,
+                      filter_bytes=filter_bytes) == RESIDENT_VMEM:
+        return False
+    local = ScheduleProblem.mega_2d(na, nr, _MEGA_SEGMENTS_2D, batch=batch)
+    shard = ScheduleProblem.mega_2d(na, nr, _MEGA_SEGMENTS_2D, batch=batch,
+                                    devices=devices)
+    local_s = schedule_seconds(
+        _default_mega_schedule(na, nr, 1, precision, filter_bytes), local)
+    shard_s = schedule_seconds(
+        _default_mega_schedule(na, nr, devices, precision, filter_bytes),
+        shard)
+    return shard_s < local_s
 
 
 def nominal_flops(key: TuneKey, fwd: bool = True, inv: bool = True,

@@ -248,8 +248,11 @@ def schedule_frontier(problem: ScheduleProblem, *,
             problem, residency=lane.get("residency"),
             buffer_depth=lane.get("buffer_depth"))
         if problem.mega:
+            # per-device slab entry/exit (devices == 1 for local problems;
+            # a sharded problem's corner-turn collectives are priced in
+            # costlib.turn_seconds via problem.devices)
             base += (2 * 2 * 4 * problem.na * problem.nr * problem.batch
-                     / costlib.PEAK_HBM_BYTES)
+                     / problem.devices / costlib.PEAK_HBM_BYTES)
         heapq.heappush(heap, (base, next(counter), i, ()))
 
     feasible: list = []

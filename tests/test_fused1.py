@@ -178,12 +178,29 @@ def test_run_streamed_rejects_mega_step():
         p.run_streamed(np.asarray(simulate_cached(CFG, TARGETS)), strips=4)
 
 
-def test_lower_sharded_rejects_mega_step():
-    """The shard_map lowering slices slabs per dispatch axis; a mega step
-    would need in-kernel cross-device turns it does not implement."""
+def test_lower_sharded_accepts_mega_step():
+    """The shard_map lowering splits a mega step at its in-kernel turn
+    boundaries into per-device segment groups: 3 megakernel dispatches
+    per device, the 2 turns now collectives — and on a 1-device mesh the
+    result stays bit-identical to the local fused3 reference."""
     mesh = jax.make_mesh((1,), ("data",))
     p = build_pipeline(CFG, "fused1", tune="off")
-    with pytest.raises(ValueError, match="shard"):
+    run = p.lower_sharded(mesh)
+    assert run.devices == 1
+    assert run.dispatches_per_device == 3
+    assert run.turns == 2
+    assert all(u["kind"] == "mega" for u in run.unit_info)
+    raw = scene()
+    ref = np.asarray(build_pipeline(CFG, "fused3", tune="off").run(raw))
+    np.testing.assert_array_equal(np.asarray(run(raw)), ref)
+
+
+def test_lower_sharded_rejects_transposing_plan():
+    """Transpose stages reorder the whole scene — no per-device slab can
+    do that locally, and the error must say what to compile instead."""
+    mesh = jax.make_mesh((1,), ("data",))
+    p = build_pipeline(CFG, "fused", tune="off")   # transposing variant
+    with pytest.raises(ValueError, match="fused1"):
         p.lower_sharded(mesh)
 
 
