@@ -160,14 +160,25 @@ def run(n: int = 512, full: bool = False, smoke: bool = False):
     # the single-dispatch megakernel family, both residency modes: the
     # dispatch/HBM columns are the paper's claim realized (1 dispatch,
     # one HBM round-trip end to end) — wall-ms on CPU is emulator time.
+    # serving-precision column: the same megakernel with per-line block
+    # exponents quantizing the matmul operands to f16 — the default
+    # serving tier (docs/serving.md). precision=None is the f32 row the
+    # existing ratchet baseline tracks; the bs16 rows show the tier's
+    # dispatch structure is identical (route-invisible block scaling).
     for name, kw in (("fused1", dict(residency="vmem")),
-                     ("fused1_staged", dict(residency="staged"))):
+                     ("fused1_staged", dict(residency="staged")),
+                     ("fused1_bs16",
+                      dict(residency="vmem", precision="bs16")),
+                     ("fused1_staged_bs16",
+                      dict(residency="staged", precision="bs16"))):
         p = build_pipeline(cfg, "fused1", **kw)
         t = timeit(p.jitted(), raw, warmup=1, iters=3)
         step = p.steps[0]
+        prec = kw.get("precision") or "f32"
         emit(f"rda_{name}", t,
              f"dispatches={p.dispatches};hbm_roundtrips={p.hbm_roundtrips};"
              f"residency={step.kernel_kw['residency']};"
+             f"precision={prec};"
              f"speedup_vs_unfused={times['unfused'] / t:.2f}x",
              interpret=interp)
     for name, b in (("csa", build_csa), ("csa_fused", build_csa_fused)):

@@ -12,6 +12,14 @@ reporting per-point p50/p99/achieved-rps/mean-batch/rejections. The
 acceptance bar tracked across PRs: burst throughput at B=4 coalescing
 >= 1.5x the sequential baseline on 512^2 scenes (CPU numbers are
 interpret-mode illustrative, like every other table here).
+
+The serve_tier_* row family measures the precision tiers: the bs16
+default serving tier (block-scaled f16, per-line exponents carried
+through the kernels, admitted through the measured SNR gate) against the
+explicit f32 verification path, burst-loaded on the same warm backend.
+The gate row's snr_deviation_db is deterministic in interpret mode and
+ratcheted by scripts/bench_compare.py --serve; wall-clock tier numbers
+are illustrative like the rest.
 """
 from __future__ import annotations
 
@@ -47,11 +55,14 @@ def _sequential_baseline(cfg, raw, n_requests: int):
 
 
 async def _serve_point(backend, cfg, raw, n_requests: int,
-                       rate_rps: float | None):
-    """One service measurement: burst (rate None) or open-loop arrivals."""
+                       rate_rps: float | None, precision=None):
+    """One service measurement: burst (rate None) or open-loop arrivals.
+    precision=None pins the f32 verification path (the legacy rows'
+    baseline semantics); the serve_tier_* rows pass a tier explicitly."""
     svc = FocusService(
-        ServiceConfig(variant=VARIANT, max_batch=MAX_BATCH,
-                      max_delay_ms=20.0, max_queue=max(64, 2 * n_requests)),
+        ServiceConfig(variant=VARIANT, precision=precision,
+                      max_batch=MAX_BATCH, max_delay_ms=20.0,
+                      max_queue=max(64, 2 * n_requests)),
         backend=backend)
     await svc.start()
     t0 = time.perf_counter()
@@ -126,4 +137,30 @@ def run(full: bool = False, smoke: bool = False):
              f"mean_batch={snap['mean_batch_size']:.2f};"
              f"queue_depth_max={snap['queue_depth_max']};"
              f"rejected={snap['rejected']}")
+
+    # -- precision tiers: bs16 default serving tier vs f32 verification --
+    # The gate measurement is the same harness the service consults at
+    # admission (repro.tuning.quality, lru-cached), so the service points
+    # below pay it exactly once. snr_deviation_db is deterministic in
+    # interpret mode and ratcheted across PRs; tier wall times are not.
+    from repro.tuning.quality import precision_snr_deviation
+    dev = precision_snr_deviation("bs16")
+    emit("serve_tier_gate_bs16", 0.0,
+         f"snr_deviation_db={dev:.4f};gate_db=0.1;"
+         f"admitted={dev <= 0.1}")
+    tiers = {}
+    for prec in ("f32", "bs16"):
+        backend.warm(BatchKey(cfg, VARIANT, prec, False), MAX_BATCH)
+        snap = asyncio.run(_serve_point(backend, cfg, raw, n_requests,
+                                        None, precision=prec))
+        tiers[prec] = snap["achieved_rps"]
+        emit(f"serve_tier_{prec}_burst_B4_per_request",
+             1.0 / max(snap["achieved_rps"], 1e-9),
+             f"p50_ms={snap['latency_p50_ms']:.1f};"
+             f"p99_ms={snap['latency_p99_ms']:.1f};"
+             f"rps={snap['achieved_rps']:.2f};"
+             f"mean_batch={snap['mean_batch_size']:.2f}")
+    emit("serve_tier_bs16_gain", 0.0,
+         f"gain_vs_f32={tiers['bs16'] / max(tiers['f32'], 1e-9):.2f}x;"
+         "default_tier=bs16")
     return gain

@@ -64,6 +64,8 @@ DEFAULT_TUNING_BASELINE = os.path.join(_ROOT, "benchmarks",
                                        "baseline_tuning.json")
 DEFAULT_SHARDED_BASELINE = os.path.join(_ROOT, "benchmarks",
                                         "baseline_sharded.json")
+DEFAULT_SERVE_BASELINE = os.path.join(_ROOT, "benchmarks",
+                                      "baseline_serve.json")
 
 
 def baseline_doc(path_or_none: str, ref: str) -> dict:
@@ -236,6 +238,61 @@ def compare_sharded(base: dict, fresh: dict) -> list[str]:
     return failures
 
 
+def compare_serve(base: dict, fresh: dict,
+                  epsilon: float = 1e-6) -> list[str]:
+    """The table_6 quality ratchet over ``BENCH_serve.json``.
+
+    Wall time and throughput are NOT gated (interpret-mode serving
+    latency measures the emulator and the asyncio scheduler); what must
+    not regress is the QUALITY of the default serving tier, which is
+    deterministic in interpret mode: the ``serve_tier_gate_*`` rows'
+    measured SNR deviation must stay admitted (<= its own gate_db) and
+    must not grow versus the committed baseline. The throughput-tier
+    rows themselves (``serve_tier_{f32,bs16}_burst_*``) must exist —
+    a PR that silently drops the tier family fails — but their wall
+    numbers are informational."""
+    base_by_name = {r["name"]: r for r in base.get("rows", [])}
+    failures: list[str] = []
+    gates = tiers = 0
+    for row in sorted(fresh.get("rows", []), key=lambda r: r["name"]):
+        if row["name"].startswith("serve_tier_gate_"):
+            gates += 1
+            d = _derived(row)
+            dev, gate = d.get("snr_deviation_db"), d.get("gate_db")
+            if dev is None or gate is None:
+                failures.append(f"{row['name']}: snr_deviation_db/gate_db "
+                                "missing from derived fields")
+                continue
+            if d.get("admitted") != "True" or float(dev) > float(gate):
+                failures.append(
+                    f"{row['name']}: deviation {dev} dB out of the "
+                    f"{gate} dB gate — the default tier is inadmissible")
+            old = base_by_name.get(row["name"])
+            if old is None:
+                print(f"  new row (no baseline): {row['name']}")
+                continue
+            ob = _derived(old).get("snr_deviation_db")
+            if ob is not None and float(dev) > float(ob) + epsilon:
+                failures.append(
+                    f"{row['name']}: deviation grew {ob} -> {dev} dB "
+                    "(deterministic in interpret mode — a real quality "
+                    "regression, not noise)")
+            else:
+                print(f"  {row['name']}: deviation {dev} dB "
+                      f"(baseline {ob}, gate {gate}) OK")
+        elif row["name"].startswith("serve_tier_"):
+            tiers += 1
+            print(f"  {row['name']}: wall_ms={row['wall_ms']:.2f} "
+                  f"(informational)")
+    if gates == 0:
+        failures.append("no serve_tier_gate_* rows in the fresh artifact")
+    if tiers == 0:
+        failures.append("no serve_tier_* throughput rows in the fresh "
+                        "artifact — the precision-tier family is gone")
+    print(f"# serve ratchet compared {gates} gate rows, {tiers} tier rows")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_rda.json",
@@ -264,9 +321,31 @@ def main() -> int:
                          "(BENCH_sharded.json vs benchmarks/"
                          "baseline_sharded.json): gate dispatch and "
                          "collective-turn counts, not wall time")
+    ap.add_argument("--serve", action="store_true",
+                    help="ratchet the table_6 serving-tier artifact "
+                         "(BENCH_serve.json vs benchmarks/"
+                         "baseline_serve.json): gate the bs16 tier's "
+                         "SNR deviation, not wall time")
     args = ap.parse_args()
 
     from benchmarks.common import validate_bench_doc
+    if args.serve:
+        fresh_path = ("BENCH_serve.json" if args.fresh == "BENCH_rda.json"
+                      else args.fresh)
+        with open(fresh_path) as f:
+            fresh = validate_bench_doc(json.load(f))
+        bpath = args.baseline or DEFAULT_SERVE_BASELINE
+        if not os.path.exists(bpath):
+            raise SystemExit(f"no serve baseline at {bpath}")
+        with open(bpath) as f:
+            base = json.load(f)
+        failures = compare_serve(base, fresh)
+        if failures:
+            print("# SERVE RATCHET FAILED:")
+            for msg in failures:
+                print(f"#   {msg}")
+            return 1
+        return 0
     if args.sharded:
         fresh_path = ("BENCH_sharded.json" if args.fresh == "BENCH_rda.json"
                       else args.fresh)

@@ -802,6 +802,12 @@ def _make_mega_step(group, seg_payloads, *, cfg, backend, opts) -> Step:
     back-to-back with the corner turns inside the kernel, in the
     residency mode resolved here — explicit compile option > tuned cache
     entry > VMEM-feasibility auto-cut (repro.tuning.cost.mega_residency).
+
+    Every precision fuses, including block-scaled bs16: the megakernel
+    carries per-line block exponents through its in-kernel corner turns
+    (re-blocking at each segment boundary — see fft4step.line_exponents),
+    so the fused dispatch is bit-identical to the per-axis chain it
+    replaces and the fused1 reroute/sharded lowering stay invisible.
     """
     segs = _split_segments(group)
     name = "+".join(dict.fromkeys(a.stage.name for a in group))

@@ -52,6 +52,7 @@ from repro.kernels.fft4step import (
     FILTER_OUTER,
     FILTER_SHARED,
     FILTER_SHARED_OUTER,
+    resolve_precision,
 )
 from repro.core.sar.geometry import SceneConfig
 from repro.core.sar.rda import split, unsplit
@@ -444,7 +445,14 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
     Collective cost: one all_to_all of the full scene per axis change
     (2 · 8 · na · nr · (P−1)/P bytes each for split float32 re/im, halved
     by ``turn_dtype=jnp.bfloat16``; `tuning.cost.collective_turn_bytes` /
-    `turn_seconds` price exactly this). A K-unit lowering has at most
+    `turn_seconds` price exactly this). Block-scaled (bs16) mega chains
+    keep the slab SCALED on the wire and all_gather the carried per-line
+    exponent vector alongside it (4 · lines · (P−1)/P bytes per turn —
+    the same cost functions price it via their ``precision`` argument),
+    then unscale after the turn: since power-of-two scaling is exact, the
+    sharded bs16 image is bit-identical to the local megakernel's (the
+    exponent of a line never depends on how the free axis was sharded).
+    A K-unit lowering has at most
     K−1 turns; fused3/csa_fused/omegak AND the fused1 megakernel family
     all have exactly 2 — the `corner2` schedule generalized to any plan
     the compiler accepts.
@@ -462,7 +470,7 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
     # ---- flatten steps into UNITS: one shard_map-local dispatch each ----
     farg_arrays: list = []
     farg_specs: list = []
-    units: list = []          # (stream_axis, label, kind, residency, apply)
+    units: list = []   # (stream_axis, label, kind, residency, carry, apply)
 
     def add_spectral(s):
         names = sorted((s.filter_kw or {}).keys())
@@ -479,7 +487,8 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
             fk = {n: fargs[_i + j] for j, n in enumerate(_names)}
             return ops.spectral_op(xr, xi, **fk, **_kw)
 
-        units.append((s.stream_axis, s.name, "spectral", None, apply))
+        units.append((s.stream_axis, s.name, "spectral", None, False,
+                      apply))
 
     def add_mega(s):
         for gi, (axis, recs, seg_fargs) in enumerate(_mega_groups(s)):
@@ -503,18 +512,23 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
             nr_l = cfg.nr if stream == 0 else cfg.nr // p
             kw = _group_mega_kw(s.kernel_kw, recs, stream, lines_local,
                                 na_l, nr_l, fbytes, residency)
+            # block-scaled groups chain their carried per-line exponents
+            # through the turns (ops.mega_spectral_op exp_in/return_exp)
+            carry = resolve_precision(kw.get("precision")).block_scaled
 
-            def apply(xr, xi, fargs, _kw=kw, _i=start, _c=count):
+            def apply(xr, xi, fargs, exp_in=None, return_exp=False,
+                      _kw=kw, _i=start, _c=count):
                 return ops.mega_spectral_op(
-                    xr, xi, *fargs[_i:_i + _c], **_kw)
+                    xr, xi, *fargs[_i:_i + _c], exp_in=exp_in,
+                    return_exp=return_exp, **_kw)
 
             units.append((stream, f"{s.name}[g{gi}]", "mega",
-                          kw["residency"], apply))
+                          kw["residency"], carry, apply))
 
     for s in steps:
         (add_mega if s.kind == "mega" else add_spectral)(s)
 
-    for stream, label, _kind, _res, _apply in units:
+    for stream, label, _kind, _res, _carry, _apply in units:
         lines = cfg.na if stream == 0 else cfg.nr
         if lines % p:
             raise ValueError(
@@ -547,12 +561,34 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
 
         def local(xr, xi, *fargs):
             cur = units[0][0]
-            for stream, _label, _kind, _res, apply in units:
+            exp = None
+            for i, (stream, _label, _kind, _res, carry, apply) \
+                    in enumerate(units):
                 if stream != cur:
                     xr = _turn(xr, cur, bpre)
                     xi = _turn(xi, cur, bpre)
+                    if exp is not None:
+                        # the carried per-line exponents ride the corner
+                        # turn with the (still scaled) slab: they are
+                        # sharded along their own line axis — the
+                        # PREVIOUS group's stream axis — and after the
+                        # turn every device's re-sharded slab spans all
+                        # of those lines, so an all_gather restores the
+                        # full vector (priced with the turn in
+                        # tuning.cost.collective_turn_bytes)
+                        exp = jax.lax.all_gather(
+                            exp, axes, axis=bpre + cur, tiled=True)
                     cur = stream
-                xr, xi = apply(xr, xi, fargs)
+                if carry:
+                    chain = i + 1 < len(units) and units[i + 1][4]
+                    if chain:
+                        xr, xi, exp = apply(xr, xi, fargs, exp_in=exp,
+                                            return_exp=True)
+                    else:
+                        xr, xi = apply(xr, xi, fargs, exp_in=exp)
+                        exp = None
+                else:
+                    xr, xi = apply(xr, xi, fargs)
             return xr, xi
 
         shard = functools.partial(
@@ -585,8 +621,8 @@ def lower_pipeline(pipe, mesh: Mesh, axes=("data",), turn_dtype=None,
     run.turns = n_turns
     run.unit_info = tuple(
         {"name": label, "stream_axis": stream, "kind": kind,
-         "residency": res}
-        for stream, label, kind, res, _apply in units)
+         "residency": res, "carries_exponents": carry}
+        for stream, label, kind, res, carry, _apply in units)
     return run
 
 

@@ -115,10 +115,19 @@ def auto_interpret(interpret: Optional[bool]) -> bool:
 #   f16   float16 operands — 11-bit mantissa but narrow exponent (can
 #         overflow past |x| ~ 6.5e4; prefer bs16)
 #   bs16  block-scaled float16: the kernel prologue extracts one power-of-two
-#         exponent per grid block (scale division is exact in f32), runs the
-#         whole fused pipeline on the scaled data with f16 operands, and the
-#         epilogue re-applies the exponent at the final store. Combines f16's
-#         mantissa with an unbounded effective exponent range.
+#         exponent PER LINE along the segment's free axis (scale division is
+#         exact in f32), runs the fused pipeline on the scaled data with f16
+#         operands, and the epilogue re-applies the exponents at the final
+#         store. Combines f16's mantissa with an unbounded effective exponent
+#         range. Per-line granularity makes the policy invariant to every
+#         grid blocking (line blocks, batch blocks, staged phase blocks,
+#         device sharding): any block of lines sees exactly the exponents its
+#         lines would get in any other partitioning, so bs16 results are
+#         bit-identical across the per-axis, megakernel, and sharded routes.
+#         Between segments the megakernels RE-BLOCK: apply the carried
+#         exponents (exact), re-extract along the new segment's free axis,
+#         rescale — matching the per-dispatch extraction of the multi-
+#         dispatch pipeline bit for bit.
 
 @dataclasses.dataclass(frozen=True)
 class Precision:
@@ -126,7 +135,7 @@ class Precision:
 
     name: str
     dtype: str            # operand dtype the DFT matmuls are cast to
-    block_scaled: bool    # per-block exponent extraction in prologue/epilogue
+    block_scaled: bool    # per-line exponent extraction in prologue/epilogue
 
     @property
     def jnp_dtype(self):
@@ -540,18 +549,50 @@ def _apply_filters(xr, xi, axis: int, filter_mode: str, filt):
     return xr, xi
 
 
-def _block_scale_prologue(xr, xi):
-    """bs16 prologue: extract one power-of-two exponent per grid block so
-    the f16 matmul operands stay in range. The fused pipeline (FFT,
-    filter, IFFT — and every megakernel segment) is linear in x, so one
-    scale factored out here and re-applied in the epilogue is exact up to
-    f32 rounding — and since the scale is a power of two, the scaling
-    itself is bit-exact."""
-    amax = jnp.maximum(jnp.max(jnp.abs(xr)), jnp.max(jnp.abs(xi)))
+def line_exponents(xr, xi, axis: int):
+    """bs16 codec, extract half: one power-of-two exponent per line along
+    the free axis of `axis`-oriented data, reduced over the transform axis
+    (the last dim when axis=1, the second-to-last when axis=0; any leading
+    dims are batch). Each segment is linear per line, so scales factored
+    out per line and re-applied in the epilogue are exact up to f32
+    rounding — and power-of-two scaling is itself bit-exact.
+
+    Per-line granularity is the route-invisibility property: the exponent
+    of a line depends only on that line's values, never on how the grid
+    blocked lines/batches/phases or how devices sharded the free axis, so
+    every route quantizes identically (asserted across fused3 / fused1
+    vmem+staged / 8-device sharded in tests/test_quality_regression.py).
+    The 1e-37 floor keeps all-zero (e.g. padded) lines at a finite
+    exponent; zero stays exactly zero through scale and unscale. The
+    clamp to [-126, 126] keeps `_pow2` exact for BOTH exp and -exp
+    (an amax past 2^126 would have overflowed the FFT long before)."""
+    red = xr.ndim - 1 if axis == 1 else xr.ndim - 2
+    amax = jnp.maximum(jnp.max(jnp.abs(xr), axis=red, keepdims=True),
+                       jnp.max(jnp.abs(xi), axis=red, keepdims=True))
     exp = jnp.ceil(jnp.log2(jnp.maximum(amax, jnp.float32(1e-37))))
-    scale = jnp.exp2(exp)
-    inv_scale = jnp.exp2(-exp)
-    return xr * inv_scale, xi * inv_scale, scale
+    return jnp.clip(exp, jnp.float32(-126.0), jnp.float32(126.0))
+
+
+def _pow2(exp):
+    """Exactly 2^exp for integer-valued f32 exp in [-126, 126], built by
+    placing exp straight into the f32 exponent bits. `jnp.exp2` is NOT
+    exact on every backend (CPU lowers it through exp(x·ln2), so e.g.
+    exp2(17) != 131072), and an inexact scale would break the codec's
+    round-trip identity (tests/test_kernels.py::test_bs16_codec_round_trip)."""
+    bits = (exp.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def apply_exponents(xr, xi, exp):
+    """bs16 codec, apply half: fold per-line exponents back in (exact)."""
+    scale = _pow2(exp)
+    return xr * scale, xi * scale
+
+
+def remove_exponents(xr, xi, exp):
+    """Scale per-line exponents out (exact): x -> x * 2^-exp."""
+    inv = _pow2(-exp)
+    return xr * inv, xi * inv
 
 
 def _spectral_kernel(spec: SpectralSpec, *refs):
@@ -575,9 +616,10 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     xr = xr_ref[...]
     xi = xi_ref[...]
 
-    scale = None
+    exp = None
     if PRECISIONS[spec.precision].block_scaled:
-        xr, xi, scale = _block_scale_prologue(xr, xi)
+        exp = line_exponents(xr, xi, spec.axis)
+        xr, xi = remove_exponents(xr, xi, exp)
 
     if spec.fwd:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=False)
@@ -587,10 +629,9 @@ def _spectral_kernel(spec: SpectralSpec, *refs):
     if spec.inv:
         xr, xi = _run_fft(xr, xi, consts, spec, inverse=True)
 
-    if scale is not None:
-        # bs16 epilogue: fold the block exponent back into the final store
-        xr = xr * scale
-        xi = xi * scale
+    if exp is not None:
+        # bs16 epilogue: fold the per-line exponents back into the store
+        xr, xi = apply_exponents(xr, xi, exp)
 
     or_ref[...] = xr.reshape(or_ref.shape)
     oi_ref[...] = xi.reshape(oi_ref.shape)
@@ -736,9 +777,14 @@ def build_spectral_call(spec: SpectralSpec, lines: int, batch: int = 1,
 # kernel (same _run_fft, same filter application, same constants), and every
 # segment treats its line blocks independently — so f32 results are
 # bit-identical between the two modes AND to the equivalent multi-dispatch
-# pipeline (asserted in tests/test_fused1.py). bs16 extracts its block
-# exponent once per grid step, so the two modes differ within the precision
-# policy's own tolerance there.
+# pipeline (asserted in tests/test_fused1.py). bs16 carries PER-LINE block
+# exponents through the in-kernel corner turns: each segment boundary
+# re-blocks (apply the carried exponents — exact power-of-two scaling —
+# then re-extract along the new segment's free axis), which reproduces the
+# multi-dispatch pipeline's per-dispatch extraction bit for bit. Because a
+# line's exponent never depends on the grid blocking, bs16 is bit-identical
+# across both residency modes, the per-axis chain, and the sharded lowering
+# (tests/test_quality_regression.py, tests/test_service.py).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -898,15 +944,28 @@ def _mega_kernel_resident(spec: MegaSpec, *refs):
 
     xr = xr_ref[...]
     xi = xi_ref[...]
-    scale = None
-    if PRECISIONS[spec.precision].block_scaled:
-        xr, xi, scale = _block_scale_prologue(xr, xi)
-    for seg, filt in zip(spec.segments, seg_filts):
+    block_scaled = PRECISIONS[spec.precision].block_scaled
+    exp = None
+    for i, (seg, filt) in enumerate(zip(spec.segments, seg_filts)):
+        if block_scaled:
+            if i == 0:
+                # prologue: extract per-line exponents once per grid step
+                exp = line_exponents(xr, xi, seg.axis)
+            else:
+                # corner turn (or same-axis boundary): re-block the carried
+                # exponents alongside the data — apply exactly, re-extract
+                # along the new free axis. Re-blocking at EVERY boundary
+                # (not just axis changes) mirrors the multi-dispatch
+                # pipeline's per-dispatch extraction, keeping the fused
+                # route bit-identical to it.
+                xr, xi = apply_exponents(xr, xi, exp)
+                exp = line_exponents(xr, xi, seg.axis)
+            xr, xi = remove_exponents(xr, xi, exp)
         xr, xi = _run_segment(xr, xi, consts.get(_seg_const_key(spec, seg)),
                               spec.seg_spec(seg), seg, filt)
-    if scale is not None:
-        xr = xr * scale
-        xi = xi * scale
+    if exp is not None:
+        # epilogue: the carried exponents land once, at the final store
+        xr, xi = apply_exponents(xr, xi, exp)
     or_ref[...] = xr.reshape(or_ref.shape)
     oi_ref[...] = xi.reshape(oi_ref.shape)
 
@@ -948,7 +1007,9 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
     block), everything else resident in VMEM], or, oi (ANY), then
     scratch: sr, si (ANY — the HBM corner-turn intermediate), the
     double-buffered VMEM line slabs (rows and/or cols orientation, plus
-    FULL-filter slabs where needed), and the DMA semaphores (2 slots x 6
+    FULL-filter slabs where needed), the bs16 per-line exponent-state
+    vectors er (na, 1) / ec (1, nr) when the precision is block-scaled,
+    and the DMA semaphores (2 slots x 6
     channels). Each step waits for its own slot's input DMA, immediately
     starts the NEXT block's input DMA into the other slot, then runs the
     segment's DFT matmuls — the copy/compute overlap the dispatch count
@@ -977,6 +1038,17 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
     if any(p["axis"] == 0 and p["seg"].filter_mode == FILTER_FULL
            for p in phases):
         fbufs[0] = next(it)
+    block_scaled = PRECISIONS[spec.precision].block_scaled
+    er_ref = ec_ref = None
+    if block_scaled:
+        # carried per-line exponent state (bs16): the row-axis and
+        # col-axis exponent vectors persist in VMEM across the sequential
+        # phase steps (the same cross-step scratch persistence the
+        # double-buffer prefetch relies on), so the HBM scratch holds
+        # SCALED data end to end and the exponents ride the corner turn
+        # in these vectors instead of being re-derived from scratch reads.
+        er_ref = next(it)              # (na, 1): axis-1 (row) exponents
+        ec_ref = next(it)              # (1, nr): axis-0 (col) exponents
     sems = next(it)
 
     b = pl.program_id(0)
@@ -993,6 +1065,7 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
     for p in phases:
         seg, axis, pb = p["seg"], p["axis"], p["pb"]
         off, nb = p["offset"], p["nblocks"]
+        prev_axis = phases[p["idx"] - 1]["axis"] if p["idx"] else None
         buf = bufs[axis]
         fbuf = fbufs.get(axis)
         sspec = spec.seg_spec(seg)
@@ -1032,7 +1105,8 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
         def _(p=p, seg=seg, axis=axis, pb=pb, off=off, nb=nb, buf=buf,
               fbuf=fbuf, sspec=sspec, filt_refs=filt_refs,
               has_full=has_full, dst_r=dst_r, dst_i=dst_i,
-              dst_batched=dst_batched, in_copies=in_copies):
+              dst_batched=dst_batched, in_copies=in_copies,
+              prev_axis=prev_axis):
             j = s - off
             depth = spec.buffer_depth
             if depth == 1:
@@ -1058,10 +1132,31 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
 
             xr = buf[slot, 0][None]
             xi = buf[slot, 1][None]
-            scale = None
-            if PRECISIONS[spec.precision].block_scaled:
-                xr, xi, scale = _block_scale_prologue(xr, xi)
             lo = j * pb
+            exp = None
+            if block_scaled:
+                if p["src"] != "x":
+                    # the scratch slab is scaled: unscale this block with
+                    # the exponent state the previous phase wrote — its
+                    # own lines' slice when the axis repeats, the whole
+                    # other-axis vector across a corner turn (every
+                    # element of a turned block crosses every prior line)
+                    if prev_axis == 1:
+                        old = (er_ref[pl.ds(lo, pb), :] if axis == 1
+                               else er_ref[...])
+                    else:
+                        old = (ec_ref[:, pl.ds(lo, pb)] if axis == 0
+                               else ec_ref[...])
+                    xr, xi = apply_exponents(xr, xi, old[None])
+                # re-block: per-line exponents along THIS phase's free
+                # axis — identical to the per-dispatch extraction of the
+                # multi-dispatch pipeline, hence route-invisible
+                exp = line_exponents(xr, xi, axis)
+                xr, xi = remove_exponents(xr, xi, exp)
+                if axis == 1:
+                    er_ref[pl.ds(lo, pb), :] = exp[0]
+                else:
+                    ec_ref[:, pl.ds(lo, pb)] = exp[0]
             if seg.filter_mode == FILTER_NONE:
                 filt = ()
             elif has_full:
@@ -1083,9 +1178,11 @@ def _mega_kernel_staged(spec: MegaSpec, *refs):
                     filt = (u, v)
             xr, xi = _run_segment(xr, xi, consts.get(_seg_const_key(spec, seg)),
                                   sspec, seg, filt)
-            if scale is not None:
-                xr = xr * scale
-                xi = xi * scale
+            if exp is not None and p["dst"] == "out":
+                # epilogue: the exponents land once, at the final store;
+                # scratch-bound intermediates stay scaled (the carried
+                # state rides er/ec through the corner turn instead)
+                xr, xi = apply_exponents(xr, xi, exp)
             buf[slot, 0] = xr[0]
             buf[slot, 1] = xi[0]
             out_r = pltpu.make_async_copy(
@@ -1181,6 +1278,12 @@ def build_mega_call(spec: MegaSpec, batch: int = 1,
         if any(p["axis"] == 0 and p["seg"].filter_mode == FILTER_FULL
                for p in phases):
             scratch.append(pltpu.VMEM((depth, 2, na, pb_c), jnp.float32))
+        if PRECISIONS[spec.precision].block_scaled:
+            # bs16 carried-exponent state: per-row and per-col exponent
+            # vectors persisting across the sequential phase steps, so
+            # the HBM scratch stays scaled end to end (_mega_kernel_staged)
+            scratch.append(pltpu.VMEM((na, 1), jnp.float32))
+            scratch.append(pltpu.VMEM((1, nr), jnp.float32))
         scratch.append(pltpu.SemaphoreType.DMA((depth, 6)))
         call = pl.pallas_call(
             functools.partial(_mega_kernel_staged, spec),

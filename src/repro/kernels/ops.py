@@ -32,9 +32,12 @@ from repro.kernels.fft4step import (
     MegaSpec,
     SegmentSpec,
     SpectralSpec,
+    apply_exponents,
     auto_interpret,
     build_mega_call,
     build_spectral_call,
+    line_exponents,
+    remove_exponents,
     resolve_precision,
 )
 
@@ -161,6 +164,7 @@ def spectral_op(
         "segments", "residency", "batch_block", "phase_block",
         "buffer_depth", "fft_impl",
         "karatsuba", "precision", "interpret", "n1", "n2", "n3",
+        "return_exp",
     ),
 )
 def mega_spectral_op(
@@ -179,6 +183,8 @@ def mega_spectral_op(
     n1: Optional[int] = None,
     n2: Optional[int] = None,
     n3: Optional[int] = None,
+    exp_in=None,
+    return_exp: bool = False,
 ):
     """The single-dispatch 2-D megakernel: a whole multi-axis spectral
     pipeline — `fft? mul* ifft?` segments with in-kernel corner turns
@@ -209,13 +215,35 @@ def mega_spectral_op(
     modes and to the equivalent per-axis dispatch chain.
     n1/n2/n3 override the RANGE-axis factorization (the azimuth axis uses
     the default split), matching ``compile_plan``'s ``fft_kw`` convention.
+
+    ``exp_in`` / ``return_exp`` (block-scaled precisions only) chain the
+    carried per-line exponents ACROSS megakernel dispatches — the sharded
+    lowering's corner-turn contract. With ``return_exp=True`` the result
+    comes back scaled, as ``(yr, yi, exp)``: ``exp`` holds the per-line
+    exponents along the LAST segment's free axis — exactly what the next
+    dispatch's prologue would extract — and the scaled slab is what rides
+    the all_to_all wire. Passing that ``exp`` as the next call's
+    ``exp_in`` (all_gathered to full length when the free axis is
+    re-sharded) restores the values exactly, power-of-two scaling being
+    bit-exact, so a chain of dispatches matches one fused dispatch bit
+    for bit.
     """
-    precision = resolve_precision(precision).name
+    prec = resolve_precision(precision)
+    precision = prec.name
+    if (exp_in is not None or return_exp) and not prec.block_scaled:
+        raise ValueError(
+            "exp_in/return_exp carry block exponents and require a "
+            f"block-scaled precision, got {precision!r}")
     batched = xr.ndim == 3
     if not batched:
         xr = xr[None]
         xi = xi[None]
     b, na, nr = xr.shape
+    if exp_in is not None:
+        # the previous dispatch's carried exponents: fold them back in
+        # (exact) before the prologue re-extracts along this dispatch's
+        # first free axis
+        xr, xi = apply_exponents(xr, xi, exp_in)
 
     segs = []
     args = list(filter_args)
@@ -264,6 +292,15 @@ def mega_spectral_op(
     call = build_mega_call(spec, batch=b,
                            interpret=_auto_interpret(interpret))
     yr, yi = call(xr, xi, *prepared)
+    if return_exp:
+        # hand the carry to the NEXT dispatch: re-extract along the last
+        # segment's free axis (bit-identical to what its prologue would
+        # compute) and return the slab scaled
+        exp = line_exponents(yr, yi, segs[-1].axis)
+        yr, yi = remove_exponents(yr, yi, exp)
+        if not batched:
+            return yr[0], yi[0], exp[0]
+        return yr, yi, exp
     if not batched:
         return yr[0], yi[0]
     return yr, yi

@@ -11,7 +11,8 @@ shipped:
              configs persist across requests. Scenes whose whole slab
              fits the VMEM budget are transparently routed from their
              per-axis variant to its single-dispatch megakernel twin
-             (FUSED1_TWINS; f32 bit-identical, `fused1="off"` opts out).
+             (FUSED1_TWINS; bit-identical at every precision,
+             `fused1="off"` opts out).
              `warm()` optionally sweeps
              a few (block, col_block) line-block configs on the real
              batched pipeline and pins the winner — interpret-mode CPU
@@ -72,8 +73,11 @@ _bucket = tuning.bucket_batch
 # Per-axis variants with a single-dispatch megakernel twin: when the
 # scene's whole slab fits the VMEM budget (repro.tuning.cost.mega_residency
 # says 'vmem'), the local backend transparently serves these through the
-# fused1 pipeline — same math bit-for-bit at f32 (asserted in tests), one
-# dispatch and zero HBM intermediates instead of three round-trips.
+# fused1 pipeline — same math bit-for-bit at EVERY precision (asserted in
+# tests: bs16 carries per-line block exponents through the in-kernel
+# corner turns, so the fused dispatch quantizes exactly like the per-axis
+# chain), one dispatch and zero HBM intermediates instead of three
+# round-trips.
 FUSED1_TWINS = {
     "fused3": "fused1",
     "csa_fused": "csa_fused1",
@@ -118,14 +122,14 @@ class LocalBackend:
         scenes requesting a per-axis variant with a megakernel twin are
         served by the single-dispatch fused1 pipeline (`fused1="off"`
         pins the requested variant). The route must be invisible — the
-        served image equals the requested variant's bit-for-bit — which
-        holds for every precision EXCEPT the block-scaled ones: bs16
-        extracts one exponent per dispatch, so one fused dispatch and
-        three would scale differently. Block-scaled requests keep their
-        per-axis pipeline."""
+        served image equals the requested variant's bit-for-bit — and it
+        is, at every precision: f32/bf16/f16 trivially (the fused kernel
+        runs the identical per-segment math), and bs16 because the
+        megakernel carries per-line block exponents through its in-kernel
+        corner turns, quantizing exactly as the three dispatches would
+        (the route-invisibility matrix in tests/test_service.py)."""
         twin = FUSED1_TWINS.get(key.variant)
         if (self.fused1 == "auto" and twin is not None
-                and not resolve_precision(key.precision).block_scaled
                 and tuning.cost.mega_residency(key.scene.na, key.scene.nr)
                 == "vmem"):
             return twin
@@ -233,16 +237,16 @@ class LocalBackend:
 
     def _sharded_twin(self, key: BatchKey) -> Optional[str]:
         """The megakernel twin to run SHARDED for a big streamed scene,
-        or None to keep the host-strip path. Routes only when the whole
-        route is invisible (a twin exists and the precision is not
-        block-scaled — same rule as `_route_variant`), the scene tiles
-        the mesh, and the roofline prefers P per-device megakernels plus
-        collective corner turns over strip-streaming one device
-        (`repro.tuning.cost.sharded_preferred`)."""
+        or None to keep the host-strip path. Routes when a twin exists
+        (any precision — bs16's carried exponents all_gather across the
+        corner turns, so the sharded image stays bit-identical), the
+        scene tiles the mesh, and the roofline prefers P per-device
+        megakernels plus collective corner turns over strip-streaming
+        one device (`repro.tuning.cost.sharded_preferred`)."""
         twin = FUSED1_TWINS.get(key.variant)
         p = len(jax.devices())
         if (self.sharded != "auto" or self.fused1 == "off" or twin is None
-                or p <= 1 or resolve_precision(key.precision).block_scaled):
+                or p <= 1):
             return None
         cfg = key.scene
         prec = resolve_precision(key.precision).name
@@ -275,9 +279,10 @@ class LocalBackend:
         (`_sharded_twin`), the scene runs as the variant's megakernel
         twin lowered through shard_map — one staged megakernel dispatch
         per device per phase group, all_to_all corner turns between
-        groups, each device holding a 1/P slab. f32 is bit-identical to
-        the per-axis strip path (asserted in tests), so the route stays
-        invisible."""
+        groups, each device holding a 1/P slab. Every precision is
+        bit-identical to the per-axis strip path (asserted in tests;
+        bs16's carried exponents ride the collectives), so the route
+        stays invisible."""
         if self._sharded_twin(key) is not None:
             return np.asarray(self._sharded_fn(key)(jnp.asarray(raw)))
         return np.asarray(self._pipeline(key, route=False)

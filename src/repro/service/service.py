@@ -48,6 +48,12 @@ class ServiceConfig:
     """Service-level policy knobs (per-request knobs ride on the request).
 
     variant: default plan variant for requests that don't name one.
+    precision: default precision tier for requests that don't name one.
+      The shipping default is 'bs16' (block-scaled f16 — per-line
+      exponents carried through the kernels, throughput tier); it is
+      still subject to the SNR gate like any explicit request. Set None
+      (or 'f32') for the full-precision verification path, which never
+      consults the gate.
     backend: 'local' | 'sharded' (see repro.service.backends).
     max_batch: coalescing bound B — requests per micro-batch.
     max_delay_ms: deadline a lone request waits for batch company.
@@ -65,6 +71,7 @@ class ServiceConfig:
     """
 
     variant: str = "fused3"
+    precision: Optional[str] = "bs16"
     backend: str = "local"
     max_batch: int = 4
     max_delay_ms: float = 5.0
@@ -191,6 +198,12 @@ class FocusService:
                     precision: Optional[str] = None) -> np.ndarray:
         """Submit one scene; resolves to its focused (na, nr) image.
 
+        ``precision=None`` takes the service's default tier
+        (``ServiceConfig.precision``, 'bs16' out of the box); pass 'f32'
+        explicitly for the verification path. The resolved tier — default
+        or per-request — is what the SNR gate checks and what the batcher
+        coalesces on.
+
         Raises SnrGateViolation (quality gate) or ServiceOverloaded
         (queue at bound) at admission — both BEFORE any device work —
         and RuntimeError when the service is not running (not started,
@@ -199,6 +212,8 @@ class FocusService:
             raise RuntimeError(
                 "service is not running (call start() first; submissions "
                 "after stop() are rejected)")
+        if precision is None:
+            precision = self.config.precision
         await self._ensure_gate_measured(precision)
         self._check_gate(precision)
         raw = np.ascontiguousarray(np.asarray(raw, np.complex64))

@@ -322,18 +322,30 @@ def segment_seconds(problem: ScheduleProblem, shape: SegmentShape,
 
 
 def collective_turn_bytes(na: int, nr: int, batch: int = 1,
-                          devices: int = 1, elem_bytes: int = 4) -> int:
+                          devices: int = 1, elem_bytes: int = 4,
+                          precision: Optional[str] = None) -> int:
     """Per-device all_to_all wire bytes of ONE corner turn: each device
     holds a split re/im 1/P slab and keeps 1/P of it, so (P-1)/P of the
     slab crosses links (docs/distributed.md §collective bytes; halve via
-    ``turn_dtype=bfloat16`` -> elem_bytes=2)."""
-    slab = 2 * elem_bytes * na * nr * batch // max(1, devices)
-    return slab * (devices - 1) // max(1, devices)
+    ``turn_dtype=bfloat16`` -> elem_bytes=2).
+
+    A block-scaled ``precision`` (bs16) adds the carried per-line
+    exponent vector: one f32 per line of the turned axis, all_gathered
+    alongside the slab so every device can unscale its re-sharded slab
+    (distributed.lower_pipeline). The turned axis is not known here, so
+    the longer scene axis bounds it."""
+    p = max(1, devices)
+    slab = 2 * elem_bytes * na * nr * batch // p
+    wire = slab * (devices - 1) // p
+    if resolve_precision(precision).block_scaled:
+        wire += 4 * max(na, nr) * batch * (devices - 1) // p
+    return wire
 
 
 def turn_seconds(problem: ScheduleProblem, *,
                  residency: Optional[str] = None,
-                 buffer_depth: Optional[int] = None) -> float:
+                 buffer_depth: Optional[int] = None,
+                 precision: Optional[str] = None) -> float:
     """The corner-turn edge weight between two segments on different
     axes.
 
@@ -352,7 +364,8 @@ def turn_seconds(problem: ScheduleProblem, *,
         p = problem.devices
         slab = 2 * 2 * 4 * problem.na * problem.nr * problem.batch // p
         wire = collective_turn_bytes(problem.na, problem.nr,
-                                     problem.batch, p)
+                                     problem.batch, p,
+                                     precision=precision)
         secs = slab * 2 / PEAK_HBM_BYTES + wire / PEAK_LINK_BYTES
         overlap = TURN_OVERLAP if (buffer_depth or 2) >= 2 else 1.0
         return secs * overlap
@@ -448,7 +461,8 @@ def schedule_seconds(schedule: Schedule,
     for shape in problem.segments:
         if prev is not None and prev.axis != shape.axis:
             total += turn_seconds(problem, residency=schedule.residency,
-                                  buffer_depth=schedule.buffer_depth)
+                                  buffer_depth=schedule.buffer_depth,
+                                  precision=schedule.precision)
         prev = shape
     if problem.mega:
         # the scene enters and leaves HBM exactly once per dispatch —

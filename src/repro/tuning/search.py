@@ -246,7 +246,8 @@ def schedule_frontier(problem: ScheduleProblem, *,
         # lane-level fixed weight: corner turns + (mega) slab entry/exit
         base = problem.turns() * costlib.turn_seconds(
             problem, residency=lane.get("residency"),
-            buffer_depth=lane.get("buffer_depth"))
+            buffer_depth=lane.get("buffer_depth"),
+            precision=lane.get("precision"))
         if problem.mega:
             # per-device slab entry/exit (devices == 1 for local problems;
             # a sharded problem's corner-turn collectives are priced in

@@ -267,10 +267,10 @@ def test_local_backend_routes_vmem_scenes_to_fused1():
     # unknown-twin variants are never rerouted
     assert routed._route_variant(
         BatchKey(cfg, "fused", None, False)) == "fused"
-    # block-scaled precisions keep their per-axis pipeline: bs16 extracts
-    # one exponent per DISPATCH, so the route would not be bit-invisible
+    # block-scaled precisions route too: the megakernel carries per-line
+    # exponents through its corner turns, so bs16 is bit-invisible as well
     assert routed._route_variant(
-        BatchKey(cfg, "fused3", "bs16", False)) == "fused3"
+        BatchKey(cfg, "fused3", "bs16", False)) == "fused1"
     assert routed._route_variant(
         BatchKey(cfg, "fused3", "bf16", False)) == "fused1"
 

@@ -254,6 +254,42 @@ def test_ifft_inverts_fft(shape, seed):
     assert_close((br, bi), (xr, xi), tol=1e-3)
 
 
+@settings(max_examples=40, deadline=None)
+@given(mag=st.floats(-60, 60), axis=st.sampled_from([0, 1]),
+       seed=st.integers(0, 2**31 - 1))
+def test_bs16_codec_round_trip(mag, axis, seed):
+    """The bs16 exponent codec: extract -> remove -> apply is the EXACT
+    identity (power-of-two scaling never rounds a normal float), and the
+    f16-quantized round trip stays within the half-float mantissa bound
+    (2^-10 of each line's amax), for line magnitudes across 2^-60..2^60
+    — the dynamic range the per-line exponents exist to absorb."""
+    from repro.kernels.fft4step import apply_exponents, line_exponents, \
+        remove_exponents
+    r = np.random.default_rng(seed)
+    shape = (4, 32)
+    scale = np.float32(2.0) ** np.float32(mag)
+    xr = (r.standard_normal(shape) * scale).astype(np.float32)
+    xi = (r.standard_normal(shape) * scale).astype(np.float32)
+    exp = line_exponents(jnp.asarray(xr), jnp.asarray(xi), axis)
+    sr, si = remove_exponents(jnp.asarray(xr), jnp.asarray(xi), exp)
+    # scaled magnitudes land in [0, 1]: representable in f16 verbatim
+    assert float(jnp.max(jnp.abs(sr))) <= 1.0
+    assert float(jnp.max(jnp.abs(si))) <= 1.0
+    rr, ri = apply_exponents(sr, si, exp)
+    np.testing.assert_array_equal(np.asarray(rr), xr)
+    np.testing.assert_array_equal(np.asarray(ri), xi)
+    # quantizing the scaled mantissas to f16 bounds the error per LINE
+    qr = np.asarray(sr).astype(np.float16).astype(np.float32)
+    qi = np.asarray(si).astype(np.float16).astype(np.float32)
+    qrr, qri = apply_exponents(jnp.asarray(qr), jnp.asarray(qi), exp)
+    red = 1 if axis == 1 else 0
+    amax = np.maximum(np.abs(xr).max(axis=red, keepdims=True),
+                      np.abs(xi).max(axis=red, keepdims=True))
+    bound = amax * 2.0 ** -10
+    assert np.all(np.abs(np.asarray(qrr) - xr) <= bound)
+    assert np.all(np.abs(np.asarray(qri) - xi) <= bound)
+
+
 @settings(max_examples=15, deadline=None)
 @given(shape=shapes, seed=st.integers(0, 2**31 - 1))
 def test_fused_equals_composed(shape, seed):

@@ -2,6 +2,7 @@
 backpressure, the precision SNR gate, the streaming route, metrics
 artifacts, and sharded-backend parity."""
 import asyncio
+import functools
 import os
 import subprocess
 import sys
@@ -59,7 +60,7 @@ def test_coalesced_batch_bit_identical_to_per_request_run():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=4, max_delay_ms=500.0),
+            ServiceConfig(max_batch=4, max_delay_ms=500.0, precision=None),
             backend=fast_backend())
         await svc.start()
         outs = await asyncio.gather(
@@ -84,7 +85,7 @@ def test_partial_batch_pads_to_bucket_bit_identical():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=3, max_delay_ms=500.0),
+            ServiceConfig(max_batch=3, max_delay_ms=500.0, precision=None),
             backend=fast_backend())
         await svc.start()
         outs = await asyncio.gather(*[svc.focus(raw, CFG) for _ in range(3)])
@@ -104,7 +105,7 @@ def test_deadline_flush_fires_for_partial_batch():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=8, max_delay_ms=50.0),
+            ServiceConfig(max_batch=8, max_delay_ms=50.0, precision=None),
             backend=fast_backend())
         await svc.start()
         t0 = time.monotonic()
@@ -126,7 +127,7 @@ def test_requests_with_different_keys_do_not_coalesce():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=4, max_delay_ms=50.0),
+            ServiceConfig(max_batch=4, max_delay_ms=50.0, precision=None),
             backend=fast_backend())
         await svc.start()
         a, b = await asyncio.gather(
@@ -170,7 +171,8 @@ def test_backpressure_rejects_past_queue_bound():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=1, max_queue=2), backend=backend)
+            ServiceConfig(max_batch=1, max_queue=2, precision=None),
+            backend=backend)
         await svc.start()
         t1 = asyncio.ensure_future(svc.focus(raw, CFG))
         await asyncio.sleep(0.1)        # batch 1 now executing (blocked)
@@ -219,20 +221,50 @@ def test_snr_gate_rejects_out_of_gate_precision():
 
 
 def test_f32_requests_never_consult_the_gate():
+    """The verification path — precision=None default tier disabled, or
+    an explicit 'f32' request — must never trigger a gate measurement."""
     raw = scene()
 
     def boom(p):
         raise AssertionError("gate consulted for f32")
 
     async def main():
-        svc = FocusService(ServiceConfig(max_batch=1),
+        svc = FocusService(ServiceConfig(max_batch=1, precision=None),
                            backend=fast_backend(), precision_deviation=boom)
         await svc.start()
-        out = await svc.focus(raw, CFG)
+        a = await svc.focus(raw, CFG)
+        b = await svc.focus(raw, CFG, precision="f32")
         await svc.stop()
-        return out
+        return a, b
 
-    assert np.array_equal(asyncio.run(main()), reference())
+    a, b = asyncio.run(main())
+    ref = reference()
+    assert np.array_equal(a, ref)
+    assert np.array_equal(b, ref)
+
+
+def test_default_serving_tier_is_bs16():
+    """Out of the box the service serves the block-scaled throughput
+    tier: an un-annotated request resolves to ServiceConfig.precision
+    ('bs16') — still gated — and an explicit precision='f32' request
+    takes the full-precision verification path. Both ride the fused1
+    route, so each must equal its per-axis fused3 reference bit-exact."""
+    raw = scene()
+
+    async def main():
+        svc = FocusService(ServiceConfig(max_batch=1),
+                           backend=fast_backend(),
+                           precision_deviation=lambda p: 0.05)
+        await svc.start()
+        tier = await svc.focus(raw, CFG)
+        verify = await svc.focus(raw, CFG, precision="f32")
+        await svc.stop()
+        return tier, verify
+
+    tier, verify = asyncio.run(main())
+    assert np.array_equal(tier, reference(precision="bs16"))
+    assert np.array_equal(verify, reference())
+    assert not np.array_equal(tier, verify)
 
 
 def test_service_restarts_after_stop():
@@ -241,7 +273,7 @@ def test_service_restarts_after_stop():
     raw = scene()
 
     async def main():
-        svc = FocusService(ServiceConfig(max_batch=1),
+        svc = FocusService(ServiceConfig(max_batch=1, precision=None),
                            backend=fast_backend())
         await svc.start()
         a = await svc.focus(raw, CFG)
@@ -261,7 +293,7 @@ def test_focus_rejected_when_service_not_running():
     raw = scene()
 
     async def main():
-        svc = FocusService(ServiceConfig(max_batch=1),
+        svc = FocusService(ServiceConfig(max_batch=1, precision=None),
                            backend=fast_backend())
         with pytest.raises(RuntimeError, match="not running"):
             await svc.focus(raw, CFG)          # never started
@@ -289,6 +321,34 @@ def test_halo_schedule_rejects_unsupported_options():
 
 
 # ---------------------------------------------------------------------------
+# Route invisibility
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _per_axis_reference(precision):
+    kw = {} if precision is None else {"precision": precision}
+    return np.asarray(build_pipeline(CFG, "fused3", **kw).run(
+        jnp.asarray(scene())))
+
+
+@pytest.mark.parametrize("precision", [None, "bf16", "f16", "bs16"])
+@pytest.mark.parametrize("sharded", ["auto", "off"])
+@pytest.mark.parametrize("fused1", ["auto", "off"])
+def test_route_invisibility_matrix(fused1, sharded, precision):
+    """Serving output must be IDENTICAL whichever route the backend
+    picks: fused1 megakernel vs three per-axis dispatches, sharded twin
+    enabled or pinned off, at every precision — bs16 included, whose
+    per-line exponents are carried through the in-kernel corner turns
+    precisely so this matrix holds bit-for-bit."""
+    from repro.service.queue import BatchKey
+    raw = np.asarray(scene(), np.complex64)[None]
+    backend = LocalBackend(sweep=((None, None),), fused1=fused1,
+                           sharded=sharded)
+    out = backend.execute(BatchKey(CFG, "fused3", precision, False), raw)
+    np.testing.assert_array_equal(out[0], _per_axis_reference(precision))
+
+
+# ---------------------------------------------------------------------------
 # Streaming route
 # ---------------------------------------------------------------------------
 
@@ -298,7 +358,7 @@ def test_over_budget_scene_takes_streaming_route():
 
     async def main():
         svc = FocusService(
-            ServiceConfig(max_batch=4, max_delay_ms=200.0,
+            ServiceConfig(max_batch=4, max_delay_ms=200.0, precision=None,
                           device_budget_bytes=raw.nbytes - 1),
             backend=fast_backend())
         await svc.start()
@@ -321,7 +381,8 @@ def test_service_metrics_emit_valid_schema2_bench_doc(tmp_path):
     raw = scene()
 
     async def main():
-        svc = FocusService(ServiceConfig(max_batch=2, max_delay_ms=100.0),
+        svc = FocusService(ServiceConfig(max_batch=2, max_delay_ms=100.0,
+                                         precision=None),
                            backend=fast_backend())
         await svc.start()
         await asyncio.gather(svc.focus(raw, CFG), svc.focus(raw, CFG))
@@ -367,7 +428,7 @@ def test_sharded_backend_reachable_and_matches_local():
         mesh = jax.make_mesh((1,), ("data",))
         svc = FocusService(
             ServiceConfig(backend="sharded", max_batch=2,
-                          max_delay_ms=200.0),
+                          max_delay_ms=200.0, precision=None),
             backend=ShardedBackend(mesh=mesh))
         await svc.start()
         outs = await asyncio.gather(svc.focus(raw, CFG),
@@ -410,7 +471,8 @@ assert np.array_equal(gen, local), "generic lowering != local pipeline"
 
 async def serve(schedule, variant):
     svc = FocusService(
-        ServiceConfig(backend="sharded", max_batch=2, max_delay_ms=200.0),
+        ServiceConfig(backend="sharded", max_batch=2, max_delay_ms=200.0,
+                      precision=None),
         backend=ShardedBackend(mesh=mesh, schedule=schedule))
     await svc.start()
     outs = await asyncio.gather(svc.focus(raw, cfg, variant=variant),

@@ -79,6 +79,39 @@ def test_corner_turn_is_permutation_identity(b, na_blocks, nr_blocks, p,
     np.testing.assert_array_equal(_unshard(back, bpre + stream), x)
 
 
+@settings(max_examples=40, deadline=None)
+@given(na_blocks=st.integers(1, 6),
+       nr_blocks=st.integers(1, 6),
+       p=st.sampled_from([1, 2, 4, 8]),
+       stream=st.sampled_from([0, 1]))
+def test_carried_exponent_turn_is_pair_permutation(na_blocks, nr_blocks, p,
+                                                   stream):
+    """The bs16 carried-exponent corner turn is a pure permutation of
+    (value, exponent) pairs: the data slab rides all_to_all while its
+    per-line exponents ride all_gather along the OLD stream axis
+    (distributed.lower_pipeline). Applying each line's exponent before
+    the turn (per-shard exponent slices) and after it (gathered vector
+    broadcast over the now-full stream axis) must reassemble the same
+    image — no pair is split, scaled twice, or dropped."""
+    na, nr = p * na_blocks, p * nr_blocks
+    x = np.arange(na * nr, dtype=np.float64).reshape(na, nr) + 1.0
+    n_lines = na if stream == 0 else nr
+    e = np.arange(n_lines, dtype=np.float64) % 7 - 3   # per-line exponents
+    ecol = e.reshape(-1, 1) if stream == 0 else e.reshape(1, -1)
+    want = x * 2.0 ** ecol
+
+    slabs = _shard(x, stream, p)
+    eslabs = _shard(ecol, stream, p)
+    # before the turn each device holds its own lines' exponents
+    pre = [s * 2.0 ** es for s, es in zip(slabs, eslabs)]
+    np.testing.assert_array_equal(_unshard(pre, stream), want)
+    # the turn: data all_to_all, exponents all_gather (tiled concat)
+    turned = _np_all_to_all(slabs, 1 - stream, stream)
+    egather = _unshard(eslabs, stream)       # full vector on every device
+    post = [t * 2.0 ** egather for t in turned]
+    np.testing.assert_array_equal(_unshard(post, 1 - stream), want)
+
+
 # ---------------------------------------------------------------------------
 # Cost model: the collective-bytes terms
 # ---------------------------------------------------------------------------
