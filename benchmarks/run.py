@@ -7,10 +7,14 @@
 
 Every run also writes machine-readable BENCH_fft.json / BENCH_rda.json /
 BENCH_serve.json / BENCH_tuning.json / BENCH_sharded.json (wall-ms per
-variant/size/batch + git SHA + backend; BENCH_tuning records guided-search
-wall time and predicted-vs-measured rank quality; BENCH_sharded records the
-8-device sharded-megakernel dispatch/turn counts) so the perf trajectory is
-tracked across PRs; CI uploads them as workflow artifacts.
+variant/size/batch + git SHA + backend; BENCH_serve includes the
+seeded load-replay rows — goodput/deadline-miss/lane-occupancy of the
+continuous-batching worker pool vs the single-flight baseline, gated
+structurally by scripts/bench_compare.py --serve; BENCH_tuning records
+guided-search wall time and predicted-vs-measured rank quality;
+BENCH_sharded records the 8-device sharded-megakernel dispatch/turn
+counts) so the perf trajectory is tracked across PRs; CI uploads them as
+workflow artifacts.
 """
 from __future__ import annotations
 

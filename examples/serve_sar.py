@@ -1,9 +1,10 @@
-"""Serving quickstart: the async micro-batched SAR focusing service.
+"""Serving quickstart: the async continuous-batching SAR focusing service.
 
 Simulates a handful of clients firing concurrent focusing requests at a
-FocusService — mixed precisions, one over-budget scene streaming through
-host memory — then prints the service's latency/batching metrics. With
-more than one host device (e.g. XLA_FLAGS=--xla_force_host_platform_\
+FocusService — mixed precisions, some carrying deadlines (EDF-scheduled,
+dropped with RequestCancelled when they can no longer be met) — then
+prints the service's latency/batching/lane metrics. With more than one
+host device (e.g. XLA_FLAGS=--xla_force_host_platform_\
 device_count=8) pass --backend sharded to run the same requests through
 the shard_map corner-turn backend.
 
@@ -21,6 +22,7 @@ from repro.core.sar import paper_targets, simulate_cached
 from repro.core.sar.geometry import test_scene
 from repro.service import (
     FocusService,
+    RequestCancelled,
     ServiceConfig,
     ShardedBackend,
     SnrGateViolation,
@@ -38,7 +40,8 @@ async def main(args) -> None:
         ServiceConfig(
             variant=args.variant, backend=args.backend,
             max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
-            device_budget_bytes=args.budget_bytes),
+            device_budget_bytes=args.budget_bytes,
+            lanes=args.lanes),
         backend=backend)
 
     print(f"warming {args.variant} for {cfg.na}x{cfg.nr} scenes ...")
@@ -51,14 +54,23 @@ async def main(args) -> None:
         # quality harness is unavailable); every 4th request pins the
         # f32 verification path, which never consults the gate
         precision = "f32" if i % 4 == 3 else None
+        # every other request carries a deadline: buckets flush
+        # earliest-deadline-first, and a request still undispatched
+        # past its deadline is dropped without costing a kernel launch
+        deadline_ms = args.deadline_ms if i % 2 == 0 else None
         try:
             img = await svc.focus(raw * (1.0 + 0.1 * i), cfg,
-                                  precision=precision)
+                                  precision=precision,
+                                  deadline_ms=deadline_ms)
         except SnrGateViolation as e:
             print(f"  request {i}: rejected by SNR gate ({e})")
             return None
+        except RequestCancelled as e:
+            print(f"  request {i}: dropped ({e})")
+            return None
         print(f"  request {i}: focused, peak={float(np.abs(img).max()):.1f}"
-              f" precision={precision or svc.config.precision or 'f32'}")
+              f" precision={precision or svc.config.precision or 'f32'}"
+              + (f" deadline_ms={deadline_ms:g}" if deadline_ms else ""))
         return img
 
     await asyncio.gather(*[client(i) for i in range(args.requests)])
@@ -67,8 +79,10 @@ async def main(args) -> None:
     snap = svc.metrics.snapshot()
     print("\nservice metrics:")
     for k in ("completed", "rejected", "gate_rejected", "streamed",
+              "cancelled", "deadline_met", "deadline_miss_rate",
               "latency_p50_ms", "latency_p99_ms", "throughput_rps",
-              "mean_batch_size", "batch_size_hist", "queue_depth_max"):
+              "goodput_rps", "mean_batch_size", "batch_size_hist",
+              "batch_fill_hist", "lane_occupancy", "queue_depth_max"):
         print(f"  {k:18} {snap[k]}")
     if args.bench_json:
         svc.metrics.write_bench_json(args.bench_json)
@@ -86,6 +100,10 @@ if __name__ == "__main__":
                     choices=["corner2", "halo"])
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-delay-ms", type=float, default=10.0)
+    ap.add_argument("--lanes", type=int, default=2,
+                    help="worker-pool batch lanes (plus one stream lane)")
+    ap.add_argument("--deadline-ms", type=float, default=30_000.0,
+                    help="deadline attached to every other request")
     ap.add_argument("--budget-bytes", type=int, default=None,
                     help="device-memory budget; larger scenes stream")
     ap.add_argument("--bench-json", default=None,

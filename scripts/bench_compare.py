@@ -250,12 +250,58 @@ def compare_serve(base: dict, fresh: dict,
     must not grow versus the committed baseline. The throughput-tier
     rows themselves (``serve_tier_{f32,bs16}_burst_*``) must exist —
     a PR that silently drops the tier family fails — but their wall
-    numbers are informational."""
+    numbers are informational.
+
+    The load-replay family (``serve_load_*``) is gated STRUCTURALLY the
+    same way: the seeded burst-replay rows and the
+    ``serve_load_goodput_gain`` row must exist, and on the deterministic
+    ``serve_load_smoke`` row the worker-pool lane count must not shrink
+    and the deadline-miss rate (exactly 0 at smoke load by construction
+    — generous deadlines) must not grow versus the committed baseline.
+    Goodput/latency wall numbers stay informational."""
     base_by_name = {r["name"]: r for r in base.get("rows", [])}
     failures: list[str] = []
-    gates = tiers = 0
+    gates = tiers = loads = 0
+    have_gain_row = False
     for row in sorted(fresh.get("rows", []), key=lambda r: r["name"]):
-        if row["name"].startswith("serve_tier_gate_"):
+        if row["name"] == "serve_load_smoke":
+            loads += 1
+            d = _derived(row)
+            old = base_by_name.get(row["name"])
+            od = _derived(old) if old is not None else {}
+            lanes, miss = d.get("lanes"), d.get("deadline_miss_rate")
+            if lanes is None or miss is None:
+                failures.append(f"{row['name']}: lanes/deadline_miss_rate "
+                                "missing from derived fields")
+                continue
+            if od.get("lanes") is not None and int(lanes) < int(od["lanes"]):
+                failures.append(
+                    f"{row['name']}: lane count shrank "
+                    f"{od['lanes']} -> {lanes} (worker pool lost lanes)")
+            ob_miss = od.get("deadline_miss_rate")
+            if ob_miss is not None and \
+                    float(miss) > float(ob_miss) + epsilon:
+                failures.append(
+                    f"{row['name']}: deadline_miss_rate grew "
+                    f"{ob_miss} -> {miss} at smoke load (deterministic "
+                    "by construction — a real scheduling regression)")
+            if not any(f.startswith(row["name"]) for f in failures):
+                print(f"  {row['name']}: lanes={lanes} "
+                      f"deadline_miss_rate={miss} "
+                      f"(baseline lanes={od.get('lanes')}, "
+                      f"miss={ob_miss}) OK")
+        elif row["name"] == "serve_load_goodput_gain":
+            loads += 1
+            have_gain_row = True
+            d = _derived(row)
+            print(f"  {row['name']}: "
+                  f"{d.get('gain_vs_single_flight')} vs bar "
+                  f"{d.get('bar')} (informational)")
+        elif row["name"].startswith("serve_load_"):
+            loads += 1
+            print(f"  {row['name']}: wall_ms={row['wall_ms']:.2f} "
+                  f"(informational)")
+        elif row["name"].startswith("serve_tier_gate_"):
             gates += 1
             d = _derived(row)
             dev, gate = d.get("snr_deviation_db"), d.get("gate_db")
@@ -289,7 +335,14 @@ def compare_serve(base: dict, fresh: dict,
     if tiers == 0:
         failures.append("no serve_tier_* throughput rows in the fresh "
                         "artifact — the precision-tier family is gone")
-    print(f"# serve ratchet compared {gates} gate rows, {tiers} tier rows")
+    if loads == 0:
+        failures.append("no serve_load_* rows in the fresh artifact — "
+                        "the load-replay family is gone")
+    elif not have_gain_row:
+        failures.append("serve_load_goodput_gain row missing from the "
+                        "fresh artifact")
+    print(f"# serve ratchet compared {gates} gate rows, {tiers} tier rows, "
+          f"{loads} load-replay rows")
     return failures
 
 
@@ -322,10 +375,12 @@ def main() -> int:
                          "baseline_sharded.json): gate dispatch and "
                          "collective-turn counts, not wall time")
     ap.add_argument("--serve", action="store_true",
-                    help="ratchet the table_6 serving-tier artifact "
+                    help="ratchet the table_6 serving artifact "
                          "(BENCH_serve.json vs benchmarks/"
                          "baseline_serve.json): gate the bs16 tier's "
-                         "SNR deviation, not wall time")
+                         "SNR deviation and the load-replay structure "
+                         "(lane count, smoke deadline-miss rate), not "
+                         "wall time")
     args = ap.parse_args()
 
     from benchmarks.common import validate_bench_doc

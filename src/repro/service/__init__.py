@@ -2,16 +2,20 @@
 
 An asyncio request front end that coalesces same-(SceneConfig, variant,
 Precision) requests into (B, na, nr) micro-batches under a
-deadline/max-batch policy, executes them through warm per-plan caches on
-a pluggable backend (single-device `local`, or `sharded` shard_map
-corner-turn slabs), streams over-budget scenes, enforces a per-request
-precision SNR gate, applies admission backpressure, and emits
-latency/throughput/queue-depth metrics in the BENCH_*.json format.
+deadline/max-batch policy, hands each batch off to a worker pool of
+executor lanes (continuous batching: batch k+1 coalesces and pads while
+batch k computes; over-budget scenes stream on a dedicated lane),
+schedules flushes earliest-deadline first with pre-dispatch cancellation
+of past-deadline work, executes through warm per-plan caches on a
+pluggable backend (single-device `local`, or `sharded` shard_map
+corner-turn slabs), enforces a per-request precision SNR gate, applies
+admission backpressure with deadline-aware shedding, and emits
+latency/goodput/lane-occupancy metrics in the BENCH_*.json format.
 
     from repro.service import FocusService, ServiceConfig
     svc = FocusService(ServiceConfig(max_batch=4, max_delay_ms=5.0))
     await svc.start(warm=[(cfg, "fused3", None)])
-    image = await svc.focus(raw, cfg)
+    image = await svc.focus(raw, cfg, deadline_ms=250.0)
 
 See docs/serving.md for the request lifecycle and policy semantics.
 """
@@ -26,6 +30,7 @@ from repro.service.metrics import ServiceMetrics  # noqa: F401
 from repro.service.queue import (  # noqa: F401
     BatchKey,
     FocusRequest,
+    RequestCancelled,
     RequestQueue,
     ServiceOverloaded,
     SnrGateViolation,
@@ -33,4 +38,8 @@ from repro.service.queue import (  # noqa: F401
 from repro.service.service import (  # noqa: F401
     FocusService,
     ServiceConfig,
+)
+from repro.service.workers import (  # noqa: F401
+    Lane,
+    WorkerPool,
 )

@@ -2,14 +2,17 @@
 emitted in the repo's BENCH_*.json (schema 2) artifact format.
 
 The service records per-request latency (admission -> future resolved),
-per-batch wall time and size, queue-depth samples, and rejection counts.
-`to_bench_doc()` renders the snapshot as the same schema-2 document
-benchmarks/common.write_bench_json produces (git SHA, backend, ISO-8601
-UTC timestamp, rows of name/wall_ms/derived), so serving metrics diff and
-upload exactly like the paper-table benchmarks. The writer here is
-self-contained — `repro.service` must not depend on the benchmarks
-package being importable in production — but tests assert the documents
-validate against benchmarks.common.validate_bench_doc.
+deadline outcomes (met / missed-but-served / dropped), per-batch wall
+time, size, FILL FRACTION (batch size over the max_batch the scheduler
+aimed for), the lane each batch ran on, per-lane occupancy, queue-depth
+samples, and every rejection class (backpressure, SNR gate, overload
+shed, client cancel). `to_bench_doc()` renders the snapshot as the same
+schema-2 document benchmarks/common.write_bench_json produces (git SHA,
+backend, ISO-8601 UTC timestamp, rows of name/wall_ms/derived), so
+serving metrics diff and upload exactly like the paper-table benchmarks.
+The writer here is self-contained — `repro.service` must not depend on
+the benchmarks package being importable in production — but tests assert
+the documents validate against benchmarks.common.validate_bench_doc.
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ import subprocess
 import sys
 import time
 from collections import Counter
-from typing import List
+from typing import Dict, List, Optional
 
 BENCH_SCHEMA = 2
 _RESERVOIR_MAX = 100_000
@@ -60,12 +63,22 @@ class ServiceMetrics:
         self.completed = 0
         self.rejected = 0            # backpressure rejections
         self.gate_rejected = 0       # SNR-gate rejections
+        self.shed = 0                # latest-deadline work shed at overload
+        self.cancelled = 0           # dropped before dispatch (client
+                                     # cancel or past-deadline sweep)
+        self.deadline_dropped = 0    # subset of cancelled: deadline sweep
+        self.deadline_missed = 0     # served, but after t_deadline
+        self.deadline_met = 0        # served within t_deadline
         self.failed = 0
         self.streamed = 0
         self.latencies_ms: List[float] = []
         self.batch_sizes: Counter = Counter()
+        self.batch_fill: Counter = Counter()     # fill fraction histogram
         self.batch_wall_ms: List[float] = []
         self.depth_samples: List[int] = []
+        self.lane_batches: Counter = Counter()   # batches per lane
+        self.lane_busy_ms: Counter = Counter()   # device-thread ms per lane
+        self._lane_occupancy: Dict[str, float] = {}
 
     # -- recording ----------------------------------------------------------
     def observe_submit(self, depth: int) -> None:
@@ -78,34 +91,76 @@ class ServiceMetrics:
     def observe_gate_reject(self) -> None:
         self.gate_rejected += 1
 
+    def observe_shed(self) -> None:
+        self.shed += 1
+
+    def observe_cancelled(self, reason: str = "client_cancelled") -> None:
+        self.cancelled += 1
+        if reason == "deadline":
+            self.deadline_dropped += 1
+
     def observe_batch(self, size: int, wall_ms: float,
-                      streamed: bool = False) -> None:
+                      streamed: bool = False,
+                      lane: Optional[str] = None,
+                      max_batch: Optional[int] = None) -> None:
         self.batch_sizes[size] += 1
         self.batch_wall_ms.append(wall_ms)
         if streamed:
             self.streamed += size
+        if lane is not None:
+            self.lane_batches[lane] += 1
+            self.lane_busy_ms[lane] += wall_ms
+        if max_batch:
+            # fill fraction quantized to max_batch-ths: the histogram key
+            # is exact (no float binning), e.g. "3/4"
+            self.batch_fill[f"{min(size, max_batch)}/{max_batch}"] += 1
 
-    def observe_done(self, latency_ms: float) -> None:
+    def observe_done(self, latency_ms: float,
+                     deadline_met: Optional[bool] = None) -> None:
         self.completed += 1
+        if deadline_met is True:
+            self.deadline_met += 1
+        elif deadline_met is False:
+            self.deadline_missed += 1
         if len(self.latencies_ms) < _RESERVOIR_MAX:
             self.latencies_ms.append(latency_ms)
 
     def observe_failure(self) -> None:
         self.failed += 1
 
+    def set_lane_occupancy(self, occupancy: Dict[str, float]) -> None:
+        """Latest per-lane busy fraction (WorkerPool.occupancy())."""
+        self._lane_occupancy = dict(occupancy)
+
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> dict:
         elapsed = max(time.monotonic() - self.t_start, 1e-9)
         n_batches = sum(self.batch_sizes.values())
         coalesced = sum(k * v for k, v in self.batch_sizes.items())
+        deadlined = (self.deadline_met + self.deadline_missed
+                     + self.deadline_dropped)
         return {
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
             "gate_rejected": self.gate_rejected,
+            "shed": self.shed,
+            "cancelled": self.cancelled,
+            "deadline_dropped": self.deadline_dropped,
+            "deadline_missed": self.deadline_missed,
+            "deadline_met": self.deadline_met,
+            # misses + drops over every deadline-carrying outcome (0.0
+            # when no request carried a deadline)
+            "deadline_miss_rate": (
+                (self.deadline_missed + self.deadline_dropped) / deadlined
+                if deadlined else 0.0),
             "failed": self.failed,
             "streamed": self.streamed,
             "throughput_rps": self.completed / elapsed,
+            # goodput: completions that met their deadline per second;
+            # requests without a deadline always count as good
+            "goodput_rps": (self.completed - self.deadline_missed)
+            / elapsed,
             "latency_p50_ms": percentile(self.latencies_ms, 50),
             "latency_p99_ms": percentile(self.latencies_ms, 99),
             "latency_mean_ms": (sum(self.latencies_ms) /
@@ -113,6 +168,9 @@ class ServiceMetrics:
                                 if self.latencies_ms else 0.0),
             "mean_batch_size": coalesced / n_batches if n_batches else 0.0,
             "batch_size_hist": dict(sorted(self.batch_sizes.items())),
+            "batch_fill_hist": dict(sorted(self.batch_fill.items())),
+            "lane_batches": dict(sorted(self.lane_batches.items())),
+            "lane_occupancy": dict(sorted(self._lane_occupancy.items())),
             "queue_depth_max": max(self.depth_samples, default=0),
         }
 
@@ -128,9 +186,13 @@ class ServiceMetrics:
             "section": section, "name": "throughput",
             "wall_ms": 0.0,
             "derived": f"rps={s['throughput_rps']:.2f};"
+                       f"goodput_rps={s['goodput_rps']:.2f};"
                        f"completed={s['completed']};"
                        f"rejected={s['rejected']};"
                        f"gate_rejected={s['gate_rejected']};"
+                       f"shed={s['shed']};"
+                       f"cancelled={s['cancelled']};"
+                       f"deadline_miss_rate={s['deadline_miss_rate']:.4f};"
                        f"streamed={s['streamed']}",
         })
         rows.append({
@@ -138,7 +200,18 @@ class ServiceMetrics:
             "wall_ms": 0.0,
             "derived": f"mean_batch={s['mean_batch_size']:.2f};"
                        f"hist={s['batch_size_hist']};"
+                       f"fill_hist={s['batch_fill_hist']};"
                        f"queue_depth_max={s['queue_depth_max']}",
+        })
+        occ = ";".join(f"occ_{name}={frac:.4f}"
+                       for name, frac in s["lane_occupancy"].items())
+        per_lane = ";".join(f"batches_{name}={n}"
+                            for name, n in s["lane_batches"].items())
+        rows.append({
+            "section": section, "name": "lanes",
+            "wall_ms": 0.0,
+            "derived": ";".join(p for p in (
+                f"lanes={len(s['lane_occupancy'])}", occ, per_lane) if p),
         })
         return rows
 

@@ -1,4 +1,4 @@
-"""FocusService — the async micro-batched SAR focusing front end.
+"""FocusService — the async continuous-batching SAR focusing front end.
 
 Request lifecycle (docs/serving.md has the full walkthrough):
 
@@ -6,14 +6,23 @@ Request lifecycle (docs/serving.md has the full walkthrough):
    precision whose measured deviation exceeds ``snr_gate_db`` is rejected
    before it costs a dispatch), sizes the scene against the device-memory
    budget (oversized scenes take the streaming route), and enqueues into
-   the bounded request queue — or raises :class:`ServiceOverloaded`.
+   the bounded request queue. At the bound, the service first tries to
+   SHED the latest-deadline pending request (its future raises
+   :class:`RequestCancelled`) to admit earlier-deadline work; only when
+   nothing pending is a worse candidate does the caller see
+   :class:`ServiceOverloaded` (which carries depth/bound/retry hint).
 2. **Coalescing** — the batcher buckets requests by
    ``(SceneConfig, variant, precision)`` and flushes at ``max_batch`` or
-   after ``max_delay_ms``, whichever first.
-3. **Execution** — the batch is stacked to ``(B, na, nr)`` and handed to
-   the backend (``local`` warm-cached jitted pipelines, or ``sharded``
-   shard_map corner-turn slabs) on an executor thread, so the event loop
-   keeps admitting (and coalescing) requests while the device computes.
+   after ``max_delay_ms``; flush-ready buckets go out in earliest-
+   deadline order, and client-cancelled or past-deadline requests are
+   dropped before the batch pads.
+3. **Dispatch** — the flush is a HAND-OFF: the batch acquires a slot on
+   a worker-pool lane (``fused<i>`` lanes for coalesced batches, the
+   ``stream`` lane for over-budget scenes; routing weighs lanes by the
+   roofline's predicted seconds) and runs as a background task, so the
+   batcher resumes draining immediately — batch k+1 coalesces and pads
+   on the event loop while batch k computes on a lane thread
+   (continuous batching; the per-lane in-flight cap is the backpressure).
 4. **Completion** — per-request futures resolve with each request's
    ``(na, nr)`` image; batching is a kernel-grid extension, so the
    coalesced image is bit-identical to an unbatched ``Pipeline.run``.
@@ -21,11 +30,10 @@ Request lifecycle (docs/serving.md has the full walkthrough):
 from __future__ import annotations
 
 import asyncio
-import concurrent.futures
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -36,11 +44,13 @@ from repro.service.metrics import ServiceMetrics
 from repro.service.queue import (
     BatchKey,
     FocusRequest,
+    RequestCancelled,
     RequestQueue,
     ServiceOverloaded,
     SnrGateViolation,
     now,
 )
+from repro.service.workers import Lane, WorkerPool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +67,18 @@ class ServiceConfig:
     backend: 'local' | 'sharded' (see repro.service.backends).
     max_batch: coalescing bound B — requests per micro-batch.
     max_delay_ms: deadline a lone request waits for batch company.
-    max_queue: admission bound; beyond it submits raise ServiceOverloaded.
+    max_queue: admission bound on the pre-dispatch backlog (queued +
+      bucketed requests); beyond it submits shed latest-deadline pending
+      work or raise ServiceOverloaded.
+    lanes: worker-pool fused-batch lanes (plus one dedicated stream
+      lane). Each lane is one executor thread; >1 overlaps host staging
+      and device compute across batches.
+    inflight_cap: in-flight batches per lane (2 = one on device + one
+      staged, double-buffered host staging). The batcher parks when the
+      routed lane is at its cap.
+    shed: at the admission bound, drop the latest-deadline pending
+      request (RequestCancelled) to admit an earlier-deadline arrival;
+      False restores reject-at-bound.
     snr_gate_db: per-request precision quality gate — a request asking
       for a precision whose measured point-target SNR deviation exceeds
       this raises SnrGateViolation at admission ("Range, Not Precision":
@@ -76,6 +97,9 @@ class ServiceConfig:
     max_batch: int = 4
     max_delay_ms: float = 5.0
     max_queue: int = 64
+    lanes: int = 2
+    inflight_cap: int = 2
+    shed: bool = True
     snr_gate_db: float = 0.1
     device_budget_bytes: Optional[int] = None
     stream_strips: int = 4
@@ -98,7 +122,8 @@ def _default_precision_deviation(precision: str) -> float:
 class FocusService:
     """Async front end over the SpectralPlan executor. Construct, then
     ``await start()`` (optionally with warm keys); submit via ``focus``;
-    ``await stop()`` drains and joins the batcher."""
+    ``await stop()`` drains and joins the batcher and every in-flight
+    lane task."""
 
     def __init__(self, config: ServiceConfig = ServiceConfig(),
                  backend=None, precision_deviation=None):
@@ -110,75 +135,80 @@ class FocusService:
                        if config.backend == "sharded"
                        else backends_mod.LocalBackend())
         self.backend = backend
-        self.batcher = MicroBatcher(self.queue, self._execute,
+        self.batcher = MicroBatcher(self.queue, self._dispatch,
                                     max_batch=config.max_batch,
-                                    max_delay_ms=config.max_delay_ms)
+                                    max_delay_ms=config.max_delay_ms,
+                                    on_drop=self._on_drop)
         self._precision_deviation = (precision_deviation
                                      or _default_precision_deviation)
         self._gate_cache: Dict[str, float] = {}
         self._task: Optional[asyncio.Task] = None
-        # ONE worker for all device work (warm, batches, gate
-        # measurements): it keeps the event loop free without ever
-        # running two jax computations concurrently — the quality
-        # harness toggles the process-global x64 flag (compat.enable_x64
-        # in simulate()), which would corrupt a batch executing on
-        # another thread. Recreated by start() after a stop().
-        self._executor: Optional[
-            concurrent.futures.ThreadPoolExecutor] = None
+        # The worker pool owns EVERY device-work thread (batches,
+        # streams, warms, gate measurements). Batches run under the
+        # shared side of the pool's gate lock, gate measurements under
+        # the exclusive side — the quality harness toggles the
+        # process-global x64 flag (compat.enable_x64 in simulate()),
+        # which would corrupt a batch executing concurrently on another
+        # lane. Lanes are (re)started by start() after a stop().
+        self.pool = WorkerPool(lanes=config.lanes,
+                               inflight_cap=config.inflight_cap)
+        self._inflight_tasks: Set[asyncio.Task] = set()
 
     # -- lifecycle ----------------------------------------------------------
     async def start(self, warm: Sequence[Tuple[SceneConfig, str,
                                                Optional[str]]] = ()) -> None:
-        """Spawn the batcher task; pre-warm backend caches for each
-        (scene, variant, precision) triple so the first real requests pay
-        no compile/trace/filter cost."""
-        loop = asyncio.get_running_loop()
-        if self._executor is None:
-            self._executor = concurrent.futures.ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="focus-device")
+        """Spawn the lanes and the batcher task; pre-warm backend caches
+        for each (scene, variant, precision) triple so the first real
+        requests pay no compile/trace/filter cost."""
+        if not self.pool.started:
+            self.pool.start()
         for scene, variant, precision in warm:
             key = BatchKey(scene, variant, precision, False)
-            await loop.run_in_executor(
-                self._executor, lambda k=key: self.backend.warm(
-                    k, self.config.max_batch))
+            await self.pool.run_exclusive(
+                self.backend.warm, key, self.config.max_batch)
         self._task = asyncio.create_task(self.batcher.run())
 
     async def stop(self) -> None:
-        """Flush pending batches and join the batcher task. Requests that
-        raced admission behind the shutdown sentinel are failed (their
-        futures raise) rather than left pending forever."""
+        """Flush pending batches (earliest-deadline first), join the
+        batcher, await every in-flight lane task, and fail requests that
+        raced admission behind the shutdown sentinel (their futures
+        raise) rather than leaving them pending forever."""
         if self._task is not None:
             self.queue.put_stop()
             await self._task
             self._task = None
+        # the batcher has joined, so no new dispatches: one gather over
+        # the snapshot covers every in-flight lane task
+        tasks = list(self._inflight_tasks)
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+        self._inflight_tasks.clear()
         for req in self.queue.drain_nowait():
             if not req.future.done():
                 req.future.set_exception(
                     RuntimeError("service stopped before execution"))
             self.metrics.observe_failure()
-        if self._executor is not None:
-            self._executor.shutdown(wait=True)
-            self._executor = None        # start() makes a fresh one
+        self.metrics.set_lane_occupancy(self.pool.occupancy())
+        self.pool.shutdown()                 # start() re-creates the lanes
 
     # -- admission ----------------------------------------------------------
     async def _ensure_gate_measured(self, precision: Optional[str]) -> None:
         """Populate the gate cache for ``precision`` off the event loop:
         the first measurement focuses a full quality scene (seconds in
         interpret mode), which must not stall the batcher's deadlines or
-        concurrent admissions. It runs on the service's single device
-        executor, serialized against batch execution (the measurement
-        toggles global jax config). Cached checks stay synchronous."""
+        concurrent admissions. It runs under the worker pool's EXCLUSIVE
+        lock, serialized against every lane (the measurement toggles
+        global jax config). Cached checks stay synchronous."""
         if precision in (None, "f32") or precision in self._gate_cache:
             return
-        loop = asyncio.get_running_loop()
-        dev = await loop.run_in_executor(
-            self._executor, self._precision_deviation, precision)
+        dev = await self.pool.run_exclusive(
+            self._precision_deviation, precision)
         self._gate_cache[precision] = float(dev)
 
     def _check_gate(self, precision: Optional[str]) -> None:
         """Lookup-only: admission must await _ensure_gate_measured first.
         Measuring here would put a multi-second jax computation on the
-        event-loop thread, outside the serialized device executor."""
+        event-loop thread, outside the exclusive lock."""
         if precision in (None, "f32"):
             return
         if precision not in self._gate_cache:
@@ -193,9 +223,31 @@ class FocusService:
                 f"{dev:.3f} dB exceeds the {self.config.snr_gate_db} dB "
                 "gate")
 
+    def _admit(self, req: FocusRequest) -> None:
+        """Enqueue, shedding latest-deadline pending work at the bound
+        when the arrival's deadline is earlier (EDF admission)."""
+        try:
+            self.queue.put(req, extra=self.batcher.pending_count())
+        except ServiceOverloaded:
+            victim = (self.batcher.shed_latest(req.t_deadline, req.priority)
+                      if self.config.shed else None)
+            if victim is None:
+                self.metrics.observe_reject()
+                raise
+            if not victim.future.done():
+                victim.future.set_exception(RequestCancelled(
+                    "shed under overload: this request's deadline "
+                    f"({'none' if victim.deadline_ms is None else f'{victim.deadline_ms:g} ms'}) "
+                    "is the latest in the backlog and an earlier-deadline "
+                    "request arrived at the admission bound"))
+            self.metrics.observe_shed()
+            self.queue.put(req, extra=self.batcher.pending_count())
+
     async def focus(self, raw, scene: SceneConfig,
                     variant: Optional[str] = None,
-                    precision: Optional[str] = None) -> np.ndarray:
+                    precision: Optional[str] = None,
+                    deadline_ms: Optional[float] = None,
+                    priority: int = 0) -> np.ndarray:
         """Submit one scene; resolves to its focused (na, nr) image.
 
         ``precision=None`` takes the service's default tier
@@ -204,14 +256,25 @@ class FocusService:
         or per-request — is what the SNR gate checks and what the batcher
         coalesces on.
 
-        Raises SnrGateViolation (quality gate) or ServiceOverloaded
-        (queue at bound) at admission — both BEFORE any device work —
-        and RuntimeError when the service is not running (not started,
-        stopped, or the batcher task died)."""
+        ``deadline_ms`` is the completion deadline relative to
+        submission: buckets flush earliest-deadline first, a request
+        still pending past its deadline is dropped before padding
+        (raises RequestCancelled), and under overload the latest-deadline
+        pending request is shed to admit earlier-deadline work.
+        ``priority`` breaks deadline ties (higher wins). A request
+        without a deadline is never dropped, but is the first shed.
+
+        Raises SnrGateViolation (quality gate), ServiceOverloaded
+        (backlog at bound, nothing sheddable), or RequestCancelled
+        (dropped by deadline or shed) — the first two BEFORE any device
+        work — and RuntimeError when the service is not running (not
+        started, stopped, or the batcher task died)."""
         if self._task is None or self._task.done():
             raise RuntimeError(
                 "service is not running (call start() first; submissions "
                 "after stop() are rejected)")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         if precision is None:
             precision = self.config.precision
         await self._ensure_gate_measured(precision)
@@ -226,41 +289,69 @@ class FocusService:
         req = FocusRequest(
             raw=raw, scene=scene, variant=variant or self.config.variant,
             precision=precision, future=loop.create_future(),
-            t_submit=now(), stream=stream)
-        try:
-            self.queue.put(req)
-        except ServiceOverloaded:
-            self.metrics.observe_reject()
-            raise
+            t_submit=now(), stream=stream, deadline_ms=deadline_ms,
+            priority=priority)
+        self._admit(req)
         self.metrics.observe_submit(self.queue.depth()
                                     + self.batcher.pending_count())
         return await req.future
 
-    # -- execution (called by the batcher) ----------------------------------
-    async def _execute(self, key: BatchKey, reqs: List[FocusRequest]) -> None:
-        loop = asyncio.get_running_loop()
+    # -- dispatch (called by the batcher) ------------------------------------
+    def _on_drop(self, req: FocusRequest, reason: str) -> None:
+        self.metrics.observe_cancelled(reason)
+
+    async def _dispatch(self, key: BatchKey, reqs: List[FocusRequest]) -> None:
+        """The batcher's hand-off: route to a lane, take an in-flight
+        slot (parking here is the in-flight-cap backpressure), schedule
+        the device work as a background task, return immediately so the
+        batcher keeps draining while this batch runs."""
+        lane = self.pool.route(key)
+        predicted_s = self.pool.predicted_seconds(key, batch=len(reqs))
+        await lane.acquire(predicted_s)
+        task = asyncio.get_running_loop().create_task(
+            self._run_batch(lane, predicted_s, key, reqs))
+        self._inflight_tasks.add(task)
+        task.add_done_callback(self._inflight_tasks.discard)
+
+    async def _run_batch(self, lane: Lane, predicted_s: float,
+                         key: BatchKey, reqs: List[FocusRequest]) -> None:
         t0 = time.perf_counter()
+        busy_s = 0.0
         try:
-            if key.stream:
-                images = []
+            try:
+                if key.stream:
+                    images = []
+                    for r in reqs:
+                        img, secs = await self.pool.run_batch(
+                            lane, self.backend.execute_streamed,
+                            key, r.raw, self.config.stream_strips)
+                        busy_s += secs
+                        images.append(img)
+                else:
+                    # host staging happens HERE, on the event loop — while
+                    # other lanes' batches compute on their threads
+                    batch = np.stack([r.raw for r in reqs])
+                    images, busy_s = await self.pool.run_batch(
+                        lane, self.backend.execute, key, batch)
+            except Exception as e:
                 for r in reqs:
-                    images.append(await loop.run_in_executor(
-                        self._executor, self.backend.execute_streamed,
-                        key, r.raw, self.config.stream_strips))
-            else:
-                batch = np.stack([r.raw for r in reqs])
-                images = await loop.run_in_executor(
-                    self._executor, self.backend.execute, key, batch)
-        except Exception as e:
-            for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                    self.metrics.observe_failure()
+                return
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            self.metrics.observe_batch(
+                len(reqs), wall_ms, streamed=key.stream, lane=lane.name,
+                max_batch=None if key.stream else self.config.max_batch)
+            self.queue.note_service_time(wall_ms / 1e3 / len(reqs))
+            t_done = now()
+            for r, img in zip(reqs, images):
                 if not r.future.done():
-                    r.future.set_exception(e)
-                self.metrics.observe_failure()
-            return
-        wall_ms = (time.perf_counter() - t0) * 1e3
-        self.metrics.observe_batch(len(reqs), wall_ms, streamed=key.stream)
-        t_done = now()
-        for r, img in zip(reqs, images):
-            if not r.future.done():
-                r.future.set_result(np.asarray(img))
-            self.metrics.observe_done((t_done - r.t_submit) * 1e3)
+                    r.future.set_result(np.asarray(img))
+                self.metrics.observe_done(
+                    (t_done - r.t_submit) * 1e3,
+                    deadline_met=(None if r.deadline_ms is None
+                                  else t_done <= r.t_deadline))
+        finally:
+            lane.release(predicted_s, busy_s=busy_s)
+            self.metrics.set_lane_occupancy(self.pool.occupancy())

@@ -1,0 +1,228 @@
+"""Worker pool: N executor lanes over a serving backend.
+
+The pre-PR-9 service ran every batch on ONE executor thread, awaited
+inline by the batcher — the device idled while the next batch padded and
+uploaded, and the queue drained in lockstep with device completions
+(single-flight). The pool replaces that thread with **lanes**:
+
+* ``fused<i>`` lanes (``ServiceConfig.lanes`` of them) carry coalesced
+  in-memory micro-batches. Admission routes each
+  :class:`~repro.service.queue.BatchKey` to the lane with the least
+  predicted backlog, weighted by the roofline model's
+  :func:`repro.tuning.cost.serve_batch_seconds` — the same
+  predicted-seconds arithmetic that ranks kernel schedules prices lane
+  load, so a 1024² batch counts for more backlog than a 256² one.
+* the ``stream`` lane carries over-budget scenes (the
+  ``run_streamed`` / sharded-megakernel route) so a multi-second big
+  scene never heads-of-line-blocks the coalesced small-scene traffic.
+
+Each lane is one executor thread plus an asyncio semaphore of
+``inflight_cap`` slots (default 2: one batch on device, one staged —
+double-buffered host staging). The batcher's hand-off acquires a slot
+and returns; when a lane's slots are full the hand-off parks, which is
+the in-flight-cap backpressure that lets the queue backlog coalesce.
+
+Device-global serialization: the SNR-gate quality harness toggles the
+process-global x64 flag (compat.enable_x64 inside simulate()), which
+would corrupt any batch executing concurrently on another lane. Lanes
+therefore run batches under the read side of a reader-writer lock and
+gate measurements (plus warms) take the write side — many concurrent
+batches, never a batch concurrent with a global-config toggle.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.service.queue import BatchKey
+from repro import tuning
+
+
+class _RWLock:
+    """Minimal reader-writer lock: many readers (lane batches) or one
+    writer (gate measurement / warm), writer-preferring so a pending
+    exclusive task is not starved by a stream of batches."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if self._readers == 0:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
+class Lane:
+    """One executor lane: a device-work thread, an in-flight slot
+    semaphore, and occupancy/backlog accounting."""
+
+    def __init__(self, name: str, kind: str, inflight_cap: int):
+        if inflight_cap < 1:
+            raise ValueError("inflight_cap must be >= 1")
+        self.name = name
+        self.kind = kind                  # "batch" | "stream"
+        self.inflight_cap = inflight_cap
+        self.inflight = 0
+        self.backlog_s = 0.0              # predicted seconds in flight
+        self.busy_s = 0.0                 # measured device-thread seconds
+        self.batches = 0
+        self._sem: Optional[asyncio.Semaphore] = None
+        self._executor: Optional[
+            concurrent.futures.ThreadPoolExecutor] = None
+
+    def start(self) -> None:
+        """(Re)create the loop-bound semaphore and the executor thread —
+        called from the running event loop by WorkerPool.start()."""
+        self._sem = asyncio.Semaphore(self.inflight_cap)
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"lane-{self.name}")
+
+    def shutdown(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+        self._sem = None
+
+    async def acquire(self, predicted_s: float = 0.0) -> None:
+        """Take one in-flight slot (parks when the lane is at its cap —
+        the batcher's backpressure point)."""
+        await self._sem.acquire()
+        self.inflight += 1
+        self.backlog_s += predicted_s
+
+    def release(self, predicted_s: float = 0.0,
+                busy_s: float = 0.0) -> None:
+        self.inflight -= 1
+        self.backlog_s = max(0.0, self.backlog_s - predicted_s)
+        self.busy_s += busy_s
+        self.batches += 1
+        self._sem.release()
+
+
+class WorkerPool:
+    """Lane container + router. Owns every device-work thread of the
+    service (batches, streams, gate measurements, warms)."""
+
+    def __init__(self, lanes: int = 2, inflight_cap: int = 2):
+        if lanes < 1:
+            raise ValueError("worker pool needs at least one lane")
+        self.gate_lock = _RWLock()
+        self.batch_lanes: List[Lane] = [
+            Lane(f"fused{i}", "batch", inflight_cap)
+            for i in range(lanes)]
+        self.stream_lane = Lane("stream", "stream", inflight_cap)
+        self.lanes: List[Lane] = [*self.batch_lanes, self.stream_lane]
+        self._started = False
+        self.t_start = time.monotonic()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        """Create executors + loop-bound semaphores. Must run inside the
+        event loop the lanes will serve (semaphores bind to it)."""
+        for lane in self.lanes:
+            lane.start()
+        self.t_start = time.monotonic()
+        self._started = True
+
+    def shutdown(self) -> None:
+        for lane in self.lanes:
+            lane.shutdown()
+        self._started = False
+
+    @property
+    def started(self) -> bool:
+        return self._started
+
+    # -- routing ------------------------------------------------------------
+    def predicted_seconds(self, key: BatchKey, batch: int = 1) -> float:
+        """The roofline's price of one batch under this key — the lane
+        routing weight (tuning.cost.serve_batch_seconds)."""
+        return tuning.cost.serve_batch_seconds(
+            key.scene.na, key.scene.nr, batch=batch,
+            precision=key.precision, streamed=key.stream)
+
+    def route(self, key: BatchKey) -> Lane:
+        """Streamed (over-budget) keys go to the dedicated stream lane;
+        coalesced batches go to the least-backlogged fused lane by
+        predicted seconds (ties resolve to the lowest lane index, so
+        routing is deterministic)."""
+        if key.stream:
+            return self.stream_lane
+        return min(self.batch_lanes,
+                   key=lambda lane: (lane.backlog_s, lane.name))
+
+    # -- execution ----------------------------------------------------------
+    async def run_batch(self, lane: Lane, fn, *args):
+        """Await ``fn(*args)`` on the lane thread (shared lock held);
+        returns (result, seconds busy on the device thread)."""
+        t0 = time.perf_counter()
+        result = await asyncio.wrap_future(
+            lane._executor.submit(self._shared_call, fn, *args))
+        return result, time.perf_counter() - t0
+
+    def _shared_call(self, fn, *args):
+        self.gate_lock.acquire_read()
+        try:
+            return fn(*args)
+        finally:
+            self.gate_lock.release_read()
+
+    async def run_exclusive(self, fn, *args):
+        """Await ``fn(*args)`` on lane 0's thread under the EXCLUSIVE
+        side of the gate lock — for work that toggles process-global jax
+        config (the SNR-gate measurement) or mutates warm caches."""
+        return await asyncio.wrap_future(
+            self.batch_lanes[0]._executor.submit(
+                self._exclusive_call, fn, *args))
+
+    def _exclusive_call(self, fn, *args):
+        self.gate_lock.acquire_write()
+        try:
+            return fn(*args)
+        finally:
+            self.gate_lock.release_write()
+
+    # -- observability ------------------------------------------------------
+    def occupancy(self) -> Dict[str, float]:
+        """Per-lane busy fraction since start() — the metrics export."""
+        elapsed = max(time.monotonic() - self.t_start, 1e-9)
+        return {lane.name: min(1.0, lane.busy_s / elapsed)
+                for lane in self.lanes}
+
+    def snapshot(self) -> Dict[str, dict]:
+        return {lane.name: {
+            "kind": lane.kind,
+            "inflight": lane.inflight,
+            "inflight_cap": lane.inflight_cap,
+            "backlog_s": lane.backlog_s,
+            "busy_s": lane.busy_s,
+            "batches": lane.batches,
+        } for lane in self.lanes}

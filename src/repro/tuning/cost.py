@@ -527,6 +527,30 @@ def sharded_preferred(na: int, nr: int, batch: int = 1, devices: int = 1,
     return shard_s < local_s
 
 
+def serve_batch_seconds(na: int, nr: int, batch: int = 1,
+                        precision: Optional[str] = None,
+                        streamed: bool = False) -> float:
+    """Predicted seconds of ONE served micro-batch — the worker pool's
+    lane-routing weight (`repro.service.workers.WorkerPool.route`).
+
+    Prices the canonical azimuth->range->azimuth megakernel (the shape
+    every served RDA-family variant lowers to) with `schedule_seconds`,
+    at the residency the compiler would pick for the scene — pinned to
+    the scratch-staged tier for ``streamed`` keys, whose scenes are over
+    the device budget by definition. Relative ordering across keys is
+    the contract, exactly as for the kernel search: a 1024² batch must
+    weigh a lane's backlog more than a 256² one, by roughly the roofline
+    ratio."""
+    problem = ScheduleProblem.mega_2d(na, nr, _MEGA_SEGMENTS_2D,
+                                      batch=max(1, batch))
+    res = (RESIDENT_STAGED if streamed
+           else mega_residency(na, nr, precision=precision))
+    sched = Schedule(
+        segments=(SegmentConfig(),) * len(_MEGA_SEGMENTS_2D),
+        precision=precision, residency=res, phase_block=8, buffer_depth=2)
+    return schedule_seconds(sched, problem)
+
+
 def nominal_flops(key: TuneKey, fwd: bool = True, inv: bool = True,
                   filtered: bool = True) -> float:
     """The algorithmic 5 n log2 n count (fft4step._flops_per_line) for the
