@@ -35,6 +35,16 @@ rate. `serve_load_smoke` is the deterministic structural row
 bench_compare gates — lane count and deadline-miss rate at smoke load
 (generous deadlines: the miss rate is exactly 0 by construction) must
 not grow; wall-clock goodput itself is ungated like every timing here.
+
+The serve_chaos_* family replays the same seeded trace through a
+ChaosBackend injecting a deterministic fault schedule at three seams
+(dispatch error, silent NaN output, lane-thread death) and compares
+goodput against the fault-free replay. The gated invariants are
+structural: `serve_chaos_smoke` must report zero lost requests and all
+scheduled seams fired, and `serve_chaos_goodput_ratio` must stay at or
+above its bar — wall numbers are informational. `python -m
+benchmarks.bench_serve --chaos` runs just this family and exits non-zero
+on any violation (the CI chaos-smoke step).
 """
 from __future__ import annotations
 
@@ -50,10 +60,16 @@ from repro.core.sar import build_pipeline, paper_targets, simulate_cached
 from repro.core.sar.geometry import test_scene
 from repro.service import (
     BatchKey,
+    ChaosBackend,
+    FaultInjector,
     FocusService,
+    LaneStalled,
     LocalBackend,
+    OutputCorrupted,
     RequestCancelled,
     ServiceConfig,
+    SimulatedFailure,
+    seeded_schedule,
 )
 from repro.service.metrics import percentile
 
@@ -158,14 +174,16 @@ def _single_flight_replay(trace, service_time_s):
     }
 
 
-async def _replay_service(backend, cfgs, raws, trace, max_queue=512):
+async def _replay_service(backend, cfgs, raws, trace, max_queue=512,
+                          **cfg_kw):
     """Replay a recorded trace through the real worker-pool service:
     arrivals paced to the trace clock, per-request deadlines attached.
-    Returns (results, elapsed_s, metrics snapshot)."""
+    Returns (results, elapsed_s, metrics snapshot). Extra keyword args
+    land on ServiceConfig (the chaos replay tightens retry/stall knobs)."""
     svc = FocusService(
         ServiceConfig(variant=VARIANT, precision=None,
                       max_batch=MAX_BATCH, max_delay_ms=10.0,
-                      max_queue=max_queue, lanes=LANES),
+                      max_queue=max_queue, lanes=LANES, **cfg_kw),
         backend=backend)
     await svc.start()
     t0 = time.perf_counter()
@@ -280,6 +298,117 @@ def _run_load_replay(full: bool, smoke: bool):
     return gain
 
 
+# ---------------------------------------------------------------------------
+# Chaos replay: the PR-9 trace under a seeded fault schedule
+# ---------------------------------------------------------------------------
+
+CHAOS_SEAMS = ("dispatch_error", "nan_output", "lane_hang")
+CHAOS_GOODPUT_BAR = 0.5
+
+
+def _run_chaos_replay():
+    """The serve_chaos_* family: the seeded bursty-Poisson trace replayed
+    twice through the worker-pool service — once fault-free, once through
+    a ChaosBackend injecting a SEEDED schedule of faults at three seams
+    (dispatch error, silent NaN output, lane-thread death) — measuring
+    what the failure-domain layer costs and what it saves.
+
+    Single 128^2 size, 24 requests: enough serving dispatches that every
+    scheduled ordinal is reached before any retry, small enough that the
+    chaos point stays a smoke-speed row. All three faults are recoverable
+    by design (retry, sentinel re-dispatch, stall-watchdog restart), so
+    the gated invariants are STRUCTURAL and deterministic: zero lost
+    requests (every request resolves bit-identical to its per-request
+    Pipeline.run — no silent wrong answers, no unexplained exceptions),
+    all three seams fired, goodput under faults >= 0.5x the fault-free
+    replay. Wall-clock goodput itself stays informational like every
+    timing here."""
+    n = 128
+    n_requests = 24
+    cfg = test_scene(n)
+    raw = np.asarray(simulate_cached(cfg, paper_targets(cfg)))
+    pipe = build_pipeline(cfg, VARIANT)
+    raws, refs = {}, {}
+    for scale in (1.0, 0.5):
+        raws[n, scale] = np.ascontiguousarray(raw * scale,
+                                              dtype=np.complex64)
+        refs[n, scale] = np.asarray(pipe.run(jnp.asarray(raws[n, scale])))
+    t0 = time.perf_counter()
+    np.asarray(pipe.run(jnp.asarray(raw)))
+    service_s = time.perf_counter() - t0
+
+    # pace arrivals at >= 200ms so the fault-free elapsed is a small
+    # multiple of the 0.5s stall floor — the goodput ratio then measures
+    # recovery overhead, not trace-length luck
+    rng = np.random.default_rng(TRACE_SEED)
+    trace = _record_trace(rng, n_requests, (n,),
+                          mean_gap_s=max(service_s, 0.2),
+                          deadline_ms=REPLAY_DEADLINE_MS)
+    # 24 requests at max_batch=4 guarantee >= 6 serving dispatches before
+    # any retry, so every scheduled ordinal in [2, 6) is reached
+    schedule = seeded_schedule(TRACE_SEED, n_requests // MAX_BATCH,
+                               seams=CHAOS_SEAMS)
+    # 3 retries, not 2: a retry re-dispatch consumes a fresh dispatch
+    # ordinal, so one request can eat two scheduled faults back to back
+    cfg_kw = dict(max_retries=3, retry_backoff_ms=10.0,
+                  stall_factor=4.0, stall_floor_s=0.5)
+
+    def _score(results, elapsed):
+        completed = lost = 0
+        for (_, size, scale, _), out in zip(trace, results):
+            if isinstance(out, np.ndarray) and \
+                    np.array_equal(out, refs[size, scale]):
+                completed += 1
+            elif not isinstance(out, (SimulatedFailure, OutputCorrupted,
+                                      LaneStalled, RequestCancelled)):
+                lost += 1          # silent wrong answer / untyped error
+        return completed, lost, completed / max(elapsed, 1e-9)
+
+    backend = LocalBackend()
+    backend.warm(BatchKey(cfg, VARIANT, None, False), MAX_BATCH)
+    results, elapsed, snap = asyncio.run(
+        _replay_service(backend, {n: cfg}, raws, trace, **cfg_kw))
+    ff_done, ff_lost, ff_goodput = _score(results, elapsed)
+    emit("serve_chaos_fault_free", 1.0 / max(ff_goodput, 1e-9),
+         f"goodput_rps={ff_goodput:.2f};"
+         f"p50_ms={snap['latency_p50_ms']:.1f};"
+         f"p99_ms={snap['latency_p99_ms']:.1f};"
+         f"completed={ff_done};lost={ff_lost};requests={len(trace)}")
+
+    injector = FaultInjector(schedule, hang_timeout_s=30.0)
+    chaos = ChaosBackend(LocalBackend(), injector)
+    chaos.warm(BatchKey(cfg, VARIANT, None, False), MAX_BATCH)
+    try:
+        results, elapsed, csnap = asyncio.run(
+            _replay_service(chaos, {n: cfg}, raws, trace, **cfg_kw))
+    finally:
+        injector.release_hangs()   # never leak a hung lane thread
+    done, lost, goodput = _score(results, elapsed)
+    seams = injector.seams_fired()
+    recovery_ms = max(0.0,
+                      csnap["latency_p99_ms"] - snap["latency_p99_ms"])
+    emit("serve_chaos_replay", 1.0 / max(goodput, 1e-9),
+         f"goodput_rps={goodput:.2f};"
+         f"p50_ms={csnap['latency_p50_ms']:.1f};"
+         f"p99_ms={csnap['latency_p99_ms']:.1f};"
+         f"recovery_p99_ms={recovery_ms:.1f};"
+         f"completed={done};lost={lost};requests={len(trace)};"
+         f"faults_fired={injector.faults_fired};"
+         f"dispatch_failures={csnap['dispatch_failures']};"
+         f"retries={csnap['retries']};lane_stalls={csnap['lane_stalls']};"
+         f"corrupted={csnap['corrupted']}")
+    ratio = goodput / max(ff_goodput, 1e-9)
+    emit("serve_chaos_goodput_ratio", 0.0,
+         f"ratio_vs_fault_free={ratio:.2f}x;bar={CHAOS_GOODPUT_BAR}x")
+    # the deterministic structural row bench_compare --serve gates: zero
+    # lost requests, all scheduled seams fired — NOT wall time
+    emit("serve_chaos_smoke", 0.0,
+         f"lost={lost};completed={done};requests={len(trace)};"
+         f"seams={len(seams)};seam_names={'+'.join(seams)};"
+         f"faults_fired={injector.faults_fired};seed={TRACE_SEED}")
+    return ratio, lost, len(seams)
+
+
 def run(full: bool = False, smoke: bool = False):
     n = 1024 if full else 512
     n_requests = 16 if smoke else 32
@@ -362,4 +491,50 @@ def run(full: bool = False, smoke: bool = False):
            "(bursty Poisson trace, worker-pool service vs analytic "
            "single-flight baseline)")
     load_gain = _run_load_replay(full, smoke)
+
+    # -- chaos replay: the same trace machinery under injected faults --
+    header(f"table_6: chaos replay seed={TRACE_SEED} "
+           f"seams={'+'.join(CHAOS_SEAMS)} "
+           "(seeded fault schedule vs fault-free replay)")
+    _run_chaos_replay()
     return gain, load_gain
+
+
+def main(argv=None) -> int:
+    """CLI entry: ``python -m benchmarks.bench_serve --chaos`` runs ONLY
+    the chaos replay and exits non-zero unless the gated invariants hold
+    (zero lost requests, every scheduled seam fired, goodput under
+    faults >= the bar) — the CI chaos-smoke step."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the seeded chaos replay and assert "
+                         "its structural invariants")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    if not args.chaos:
+        run(full=args.full, smoke=args.smoke)
+        return 0
+    ratio, lost, seams = _run_chaos_replay()
+    failures = []
+    if lost != 0:
+        failures.append(f"{lost} lost request(s) under injected faults")
+    if seams < len(CHAOS_SEAMS):
+        failures.append(f"only {seams}/{len(CHAOS_SEAMS)} fault seams "
+                        "fired — the schedule no longer reaches every "
+                        "seam")
+    if ratio < CHAOS_GOODPUT_BAR:
+        failures.append(f"goodput under faults {ratio:.2f}x fault-free "
+                        f"< {CHAOS_GOODPUT_BAR}x bar")
+    for f in failures:
+        print(f"CHAOS FAIL: {f}")
+    if not failures:
+        print(f"chaos smoke OK: 0 lost, {seams} seams, "
+              f"goodput {ratio:.2f}x fault-free")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -258,13 +258,63 @@ def compare_serve(base: dict, fresh: dict,
     ``serve_load_smoke`` row the worker-pool lane count must not shrink
     and the deadline-miss rate (exactly 0 at smoke load by construction
     — generous deadlines) must not grow versus the committed baseline.
-    Goodput/latency wall numbers stay informational."""
+    Goodput/latency wall numbers stay informational.
+
+    The chaos family (``serve_chaos_*``) is gated the same structural
+    way: on ``serve_chaos_smoke`` the seeded fault replay must lose ZERO
+    requests and fire every scheduled seam (>= 3), and
+    ``serve_chaos_goodput_ratio`` must stay at or above its own bar —
+    both deterministic invariants of the failure-domain layer, not wall
+    time. A PR that drops the chaos family entirely fails."""
     base_by_name = {r["name"]: r for r in base.get("rows", [])}
     failures: list[str] = []
-    gates = tiers = loads = 0
+    gates = tiers = loads = chaos = 0
     have_gain_row = False
     for row in sorted(fresh.get("rows", []), key=lambda r: r["name"]):
-        if row["name"] == "serve_load_smoke":
+        if row["name"] == "serve_chaos_smoke":
+            chaos += 1
+            d = _derived(row)
+            lost, seams = d.get("lost"), d.get("seams")
+            if lost is None or seams is None:
+                failures.append(f"{row['name']}: lost/seams missing from "
+                                "derived fields")
+                continue
+            if int(lost) != 0:
+                failures.append(
+                    f"{row['name']}: {lost} request(s) lost under the "
+                    "seeded fault replay (every fault in the schedule is "
+                    "recoverable by construction)")
+            if int(seams) < 3:
+                failures.append(
+                    f"{row['name']}: only {seams} fault seams fired "
+                    "(schedule expects >= 3: dispatch error, NaN output, "
+                    "lane death)")
+            if not any(f.startswith(row["name"]) for f in failures):
+                print(f"  {row['name']}: lost={lost} seams={seams} "
+                      f"completed={d.get('completed')}/"
+                      f"{d.get('requests')} OK")
+        elif row["name"] == "serve_chaos_goodput_ratio":
+            chaos += 1
+            d = _derived(row)
+            ratio_s, bar_s = d.get("ratio_vs_fault_free"), d.get("bar")
+            if ratio_s is None or bar_s is None:
+                failures.append(f"{row['name']}: ratio_vs_fault_free/bar "
+                                "missing from derived fields")
+                continue
+            ratio = float(ratio_s.rstrip("x"))
+            bar = float(bar_s.rstrip("x"))
+            if ratio < bar:
+                failures.append(
+                    f"{row['name']}: goodput under faults {ratio:.2f}x "
+                    f"fault-free < {bar}x bar — recovery overhead "
+                    "regressed")
+            else:
+                print(f"  {row['name']}: {ratio:.2f}x vs bar {bar}x OK")
+        elif row["name"].startswith("serve_chaos_"):
+            chaos += 1
+            print(f"  {row['name']}: wall_ms={row['wall_ms']:.2f} "
+                  f"(informational)")
+        elif row["name"] == "serve_load_smoke":
             loads += 1
             d = _derived(row)
             old = base_by_name.get(row["name"])
@@ -341,8 +391,11 @@ def compare_serve(base: dict, fresh: dict,
     elif not have_gain_row:
         failures.append("serve_load_goodput_gain row missing from the "
                         "fresh artifact")
+    if chaos == 0:
+        failures.append("no serve_chaos_* rows in the fresh artifact — "
+                        "the chaos-replay family is gone")
     print(f"# serve ratchet compared {gates} gate rows, {tiers} tier rows, "
-          f"{loads} load-replay rows")
+          f"{loads} load-replay rows, {chaos} chaos rows")
     return failures
 
 

@@ -26,6 +26,14 @@ from repro.service.backends import (  # noqa: F401
     make_backend,
 )
 from repro.service.batcher import MicroBatcher  # noqa: F401
+from repro.service.faults import (  # noqa: F401
+    ChaosBackend,
+    FaultInjector,
+    FaultSpec,
+    SimulatedFailure,
+    scene_digest,
+    seeded_schedule,
+)
 from repro.service.metrics import ServiceMetrics  # noqa: F401
 from repro.service.queue import (  # noqa: F401
     BatchKey,
@@ -34,6 +42,14 @@ from repro.service.queue import (  # noqa: F401
     RequestQueue,
     ServiceOverloaded,
     SnrGateViolation,
+)
+from repro.service.resilience import (  # noqa: F401
+    BreakerBoard,
+    CircuitBreaker,
+    HealthSentinel,
+    LaneStalled,
+    OutputCorrupted,
+    RetryPolicy,
 )
 from repro.service.service import (  # noqa: F401
     FocusService,

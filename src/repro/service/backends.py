@@ -38,7 +38,8 @@ shipped:
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 from repro.core import plan as planlib
 from repro.kernels.fft4step import resolve_precision
 from repro.service.queue import BatchKey
+from repro.service.resilience import BreakerBoard
 from repro import tuning
 
 
@@ -84,6 +86,19 @@ FUSED1_TWINS = {
     "omegak": "omegak_fused1",
 }
 
+# Last-resort degradation tier: the DEFUSED chain for a fused per-axis
+# variant — more, smaller dispatches through the same plan stages. Unlike
+# the fused1 twin this step is NOT bit-identical (stage-boundary rounding
+# differs), so it only serves after both fused tiers have failed: a
+# numerically equivalent image beats a failed request. omega-K has no
+# defused sibling (its Stolt interpolation only exists fused), so its
+# chain ends at the per-axis tier.
+DEFUSED_FALLBACK = {
+    "fused3": "unfused",
+    "fused": "unfused",
+    "csa_fused": "csa",
+}
+
 
 def _pad_batch(batch: np.ndarray) -> np.ndarray:
     b = batch.shape[0]
@@ -101,20 +116,31 @@ class LocalBackend:
 
     def __init__(self, sweep: Sequence[Tuple[Optional[int], Optional[int]]]
                  = ((None, None), (32, -1)), tune_cache=None,
-                 fused1: str = "auto", sharded: str = "auto"):
+                 fused1: str = "auto", sharded: str = "auto",
+                 fallback: str = "auto",
+                 breakers: Optional[BreakerBoard] = None):
         if fused1 not in ("auto", "off"):
             raise ValueError(f"fused1 must be 'auto' or 'off', got "
                              f"{fused1!r}")
         if sharded not in ("auto", "off"):
             raise ValueError(f"sharded must be 'auto' or 'off', got "
                              f"{sharded!r}")
+        if fallback not in ("auto", "off"):
+            raise ValueError(f"fallback must be 'auto' or 'off', got "
+                             f"{fallback!r}")
         self.sweep = tuple(sweep)
         self.fused1 = fused1
         self.sharded = sharded
+        self.fallback = fallback            # "off" disables degraded tiers
+        # per-route circuit breakers (route x variant x shape x precision):
+        # a route that keeps failing is skipped on the hot path until its
+        # cooldown expires, then re-probed half-open
+        self.breakers = breakers if breakers is not None else BreakerBoard()
+        self.fallbacks: Counter = Counter()  # degraded-route serve counts
         self._tune_cache = tune_cache       # None -> the shared default
         self._best: Dict[BatchKey, Tuple[Optional[int], Optional[int]]] = {}
         self._sched: Dict[BatchKey, "tuning.Schedule"] = {}
-        self._fns: Dict[BatchKey, callable] = {}
+        self._fns: Dict[Tuple[BatchKey, str], callable] = {}
         self._sharded_fns: Dict[BatchKey, callable] = {}
 
     def _route_variant(self, key: BatchKey) -> str:
@@ -135,7 +161,11 @@ class LocalBackend:
             return twin
         return key.variant
 
-    def _pipeline(self, key: BatchKey, batch: int = 1, route: bool = True):
+    def _pipeline(self, key: BatchKey, batch: int = 1,
+                  variant: Optional[str] = None):
+        """The compiled pipeline serving ``key`` — at the routed tier-0
+        variant by default, or at an explicit ``variant`` (a degraded
+        tier, or the requested per-axis variant for sweeps/streams)."""
         block, col_block = _resolve_blocks(
             key.scene, *self._best.get(key, (None, None)))
         kw = dict(batch=batch)
@@ -148,13 +178,39 @@ class LocalBackend:
         sched = self._sched.get(key)
         if sched is not None:
             kw["schedule"] = sched
-        variant = self._route_variant(key) if route else key.variant
+        if variant is None:
+            variant = self._route_variant(key)
         return planlib.cached_pipeline(key.scene, variant, **kw)
 
-    def _fn(self, key: BatchKey):
-        if key not in self._fns:
-            self._fns[key] = self._pipeline(key).jitted()
-        return self._fns[key]
+    def _fn(self, key: BatchKey, variant: Optional[str] = None):
+        if variant is None:
+            variant = self._route_variant(key)
+        if (key, variant) not in self._fns:
+            self._fns[(key, variant)] = \
+                self._pipeline(key, variant=variant).jitted()
+        return self._fns[(key, variant)]
+
+    # -- tiered degradation --------------------------------------------------
+    def _execute_tiers(self, key: BatchKey) -> List[Tuple[str, str]]:
+        """Ordered (route_name, variant) tiers for a coalesced batch:
+        the megakernel twin (when routed), the requested per-axis
+        variant, and — unless ``fallback="off"`` — the defused chain.
+        Tier 0 is EXACTLY what `_route_variant` serves on the fault-free
+        path, so degradation never changes healthy results."""
+        routed = self._route_variant(key)
+        tiers = [("fused1" if routed != key.variant else "plan", routed)]
+        if routed != key.variant:
+            tiers.append(("plan", key.variant))
+        if self.fallback == "auto":
+            defused = DEFUSED_FALLBACK.get(key.variant)
+            if defused is not None and defused != key.variant:
+                tiers.append(("defused", defused))
+        return tiers
+
+    def _breaker(self, route: str, variant: str, key: BatchKey):
+        cfg = key.scene
+        return self.breakers.get(
+            f"{route}:{variant}:{cfg.na}x{cfg.nr}:{key.precision}")
 
     def _tune_key(self, key: BatchKey, max_batch: int) -> "tuning.TuneKey":
         cfg = key.scene
@@ -198,13 +254,13 @@ class LocalBackend:
                 def measure(cand, iters):
                     blk, cb = cand
                     self._best[key] = (blk, cb)
-                    # sweep the REQUESTED per-axis pipeline (route=False):
-                    # a mega-routed pipeline ignores (block, col_block), so
-                    # timing it would persist a noise winner to the cache —
-                    # the swept config is what execute_streamed and
-                    # fused1="off" processes actually consume
+                    # sweep the REQUESTED per-axis pipeline: a mega-routed
+                    # pipeline ignores (block, col_block), so timing it
+                    # would persist a noise winner to the cache — the swept
+                    # config is what execute_streamed and fused1="off"
+                    # processes actually consume
                     f = self._pipeline(key, batch=max_batch,
-                                       route=False).jitted()
+                                       variant=key.variant).jitted()
                     jax.block_until_ready(f(zeros))   # compile
                     t0 = time.perf_counter()
                     jax.block_until_ready(f(zeros))
@@ -230,10 +286,35 @@ class LocalBackend:
 
     def execute(self, key: BatchKey, batch: np.ndarray) -> np.ndarray:
         """(B, na, nr) host batch -> (B, na, nr) focused images.
-        Pads to the nearest power-of-two bucket (see `_bucket`)."""
+        Pads to the nearest power-of-two bucket (see `_bucket`).
+
+        Walks the degradation tiers (`_execute_tiers`): a tier whose
+        circuit breaker is open is skipped (until its cooldown admits a
+        half-open probe), a tier that raises records the failure and
+        falls through to the next, and the LAST tier always runs so a
+        request is never failed by an open breaker alone. On the
+        fault-free path tier 0 serves and the result is bit-identical to
+        the pre-resilience backend."""
         b = batch.shape[0]
-        out = np.asarray(self._fn(key)(jnp.asarray(_pad_batch(batch))))
-        return out[:b]
+        padded = jnp.asarray(_pad_batch(batch))
+        tiers = self._execute_tiers(key)
+        last_err: Optional[Exception] = None
+        for i, (route, variant) in enumerate(tiers):
+            br = self._breaker(route, variant, key)
+            if i < len(tiers) - 1 and not br.allow():
+                self.fallbacks[f"skip:{route}"] += 1
+                continue
+            try:
+                out = np.asarray(self._fn(key, variant)(padded))
+            except Exception as e:          # noqa: BLE001 — tier boundary
+                br.record_failure()
+                last_err = e
+                continue
+            br.record_success()
+            if (route, variant) != tiers[0]:
+                self.fallbacks[f"serve:{route}"] += 1
+            return out[:b]
+        raise last_err
 
     def _sharded_twin(self, key: BatchKey) -> Optional[str]:
         """The megakernel twin to run SHARDED for a big streamed scene,
@@ -282,10 +363,25 @@ class LocalBackend:
         groups, each device holding a 1/P slab. Every precision is
         bit-identical to the per-axis strip path (asserted in tests;
         bs16's carried exponents ride the collectives), so the route
-        stays invisible."""
+        stays invisible.
+
+        Degradation: a failing (or breaker-open) sharded route falls
+        back to the single-device strip path — sharded -> local is
+        bit-identical, so the fallback is invisible beyond latency."""
         if self._sharded_twin(key) is not None:
-            return np.asarray(self._sharded_fn(key)(jnp.asarray(raw)))
-        return np.asarray(self._pipeline(key, route=False)
+            br = self._breaker("sharded", self._sharded_twin(key), key)
+            if br.allow():
+                try:
+                    out = np.asarray(self._sharded_fn(key)(jnp.asarray(raw)))
+                except Exception:           # noqa: BLE001 — tier boundary
+                    br.record_failure()
+                    self.fallbacks["serve:local_stream"] += 1
+                else:
+                    br.record_success()
+                    return out
+            else:
+                self.fallbacks["skip:sharded"] += 1
+        return np.asarray(self._pipeline(key, variant=key.variant)
                           .run_streamed(raw, strips=strips))
 
 

@@ -71,6 +71,13 @@ class ServiceMetrics:
         self.deadline_met = 0        # served within t_deadline
         self.failed = 0
         self.streamed = 0
+        # -- resilience counters (the failure-domain layer) ------------------
+        self.dispatch_failures = 0   # batch attempts that raised
+        self.retries = 0             # bounded-retry re-dispatches
+        self.bisections = 0          # poison-batch splits
+        self.lane_stalls = 0         # stall-watchdog lane restarts
+        self.corrupted = 0           # sentinel-flagged scenes
+        self.tier_fallbacks = 0      # precision-tier (bs16 -> f32) falls
         self.latencies_ms: List[float] = []
         self.batch_sizes: Counter = Counter()
         self.batch_fill: Counter = Counter()     # fill fraction histogram
@@ -128,6 +135,24 @@ class ServiceMetrics:
     def observe_failure(self) -> None:
         self.failed += 1
 
+    def observe_dispatch_failure(self) -> None:
+        self.dispatch_failures += 1
+
+    def observe_retry(self) -> None:
+        self.retries += 1
+
+    def observe_bisect(self) -> None:
+        self.bisections += 1
+
+    def observe_stall(self) -> None:
+        self.lane_stalls += 1
+
+    def observe_corrupt(self, scenes: int = 1) -> None:
+        self.corrupted += scenes
+
+    def observe_tier_fallback(self, scenes: int = 1) -> None:
+        self.tier_fallbacks += scenes
+
     def set_lane_occupancy(self, occupancy: Dict[str, float]) -> None:
         """Latest per-lane busy fraction (WorkerPool.occupancy())."""
         self._lane_occupancy = dict(occupancy)
@@ -156,6 +181,12 @@ class ServiceMetrics:
                 if deadlined else 0.0),
             "failed": self.failed,
             "streamed": self.streamed,
+            "dispatch_failures": self.dispatch_failures,
+            "retries": self.retries,
+            "bisections": self.bisections,
+            "lane_stalls": self.lane_stalls,
+            "corrupted": self.corrupted,
+            "tier_fallbacks": self.tier_fallbacks,
             "throughput_rps": self.completed / elapsed,
             # goodput: completions that met their deadline per second;
             # requests without a deadline always count as good
@@ -202,6 +233,17 @@ class ServiceMetrics:
                        f"hist={s['batch_size_hist']};"
                        f"fill_hist={s['batch_fill_hist']};"
                        f"queue_depth_max={s['queue_depth_max']}",
+        })
+        rows.append({
+            "section": section, "name": "resilience",
+            "wall_ms": 0.0,
+            "derived": f"dispatch_failures={s['dispatch_failures']};"
+                       f"retries={s['retries']};"
+                       f"bisections={s['bisections']};"
+                       f"lane_stalls={s['lane_stalls']};"
+                       f"corrupted={s['corrupted']};"
+                       f"tier_fallbacks={s['tier_fallbacks']};"
+                       f"failed={s['failed']}",
         })
         occ = ";".join(f"occ_{name}={frac:.4f}"
                        for name, frac in s["lane_occupancy"].items())

@@ -34,6 +34,11 @@ from repro.core.sar.geometry import SceneConfig
 # hint only has to be a sane order of magnitude, not a prediction
 _SERVICE_TIME_SEED_S = 0.05
 _EWMA_ALPHA = 0.2
+# floor for retry_after_hint: the EWMA can be driven arbitrarily small
+# by a run of fast (or clock-degenerate) batches, and a non-positive
+# hint tells callers to retry immediately — exactly the hammering the
+# hint exists to prevent
+_RETRY_HINT_FLOOR_S = 1e-3
 
 
 class ServiceOverloaded(RuntimeError):
@@ -145,8 +150,11 @@ class RequestQueue:
 
     def retry_after_hint(self, depth: int) -> float:
         """Seconds until a backlog of ``depth`` requests should have
-        drained at the recently observed service rate."""
-        return (depth + 1) * self._service_time_s
+        drained at the recently observed service rate. Clamped to a
+        positive floor: a cold or degenerate EWMA must never tell
+        callers to retry after 0 (or negative) seconds."""
+        return max(_RETRY_HINT_FLOOR_S,
+                   (depth + 1) * self._service_time_s)
 
     def put(self, req: FocusRequest, extra: int = 0) -> None:
         """Admit a request or raise :class:`ServiceOverloaded`.

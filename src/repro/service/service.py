@@ -50,7 +50,18 @@ from repro.service.queue import (
     SnrGateViolation,
     now,
 )
+from repro.service.resilience import (
+    BreakerBoard,
+    HealthSentinel,
+    LaneStalled,
+    OutputCorrupted,
+    RetryPolicy,
+)
 from repro.service.workers import Lane, WorkerPool
+
+# poison-batch bisection recursion bound: max_batch is small (single
+# digits), so 4 halvings always reach singletons
+_MAX_BISECT_DEPTH = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +115,38 @@ class ServiceConfig:
     device_budget_bytes: Optional[int] = None
     stream_strips: int = 4
     schedule: str = "corner2"
+    # -- failure-domain knobs (docs/serving.md "Failure handling") -----------
+    # max_retries: failed batch dispatches re-run up to this many times
+    #   with jittered exponential backoff, never scheduled past the
+    #   earliest live deadline in the batch.
+    # retry_backoff_ms / retry_seed: the backoff base and the jitter
+    #   PRNG seed (seeded -> chaos replays are deterministic).
+    # bisect: a batch that exhausts its retries and holds >1 request is
+    #   split in half and each half served independently, so one poison
+    #   scene fails alone instead of killing its coalesced neighbors.
+    # sentinel / sentinel_envelope: per-scene output health check
+    #   (finite values + in/out energy envelope) converting silent
+    #   numerical corruption into a retry, then OutputCorrupted.
+    # stall_factor / stall_floor_s: lane supervision — a dispatch
+    #   exceeding max(floor, factor x slowest completed batch) declares
+    #   the lane dead; the lane restarts and the batch retries. None
+    #   factor disables the watchdog.
+    # tier_fallback: a DEFAULT-tier precision whose SNR gate trips (or
+    #   whose output keeps failing the sentinel) falls back to the f32
+    #   verification tier instead of erroring; explicit per-request
+    #   precisions still raise SnrGateViolation — the caller asked for
+    #   that tier by name.
+    max_retries: int = 1
+    retry_backoff_ms: float = 25.0
+    retry_seed: int = 0
+    bisect: bool = True
+    sentinel: bool = True
+    sentinel_envelope: float = 1e6
+    stall_factor: Optional[float] = 6.0
+    stall_floor_s: float = 30.0
+    tier_fallback: bool = True
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 30.0
 
 
 def _default_precision_deviation(precision: str) -> float:
@@ -142,6 +185,18 @@ class FocusService:
         self._precision_deviation = (precision_deviation
                                      or _default_precision_deviation)
         self._gate_cache: Dict[str, float] = {}
+        # -- failure-domain policy (see resilience.py) -----------------------
+        self._retry = RetryPolicy(max_retries=config.max_retries,
+                                  backoff_s=config.retry_backoff_ms / 1e3,
+                                  seed=config.retry_seed)
+        self._sentinel = (HealthSentinel(config.sentinel_envelope)
+                          if config.sentinel else None)
+        # tier breakers: "tier:<precision>" opens after repeated gate
+        # trips / sentinel corruption on the DEFAULT precision tier, so
+        # admission skips straight to f32 until the cooldown re-probes
+        self._tier_breakers = BreakerBoard(
+            threshold=config.breaker_threshold,
+            cooldown_s=config.breaker_cooldown_s)
         self._task: Optional[asyncio.Task] = None
         # The worker pool owns EVERY device-work thread (batches,
         # streams, warms, gate measurements). Batches run under the
@@ -223,6 +278,36 @@ class FocusService:
                 f"{dev:.3f} dB exceeds the {self.config.snr_gate_db} dB "
                 "gate")
 
+    async def _admit_precision(self, precision: Optional[str],
+                               explicit: bool) -> Optional[str]:
+        """Resolve the precision tier a request will actually serve at.
+
+        An EXPLICIT per-request precision keeps the strict contract: a
+        tripped gate raises SnrGateViolation (the caller asked for that
+        tier by name). The DEFAULT tier degrades instead of erroring —
+        a gate trip (or an open "tier:<precision>" breaker, fed by
+        runtime sentinel corruption) falls back to the f32 verification
+        tier, which never consults the gate. The breaker's cooldown
+        re-probes the fast tier so a transient trip does not pin the
+        service at f32 forever."""
+        if precision in (None, "f32"):
+            return precision
+        fall = self.config.tier_fallback and not explicit
+        breaker = self._tier_breakers.get(f"tier:{precision}")
+        if fall and not breaker.allow():
+            self.metrics.observe_tier_fallback()
+            return "f32"
+        await self._ensure_gate_measured(precision)
+        try:
+            self._check_gate(precision)
+        except SnrGateViolation:
+            if not fall:
+                raise
+            breaker.record_failure()
+            self.metrics.observe_tier_fallback()
+            return "f32"
+        return precision
+
     def _admit(self, req: FocusRequest) -> None:
         """Enqueue, shedding latest-deadline pending work at the bound
         when the arrival's deadline is earlier (EDF admission)."""
@@ -275,10 +360,10 @@ class FocusService:
                 "after stop() are rejected)")
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        explicit = precision is not None
         if precision is None:
             precision = self.config.precision
-        await self._ensure_gate_measured(precision)
-        self._check_gate(precision)
+        precision = await self._admit_precision(precision, explicit)
         raw = np.ascontiguousarray(np.asarray(raw, np.complex64))
         if raw.shape != (scene.na, scene.nr):
             raise ValueError(
@@ -315,43 +400,148 @@ class FocusService:
 
     async def _run_batch(self, lane: Lane, predicted_s: float,
                          key: BatchKey, reqs: List[FocusRequest]) -> None:
+        """Resilient batch executor: every request in ``reqs`` resolves
+        to an image or a TYPED error — a fault never leaves a future
+        pending and never silently fails healthy coalesced neighbors.
+        Streamed keys serve per scene (each its own failure domain)."""
         t0 = time.perf_counter()
-        busy_s = 0.0
+        busy = [0.0]
         try:
-            try:
-                if key.stream:
-                    images = []
-                    for r in reqs:
-                        img, secs = await self.pool.run_batch(
-                            lane, self.backend.execute_streamed,
-                            key, r.raw, self.config.stream_strips)
-                        busy_s += secs
-                        images.append(img)
-                else:
-                    # host staging happens HERE, on the event loop — while
-                    # other lanes' batches compute on their threads
-                    batch = np.stack([r.raw for r in reqs])
-                    images, busy_s = await self.pool.run_batch(
-                        lane, self.backend.execute, key, batch)
-            except Exception as e:
+            if key.stream:
                 for r in reqs:
-                    if not r.future.done():
-                        r.future.set_exception(e)
-                    self.metrics.observe_failure()
-                return
+                    await self._serve_batch(lane, key, [r], busy)
+            else:
+                await self._serve_batch(lane, key, reqs, busy)
             wall_ms = (time.perf_counter() - t0) * 1e3
             self.metrics.observe_batch(
                 len(reqs), wall_ms, streamed=key.stream, lane=lane.name,
                 max_batch=None if key.stream else self.config.max_batch)
             self.queue.note_service_time(wall_ms / 1e3 / len(reqs))
-            t_done = now()
-            for r, img in zip(reqs, images):
-                if not r.future.done():
-                    r.future.set_result(np.asarray(img))
-                self.metrics.observe_done(
-                    (t_done - r.t_submit) * 1e3,
-                    deadline_met=(None if r.deadline_ms is None
-                                  else t_done <= r.t_deadline))
         finally:
-            lane.release(predicted_s, busy_s=busy_s)
+            lane.release(predicted_s, busy_s=busy[0])
             self.metrics.set_lane_occupancy(self.pool.occupancy())
+
+    def _stall_timeout(self, lane: Lane) -> Optional[float]:
+        if self.config.stall_factor is None:
+            return None
+        return lane.stall_timeout(self.config.stall_factor,
+                                  self.config.stall_floor_s)
+
+    async def _attempt(self, lane: Lane, key: BatchKey,
+                       reqs: List[FocusRequest]):
+        """One dispatch of ``reqs`` on ``lane`` under the stall
+        watchdog; returns (images, device seconds)."""
+        if key.stream:
+            img, secs = await self.pool.run_batch(
+                lane, self.backend.execute_streamed, key, reqs[0].raw,
+                self.config.stream_strips,
+                stall_timeout=self._stall_timeout(lane))
+            return [img], secs
+        # host staging happens HERE, on the event loop — while other
+        # lanes' batches compute on their threads
+        batch = np.stack([r.raw for r in reqs])
+        images, secs = await self.pool.run_batch(
+            lane, self.backend.execute, key, batch,
+            stall_timeout=self._stall_timeout(lane))
+        return list(images), secs
+
+    def _resolve(self, r: FocusRequest, img) -> None:
+        if not r.future.done():
+            r.future.set_result(np.asarray(img))
+        t_done = now()
+        self.metrics.observe_done(
+            (t_done - r.t_submit) * 1e3,
+            deadline_met=(None if r.deadline_ms is None
+                          else t_done <= r.t_deadline))
+
+    def _fail(self, r: FocusRequest, exc: Exception) -> None:
+        if not r.future.done():
+            r.future.set_exception(exc)
+        self.metrics.observe_failure()
+
+    async def _serve_batch(self, lane: Lane, key: BatchKey,
+                           reqs: List[FocusRequest], busy: List[float],
+                           depth: int = 0) -> None:
+        """Serve one failure domain: dispatch, then walk the recovery
+        ladder until every request is resolved (image or typed error).
+
+        * a dispatch error (including LaneStalled from the lane
+          supervisor) is retried up to ``max_retries`` times with
+          seeded-jitter exponential backoff, never scheduled past the
+          earliest live deadline in the domain;
+        * a domain that exhausts retries with >1 request BISECTS — each
+          half recurses independently, so a single poison scene ends as
+          a singleton typed error while its neighbors serve;
+        * after a successful dispatch the output sentinel checks each
+          scene; healthy scenes resolve immediately, corrupted scenes
+          re-dispatch on the retry budget — with a reduced default tier
+          re-running at f32 (the verification tier) and feeding the
+          "tier:<precision>" breaker — and raise OutputCorrupted when
+          the budget is spent.
+
+        Never raises: failures land on the request futures."""
+        attempt = 0
+        while True:
+            live = [r for r in reqs if not r.future.done()]
+            if not live:
+                return
+            try:
+                images, secs = await self._attempt(lane, key, live)
+                busy[0] += secs
+            except Exception as e:       # noqa: BLE001 — failure domain edge
+                if isinstance(e, LaneStalled):
+                    self.metrics.observe_stall()
+                self.metrics.observe_dispatch_failure()
+                delay = self._retry.budget(
+                    attempt, min(r.t_deadline for r in live))
+                if delay is not None:
+                    attempt += 1
+                    self.metrics.observe_retry()
+                    await asyncio.sleep(delay)
+                    continue
+                if (len(live) > 1 and self.config.bisect
+                        and depth < _MAX_BISECT_DEPTH):
+                    self.metrics.observe_bisect()
+                    mid = len(live) // 2
+                    await self._serve_batch(lane, key, live[:mid], busy,
+                                            depth + 1)
+                    await self._serve_batch(lane, key, live[mid:], busy,
+                                            depth + 1)
+                    return
+                for r in live:
+                    self._fail(r, e)
+                return
+            # -- per-scene output health --------------------------------
+            bad: List[Tuple[FocusRequest, str]] = []
+            for r, img in zip(live, images):
+                reason = (self._sentinel.check(r.raw, img)
+                          if self._sentinel is not None else None)
+                if reason is None:
+                    self._resolve(r, img)
+                else:
+                    bad.append((r, reason))
+            if key.precision not in (None, "f32") and len(bad) < len(live):
+                self._tier_breakers.get(
+                    f"tier:{key.precision}").record_success()
+            if not bad:
+                return
+            self.metrics.observe_corrupt(len(bad))
+            reqs = [r for r, _ in bad]
+            if (key.precision not in (None, "f32")
+                    and self.config.tier_fallback):
+                # corruption on a reduced tier: re-run at f32 and feed
+                # the tier breaker so repeated corruption re-routes
+                # admission until the cooldown probe
+                self._tier_breakers.get(
+                    f"tier:{key.precision}").record_failure()
+                key = key._replace(precision="f32")
+                self.metrics.observe_tier_fallback(len(bad))
+            delay = self._retry.budget(
+                attempt, min(r.t_deadline for r in reqs))
+            if delay is None:
+                for r, reason in bad:
+                    self._fail(r, OutputCorrupted(reason))
+                return
+            attempt += 1
+            self.metrics.observe_retry()
+            await asyncio.sleep(delay)

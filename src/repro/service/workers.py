@@ -37,8 +37,34 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.distributed.fault import StragglerWatchdog
 from repro.service.queue import BatchKey
+from repro.service.resilience import LaneStalled
 from repro import tuning
+
+
+class _ReadToken:
+    """One read-side hold on the RW lock. ``release()`` is idempotent
+    and callable from ANY thread: when a stall watchdog restarts a lane,
+    the abandoned device thread may still hold the read side — the
+    restart force-releases its token so a pending gate writer is never
+    deadlocked, and the abandoned thread's own eventual release is a
+    no-op."""
+
+    __slots__ = ("_lock", "_released")
+
+    def __init__(self, lock: "_RWLock"):
+        self._lock = lock
+        self._released = False
+
+    def release(self) -> None:
+        with self._lock._cond:
+            if self._released:
+                return
+            self._released = True
+            self._lock._readers -= 1
+            if self._lock._readers == 0:
+                self._lock._cond.notify_all()
 
 
 class _RWLock:
@@ -52,11 +78,12 @@ class _RWLock:
         self._writer = False
         self._writers_waiting = 0
 
-    def acquire_read(self) -> None:
+    def acquire_read(self) -> _ReadToken:
         with self._cond:
             while self._writer or self._writers_waiting:
                 self._cond.wait()
             self._readers += 1
+            return _ReadToken(self)
 
     def release_read(self) -> None:
         with self._cond:
@@ -94,9 +121,20 @@ class Lane:
         self.backlog_s = 0.0              # predicted seconds in flight
         self.busy_s = 0.0                 # measured device-thread seconds
         self.batches = 0
+        # -- supervision state: an EWMA of completed-batch seconds (the
+        # stall watchdog's baseline), a monotonic max (robust to lanes
+        # serving mixed scene sizes), the distributed straggler watchdog
+        # flagging slow-but-alive dispatches, and a restart generation.
+        self.ewma_s: Optional[float] = None
+        self.max_s = 0.0
+        self.generation = 0
+        self.stalls = 0
+        self.watchdog = StragglerWatchdog()
         self._sem: Optional[asyncio.Semaphore] = None
         self._executor: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
+        self._tokens_lock = threading.Lock()
+        self._tokens: set = set()         # read tokens held by this lane
 
     def start(self) -> None:
         """(Re)create the loop-bound semaphore and the executor thread —
@@ -110,6 +148,43 @@ class Lane:
             self._executor.shutdown(wait=True)
             self._executor = None
         self._sem = None
+
+    # -- supervision ---------------------------------------------------------
+    def note_done(self, seconds: float) -> None:
+        """Fold one COMPLETED batch's device seconds into the stall
+        baseline (failures and stalls are excluded — they would bias the
+        watchdog toward false positives after fast failures)."""
+        self.ewma_s = (seconds if self.ewma_s is None
+                       else 0.3 * seconds + 0.7 * self.ewma_s)
+        self.max_s = max(self.max_s, seconds)
+        self.watchdog.record(self.batches, seconds)
+
+    def stall_timeout(self, factor: float, floor_s: float) -> float:
+        """Seconds a dispatch may run before the lane is declared dead.
+        Based on the slowest completed batch (not the EWMA alone) so a
+        lane serving mixed scene sizes never false-trips on its largest
+        key; the floor covers the cold lane before any completion."""
+        base = max(self.max_s, self.ewma_s or 0.0)
+        return max(floor_s, factor * base)
+
+    def restart(self) -> None:
+        """Replace the executor thread after a stall. The semaphore is
+        KEPT: hand-offs already parked on `acquire` simply dispatch onto
+        the fresh executor — that is the not-yet-dispatched-work requeue.
+        The abandoned thread's gate-lock read tokens are force-released
+        (idempotently) so a pending gate writer is not deadlocked by a
+        thread that will never return."""
+        old = self._executor
+        if old is not None:
+            old.shutdown(wait=False, cancel_futures=True)
+        with self._tokens_lock:
+            tokens, self._tokens = list(self._tokens), set()
+        for tok in tokens:
+            tok.release()
+        self.generation += 1
+        self.stalls += 1
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"lane-{self.name}")
 
     async def acquire(self, predicted_s: float = 0.0) -> None:
         """Take one in-flight slot (parks when the lane is at its cap —
@@ -180,20 +255,52 @@ class WorkerPool:
                    key=lambda lane: (lane.backlog_s, lane.name))
 
     # -- execution ----------------------------------------------------------
-    async def run_batch(self, lane: Lane, fn, *args):
+    async def run_batch(self, lane: Lane, fn, *args,
+                        stall_timeout: Optional[float] = None):
         """Await ``fn(*args)`` on the lane thread (shared lock held);
-        returns (result, seconds busy on the device thread)."""
-        t0 = time.perf_counter()
-        result = await asyncio.wrap_future(
-            lane._executor.submit(self._shared_call, fn, *args))
-        return result, time.perf_counter() - t0
+        returns (result, seconds busy on the device thread).
 
-    def _shared_call(self, fn, *args):
-        self.gate_lock.acquire_read()
+        ``stall_timeout`` arms the lane supervisor: a dispatch that
+        neither returns nor raises within the timeout is declared a dead
+        lane — the lane's executor is replaced (work already parked on
+        its in-flight semaphore re-dispatches onto the fresh thread) and
+        :class:`~repro.service.resilience.LaneStalled` is raised so the
+        caller's retry policy can re-run the batch."""
+        t0 = time.perf_counter()
+        fut = asyncio.wrap_future(
+            lane._executor.submit(self._shared_call, lane, fn, *args))
+        if stall_timeout is None:
+            result = await fut
+        else:
+            try:
+                result = await asyncio.wait_for(fut, stall_timeout)
+            except asyncio.TimeoutError:
+                self.restart_lane(lane)
+                raise LaneStalled(
+                    f"lane {lane.name}: dispatch exceeded the "
+                    f"{stall_timeout:.2f}s stall watchdog; lane restarted "
+                    f"(generation {lane.generation})") from None
+        secs = time.perf_counter() - t0
+        lane.note_done(secs)
+        return result, secs
+
+    def restart_lane(self, lane: Lane) -> None:
+        """Supervisor action: replace a dead lane's executor thread.
+        Parked hand-offs keep their semaphore slots and re-dispatch onto
+        the fresh thread; the abandoned thread's shared-lock hold is
+        force-released (see Lane.restart)."""
+        lane.restart()
+
+    def _shared_call(self, lane: Lane, fn, *args):
+        token = self.gate_lock.acquire_read()
+        with lane._tokens_lock:
+            lane._tokens.add(token)
         try:
             return fn(*args)
         finally:
-            self.gate_lock.release_read()
+            token.release()
+            with lane._tokens_lock:
+                lane._tokens.discard(token)
 
     async def run_exclusive(self, fn, *args):
         """Await ``fn(*args)`` on lane 0's thread under the EXCLUSIVE
@@ -225,4 +332,6 @@ class WorkerPool:
             "backlog_s": lane.backlog_s,
             "busy_s": lane.busy_s,
             "batches": lane.batches,
+            "stalls": lane.stalls,
+            "generation": lane.generation,
         } for lane in self.lanes}

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import logging
 import os
 import threading
 import time
@@ -72,6 +73,12 @@ from repro.tuning.space import (
 CACHE_SCHEMA = 2
 # schema versions a loaded document may carry; anything else is rejected
 _KNOWN_SCHEMAS = (1, CACHE_SCHEMA)
+
+_logger = logging.getLogger(__name__)
+# cache paths whose corruption has already been logged (log once per
+# path per process — a corrupt file would otherwise warn on every load
+# until the first put() rewrites it)
+_QUARANTINE_WARNED: set = set()
 
 
 def default_cache_path() -> str:
@@ -178,16 +185,46 @@ class TuneCache:
             return self._doc
         if self._doc is not None and mtime == self._mtime:
             return self._doc
-        with open(self.path) as f:
-            raw = json.load(f)
-        if "schema" not in raw:                   # legacy flat autotune dict
-            doc = migrate_legacy_doc(raw)
-        else:
-            doc = validate_cache_doc(raw)
-            if doc.get("schema") == 1:            # schema 1: bump in memory
-                doc = migrate_schema1_doc(doc)
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            if "schema" not in raw:               # legacy flat autotune dict
+                doc = migrate_legacy_doc(raw)
+            else:
+                doc = validate_cache_doc(raw)
+                if doc.get("schema") == 1:        # schema 1: bump in memory
+                    doc = migrate_schema1_doc(doc)
+        except (ValueError, OSError, KeyError, TypeError,
+                AttributeError) as e:
+            # ValueError covers truncated/garbage JSON and schema
+            # rejection; the rest cover well-formed JSON of the wrong
+            # shape hitting the legacy migrator.
+            # Corrupt cache file (truncated write, foreign schema, a
+            # fault-injected chaos run): QUARANTINE it — move the bytes
+            # aside for post-mortem instead of deleting evidence or
+            # failing every warm() forever — and rebuild empty. The
+            # tuner simply re-measures; a cache is a cache.
+            self._quarantine_locked(e)
+            self._mtime, self._doc = None, {"schema": CACHE_SCHEMA,
+                                            "entries": {}}
+            return self._doc
         self._mtime, self._doc = mtime, doc
         return doc
+
+    def _quarantine_locked(self, err: Exception) -> None:
+        corrupt = self.path + ".corrupt"
+        try:
+            os.replace(self.path, corrupt)
+            moved = True
+        except OSError:
+            moved = False                # read-only dir: warn-only path
+        if self.path not in _QUARANTINE_WARNED:   # log once per path
+            _QUARANTINE_WARNED.add(self.path)
+            _logger.warning(
+                "tuning cache %s is unreadable (%s: %s); %s — rebuilding "
+                "an empty cache", self.path, type(err).__name__, err,
+                f"quarantined to {corrupt}" if moved
+                else "could not quarantine (filesystem error)")
 
     def doc(self) -> dict:
         """The parsed (and, if needed, migrated) schema-2 document."""

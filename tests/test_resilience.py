@@ -1,0 +1,624 @@
+"""Failure-domain layer: circuit breakers, deadline-aware retry, the
+output health sentinel, seam-level fault injection, tiered fallback
+routing, poison-batch bisection, and lane stall supervision.
+
+The fallback bit-identity matrix here is the robustness counterpart of
+test_service.py's route-invisibility matrix: every DEGRADED route must
+return the same image the healthy route would have — bit-identical for
+fused1->fused3 and sharded->local, <=0.1 dB for the bs16->f32 precision
+step (f32 is the verification tier the gate itself is measured against).
+"""
+import asyncio
+import itertools
+import math
+import time
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.sar import build_pipeline, paper_targets, simulate_cached
+from repro.core.sar.metrics import compare_pipelines
+from repro.core.sar.geometry import test_scene as make_test_scene
+from repro.service import (
+    BatchKey,
+    BreakerBoard,
+    ChaosBackend,
+    CircuitBreaker,
+    FaultInjector,
+    FaultSpec,
+    FocusService,
+    HealthSentinel,
+    LocalBackend,
+    OutputCorrupted,
+    RetryPolicy,
+    ServiceConfig,
+    SimulatedFailure,
+    scene_digest,
+    seeded_schedule,
+)
+from repro.service.faults import SEAMS
+from repro.service.resilience import LaneStalled
+
+CFG = make_test_scene(128)
+TARGETS = paper_targets(CFG)
+
+
+def fast_backend(**kw):
+    return LocalBackend(sweep=((None, None),), **kw)
+
+
+def scene():
+    return simulate_cached(CFG, TARGETS)
+
+
+def reference(variant="fused3", **kw):
+    return np.asarray(build_pipeline(CFG, variant, **kw).run(
+        jnp.asarray(scene())))
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker / RetryPolicy / HealthSentinel units
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def test_circuit_breaker_opens_after_threshold_and_half_open_probes():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=3, cooldown_s=10.0, clock=clk)
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    br.record_failure()
+    assert br.allow(), "below threshold: still closed"
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clk.t = 9.9
+    assert not br.allow(), "cooldown not elapsed"
+    clk.t = 10.0
+    assert br.allow(), "cooldown elapsed: half-open probe admitted"
+    assert br.state == "half_open"
+    assert not br.allow(), "only ONE probe while half-open"
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+
+
+def test_circuit_breaker_half_open_failure_rearms_cooldown():
+    clk = _Clock()
+    br = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clk)
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    clk.t = 5.0
+    assert br.allow()
+    br.record_failure()                   # the probe failed
+    assert br.state == "open" and br.trips == 2
+    clk.t = 9.0
+    assert not br.allow(), "cooldown restarted at the probe failure"
+    clk.t = 10.0
+    assert br.allow()
+
+
+def test_breaker_board_is_per_name_and_snapshots():
+    board = BreakerBoard(threshold=1, cooldown_s=99.0, clock=_Clock())
+    board.get("route:a").record_failure()
+    assert not board.get("route:a").allow()
+    assert board.get("route:b").allow(), "breakers are per route"
+    snap = board.snapshot()
+    assert snap["route:a"]["state"] == "open"
+    assert snap["route:b"]["state"] == "closed"
+
+
+def test_retry_policy_is_seeded_deterministic_and_bounded():
+    a = RetryPolicy(max_retries=3, backoff_s=0.01, seed=7,
+                    clock=_Clock())
+    b = RetryPolicy(max_retries=3, backoff_s=0.01, seed=7,
+                    clock=_Clock())
+    da = [a.budget(i) for i in range(4)]
+    db = [b.budget(i) for i in range(4)]
+    assert da == db, "same seed, same jittered schedule"
+    assert all(d > 0 for d in da[:3])
+    assert da[1] > da[0] * 1.0, "exponential growth dominates jitter"
+    assert da[3] is None, "budget exhausted at max_retries"
+
+
+def test_retry_policy_never_schedules_past_deadline():
+    clk = _Clock(100.0)
+    pol = RetryPolicy(max_retries=5, backoff_s=1.0, jitter=0.0, clock=clk)
+    assert pol.budget(0, t_deadline=math.inf) == pytest.approx(1.0)
+    # a retry that would land at/after the deadline is refused outright
+    assert pol.budget(0, t_deadline=101.0) is None
+    assert pol.budget(0, t_deadline=101.5) == pytest.approx(1.0)
+
+
+def test_health_sentinel_flags_corruption_modes_and_passes_real_images():
+    sent = HealthSentinel(envelope=1e6)
+    raw = np.asarray(scene())
+    img = reference()
+    assert sent.check(raw, img) is None, "healthy pipeline output passes"
+    nan = img.copy()
+    nan.flat[0] = np.nan
+    assert "non-finite" in sent.check(raw, nan)
+    inf = img.copy()
+    inf.flat[3] = np.inf
+    assert "non-finite" in sent.check(raw, inf)
+    assert "all-zero" in sent.check(raw, np.zeros_like(img))
+    assert "envelope" in sent.check(raw, img * 1e9)
+    assert sent.check(np.zeros_like(raw), np.zeros_like(img)) is None, \
+        "a zero pad scene maps to zero output: healthy"
+
+
+def test_retry_after_hint_clamped_to_positive_floor():
+    """Satellite: a cold or degenerate service-time EWMA must never
+    produce a non-positive retry hint (callers would hammer the bound)."""
+    from repro.service import RequestQueue, ServiceOverloaded, FocusRequest
+
+    async def main():
+        q = RequestQueue(1)
+        # drive the EWMA toward zero with degenerate service times
+        for _ in range(200):
+            q.note_service_time(1e-12)
+        assert q.retry_after_hint(0) >= 1e-3
+        loop = asyncio.get_running_loop()
+        req = FocusRequest(raw=np.zeros((2, 2), np.complex64), scene=CFG,
+                           variant="fused3", precision=None,
+                           future=loop.create_future(), t_submit=0.0)
+        q.put(req)
+        with pytest.raises(ServiceOverloaded) as ei:
+            q.put(req)
+        assert ei.value.retry_after_hint > 0
+        assert "retry_after_hint=" in str(ei.value)
+        # the rendered hint is a positive number, not 0.000
+        assert "retry_after_hint=0.000s" not in str(ei.value)
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# Fault injector / seeded schedule
+# ---------------------------------------------------------------------------
+
+def test_seeded_schedule_is_deterministic_and_covers_seams():
+    seams = ("dispatch_error", "nan_output", "lane_hang", "straggler")
+    a = seeded_schedule(20260808, 12, seams)
+    b = seeded_schedule(20260808, 12, seams)
+    c = seeded_schedule(1, 12, seams)
+    assert a == b, "same seed, same schedule"
+    assert a != c, "different seed, different placement"
+    assert sorted(s.seam for s in a) == sorted(seams)
+    ordinals = [s.at_dispatch for s in a]
+    assert len(set(ordinals)) == len(ordinals), "distinct ordinals"
+    assert min(ordinals) >= 2, "earliest dispatches stay clean"
+
+
+def test_fault_spec_validates_seams():
+    with pytest.raises(ValueError):
+        FaultSpec(seam="nope", at_dispatch=0)
+    with pytest.raises(ValueError):
+        FaultSpec(seam="dispatch_error")       # needs at_dispatch
+    with pytest.raises(ValueError):
+        FaultSpec(seam="poison_scene")         # needs a digest
+    assert set(SEAMS) >= {"dispatch_error", "nan_output", "lane_hang"}
+
+
+def test_chaos_backend_injects_dispatch_error_once_then_recovers():
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="dispatch_error", at_dispatch=0)]))
+    key = BatchKey(CFG, "fused3", None, False)
+    raw = np.asarray(scene())[None]
+    with pytest.raises(SimulatedFailure):
+        backend.execute(key, raw)
+    out = backend.execute(key, raw)        # ordinal 1: clean
+    assert np.array_equal(out[0], reference())
+    assert backend.injector.seams_fired() == ["dispatch_error"]
+
+
+def test_chaos_backend_nan_output_corrupts_scene_zero_only():
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="nan_output", at_dispatch=0)]))
+    key = BatchKey(CFG, "fused3", None, False)
+    raw = np.asarray(scene())
+    out = backend.execute(key, np.stack([raw, raw * 0.5]))
+    assert not np.all(np.isfinite(out[0]))
+    assert np.all(np.isfinite(out[1])), "coalesced neighbor stays healthy"
+
+
+# ---------------------------------------------------------------------------
+# Service-level recovery: retry, sentinel, bisection, lane supervision
+# ---------------------------------------------------------------------------
+
+def _svc_config(**kw):
+    base = dict(max_batch=4, max_delay_ms=20.0, precision=None,
+                lanes=1, inflight_cap=1, max_retries=2,
+                retry_backoff_ms=5.0, stall_floor_s=30.0)
+    base.update(kw)
+    return ServiceConfig(**base)
+
+
+def test_service_retries_injected_dispatch_error_transparently():
+    raw = scene()
+    ref = reference()
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="dispatch_error", at_dispatch=0)]))
+
+    async def main():
+        svc = FocusService(_svc_config(), backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        outs = await asyncio.gather(*[svc.focus(raw, CFG)
+                                      for _ in range(3)])
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    for o in outs:
+        assert np.array_equal(o, ref), \
+            "retried batch must stay bit-identical"
+    assert snap["dispatch_failures"] == 1
+    assert snap["retries"] == 1
+    assert snap["failed"] == 0 and snap["completed"] == 3
+
+
+def test_service_sentinel_turns_nan_output_into_retry_then_success():
+    raw = scene()
+    ref = reference()
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="nan_output", at_dispatch=0)]))
+
+    async def main():
+        svc = FocusService(_svc_config(), backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        outs = await asyncio.gather(svc.focus(raw, CFG),
+                                    svc.focus(raw * 0.5, CFG))
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert np.array_equal(outs[0], ref)
+    assert np.array_equal(outs[1], np.asarray(build_pipeline(
+        CFG, "fused3").run(jnp.asarray(raw) * 0.5)))
+    assert snap["corrupted"] == 1, "exactly the injected scene flagged"
+    assert snap["retries"] >= 1
+    assert snap["failed"] == 0
+
+
+def test_service_sentinel_exhausted_raises_output_corrupted():
+    """A backend that ALWAYS produces NaN output must surface a typed
+    OutputCorrupted error, not a silent wrong image or a hang."""
+    raw = scene()
+
+    class _AlwaysNan:
+        def warm(self, key, max_batch=4):
+            pass
+
+        def execute(self, key, batch):
+            out = np.full_like(batch, np.nan)
+            return out
+
+        def execute_streamed(self, key, raw, strips=4):
+            return np.full_like(raw, np.nan)
+
+    async def main():
+        svc = FocusService(_svc_config(max_retries=1, bisect=False),
+                           backend=_AlwaysNan())
+        await svc.start()
+        with pytest.raises(OutputCorrupted):
+            await svc.focus(raw, CFG)
+        await svc.stop()
+        return svc.metrics.snapshot()
+
+    snap = asyncio.run(main())
+    assert snap["corrupted"] >= 1
+    assert snap["failed"] == 1
+
+
+def test_poison_batch_bisection_isolates_one_bad_scene():
+    """A coalesced batch with one poison scene: retries can't help (the
+    poison is content-keyed and deterministic), so the domain bisects —
+    the three healthy neighbors serve bit-identically and ONLY the
+    poison request gets the typed error."""
+    raw = np.asarray(scene())
+    poison = raw * 0.25
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="poison_scene",
+                                 match=scene_digest(poison))]))
+    ref = reference()
+
+    async def main():
+        svc = FocusService(_svc_config(max_retries=0, max_delay_ms=100.0),
+                           backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        outs = await asyncio.gather(
+            svc.focus(raw, CFG), svc.focus(poison.copy(), CFG),
+            svc.focus(raw, CFG), svc.focus(raw, CFG),
+            return_exceptions=True)
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    outs, snap = asyncio.run(main())
+    assert np.array_equal(outs[0], ref)
+    assert isinstance(outs[1], SimulatedFailure), \
+        "the poison request fails alone, with the typed error"
+    assert np.array_equal(outs[2], ref)
+    assert np.array_equal(outs[3], ref)
+    assert snap["bisections"] >= 1
+    assert snap["completed"] == 3 and snap["failed"] == 1
+
+
+def test_lane_stall_watchdog_restarts_lane_and_retries():
+    """An injected lane hang must trip the stall watchdog: the lane
+    restarts (fresh executor thread, generation bump), the batch retries
+    on the fresh thread, and the request still resolves correctly."""
+    raw = scene()
+    ref = reference()
+    injector = FaultInjector([FaultSpec(seam="lane_hang", at_dispatch=1)],
+                             hang_timeout_s=60.0)
+    backend = ChaosBackend(fast_backend(), injector)
+
+    async def main():
+        svc = FocusService(
+            _svc_config(stall_factor=3.0, stall_floor_s=1.0,
+                        max_retries=2),
+            backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        first = await svc.focus(raw, CFG)       # ordinal 0: clean, warms EWMA
+        second = await svc.focus(raw, CFG)      # ordinal 1: hangs
+        pool_snap = svc.pool.snapshot()
+        await svc.stop()
+        return first, second, pool_snap, svc.metrics.snapshot()
+
+    try:
+        first, second, pool_snap, snap = asyncio.run(main())
+    finally:
+        injector.release_hangs()
+    assert np.array_equal(first, ref)
+    assert np.array_equal(second, ref), \
+        "the retried batch (fresh lane thread) stays bit-identical"
+    assert snap["lane_stalls"] == 1
+    assert snap["failed"] == 0
+    lane = pool_snap["fused0"]
+    assert lane["stalls"] == 1 and lane["generation"] == 1
+
+
+def test_lane_stall_releases_gate_lock_for_exclusive_work():
+    """The hung thread held the gate lock's read side; the restart must
+    force-release it so exclusive work (warms, gate measurements) after
+    the stall does not deadlock."""
+    raw = scene()
+    injector = FaultInjector([FaultSpec(seam="lane_hang", at_dispatch=1)],
+                             hang_timeout_s=60.0)
+    backend = ChaosBackend(fast_backend(), injector)
+
+    async def main():
+        svc = FocusService(
+            _svc_config(stall_factor=3.0, stall_floor_s=1.0),
+            backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        await svc.focus(raw, CFG)
+        await svc.focus(raw, CFG)               # stalls + recovers
+        # exclusive-side work must still be possible (no reader leak)
+        out = await asyncio.wait_for(
+            svc.pool.run_exclusive(lambda: "ok"), timeout=10.0)
+        await svc.stop()
+        return out
+
+    try:
+        assert asyncio.run(main()) == "ok"
+    finally:
+        injector.release_hangs()
+
+
+# ---------------------------------------------------------------------------
+# Fallback bit-identity matrix (the degraded-route counterpart of the
+# route-invisibility matrix)
+# ---------------------------------------------------------------------------
+
+class _Boom:
+    calls = None
+
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, *a, **k):
+        self.calls += 1
+        raise RuntimeError("injected tier failure")
+
+
+@pytest.mark.parametrize("precision", [None, "bf16", "bs16"])
+def test_fallback_fused1_to_fused3_bit_identical(precision):
+    """Tier degradation fused1 -> fused3: when the megakernel tier
+    fails, the per-axis tier serves the SAME image bit-for-bit at every
+    precision (they are twins by construction)."""
+    backend = fast_backend()
+    key = BatchKey(CFG, "fused3", precision, False)
+    assert backend._route_variant(key) == "fused1", \
+        "128^2 fits VMEM: the megakernel tier must be tier 0"
+    boom = _Boom()
+    backend._fns[(key, "fused1")] = boom       # tier 0 dispatches fail
+    raw = np.asarray(scene())[None]
+    out = backend.execute(key, raw)
+    kw = {} if precision is None else {"precision": precision}
+    ref = np.asarray(build_pipeline(CFG, "fused3", **kw).run(
+        jnp.asarray(raw[0])))
+    assert boom.calls == 1
+    assert np.array_equal(out[0], ref)
+    assert backend.fallbacks["serve:plan"] == 1
+
+
+def test_fallback_breaker_opens_then_half_open_probe_recovers():
+    """Repeated tier-0 failures open the route breaker (the hot path
+    stops paying the failed dispatch); after the cooldown one probe
+    re-tries fused1 and a success closes the breaker again."""
+    clk = _Clock()
+    backend = fast_backend(
+        breakers=BreakerBoard(threshold=2, cooldown_s=10.0, clock=clk))
+    key = BatchKey(CFG, "fused3", None, False)
+    boom = _Boom()
+    real = backend._fn(key, "fused1")          # keep the real fn around
+    backend._fns[(key, "fused1")] = boom
+    raw = np.asarray(scene())[None]
+    ref = reference()
+    name = f"fused1:fused1:{CFG.na}x{CFG.nr}:None"
+    for _ in range(2):                         # trip the breaker
+        assert np.array_equal(backend.execute(key, raw)[0], ref)
+    assert backend.breakers.get(name).state == "open"
+    backend.execute(key, raw)
+    assert boom.calls == 2, "open breaker: fused1 not even attempted"
+    clk.t = 10.0                               # cooldown elapses
+    backend._fns[(key, "fused1")] = real       # the route healed
+    out = backend.execute(key, raw)            # half-open probe
+    assert np.array_equal(out[0], ref)
+    assert backend.breakers.get(name).state == "closed"
+
+
+def test_fallback_defused_last_resort_serves_when_both_fused_tiers_fail():
+    """fused1 AND fused3 failing still serves through the defused chain
+    — numerically equivalent (<=0.1 dB point-target SNR delta), by
+    design not bit-identical, and infinitely better than an error."""
+    backend = fast_backend()
+    key = BatchKey(CFG, "fused3", None, False)
+    backend._fns[(key, "fused1")] = _Boom()
+    backend._fns[(key, "fused3")] = _Boom()
+    raw = np.asarray(scene())[None]
+    out = backend.execute(key, raw)
+    np.testing.assert_allclose(out[0], reference("unfused"),
+                               rtol=1e-4, atol=1e-5)
+    rep = compare_pipelines(out[0], reference(), CFG, TARGETS)
+    assert max(rep["snr_delta_db"]) <= 0.1
+    assert backend.fallbacks["serve:defused"] == 1
+
+
+def test_fallback_sharded_to_local_stream_bit_identical(monkeypatch):
+    """The big-scene sharded route failing mid-serve falls back to the
+    single-device strip path, bit-identical (same math, same precision,
+    different partitioning)."""
+    backend = fast_backend()
+    key = BatchKey(CFG, "fused3", None, True)
+    monkeypatch.setattr(backend, "_sharded_twin", lambda k: "fused1")
+    monkeypatch.setattr(backend, "_sharded_fn",
+                        lambda k: _Boom())
+    raw = np.asarray(scene())
+    out = backend.execute_streamed(key, raw, strips=4)
+    ref = np.asarray(build_pipeline(CFG, "fused3").run_streamed(
+        raw, strips=4))
+    assert np.array_equal(out, ref)
+    assert backend.fallbacks["serve:local_stream"] == 1
+
+
+def test_gate_trip_on_default_tier_falls_back_to_f32():
+    """The DEFAULT serving tier tripping the SNR gate degrades to the
+    f32 verification path (<=0.1 dB by the gate's own definition —
+    here bit-equal to the f32 reference) instead of erroring; EXPLICIT
+    per-request precisions keep the strict SnrGateViolation contract."""
+    from repro.service import SnrGateViolation
+    raw = scene()
+    ref_f32 = reference()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=2, max_delay_ms=20.0,
+                          precision="bs16", lanes=1),
+            backend=fast_backend(),
+            precision_deviation=lambda p: 0.5)   # out of the 0.1 dB gate
+        await svc.start()
+        out = await svc.focus(raw, CFG)          # default tier: degrades
+        with pytest.raises(SnrGateViolation):
+            await svc.focus(raw, CFG, precision="bs16")  # explicit: raises
+        await svc.stop()
+        return out, svc.metrics.snapshot()
+
+    out, snap = asyncio.run(main())
+    assert np.array_equal(out, ref_f32), \
+        "the degraded request serves the f32 verification image"
+    assert snap["tier_fallbacks"] >= 1
+    assert snap["gate_rejected"] >= 1
+    rep = compare_pipelines(out, reference(precision="bs16"), CFG, TARGETS)
+    assert max(rep["snr_delta_db"]) <= 0.1, \
+        "precision step stays within the gate bound on this scene"
+
+
+def test_gate_trip_breaker_skips_measurement_after_threshold():
+    """After `breaker_threshold` gate trips the tier breaker opens:
+    admission routes default-tier requests straight to f32 without
+    re-consulting the gate until the cooldown expires."""
+    calls = []
+
+    def deviation(p):
+        calls.append(p)
+        return 0.5
+
+    raw = scene()
+
+    async def main():
+        svc = FocusService(
+            ServiceConfig(max_batch=1, max_delay_ms=5.0, precision="bs16",
+                          lanes=1, breaker_threshold=2,
+                          breaker_cooldown_s=3600.0),
+            backend=fast_backend(), precision_deviation=deviation)
+        await svc.start()
+        for _ in range(4):
+            await svc.focus(raw, CFG)
+        await svc.stop()
+        return svc.metrics.snapshot()
+
+    snap = asyncio.run(main())
+    assert len(calls) == 1, "deviation measured once (gate cache)"
+    assert snap["tier_fallbacks"] == 4
+    assert snap["completed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Mini chaos replay: 0 lost requests across >=3 seams
+# ---------------------------------------------------------------------------
+
+def test_chaos_replay_loses_no_requests():
+    """End-to-end chaos property at test scale: a seeded schedule firing
+    dispatch_error + nan_output + lane_hang over a request stream must
+    leave NO lost request — every future resolves to the bit-identical
+    image or a typed error — and the service keeps serving afterwards."""
+    raw = np.asarray(scene())
+    ref = reference()
+    # 14 requests at max_batch=2 guarantee 7 dispatches before any
+    # retries, so every ordinal in [2, 7) is reached
+    injector = FaultInjector(
+        seeded_schedule(20260808, 7,
+                        ("dispatch_error", "nan_output", "lane_hang")),
+        hang_timeout_s=60.0)
+    backend = ChaosBackend(fast_backend(), injector)
+
+    async def main():
+        svc = FocusService(
+            _svc_config(max_batch=2, lanes=2, inflight_cap=1,
+                        stall_factor=3.0, stall_floor_s=1.5,
+                        max_retries=2),
+            backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        outs = await asyncio.gather(
+            *[svc.focus(raw, CFG) for _ in range(14)],
+            return_exceptions=True)
+        await svc.stop()
+        return outs, svc.metrics.snapshot()
+
+    try:
+        outs, snap = asyncio.run(main())
+    finally:
+        injector.release_hangs()
+    assert len(injector.seams_fired()) == 3, injector.seams_fired()
+    lost = sum(1 for o in outs
+               if not (isinstance(o, np.ndarray)
+                       and np.array_equal(o, ref))
+               and not isinstance(o, (SimulatedFailure, OutputCorrupted,
+                                      LaneStalled)))
+    assert lost == 0, f"{lost} lost requests: {outs}"
+    typed_errors = sum(1 for o in outs if isinstance(o, Exception))
+    assert snap["completed"] == 14 - typed_errors
+    assert snap["completed"] >= 11, \
+        "retries + bisection must recover most faulted requests"

@@ -186,7 +186,8 @@ def test_backpressure_rejects_past_queue_bound():
     async def main():
         svc = FocusService(
             ServiceConfig(max_batch=1, max_queue=2, precision=None,
-                          lanes=1, inflight_cap=1),
+                          lanes=1, inflight_cap=1,
+                          sentinel=False),   # stub returns zero images
             backend=backend)
         await svc.start()
         t1 = asyncio.ensure_future(svc.focus(raw, CFG))
@@ -762,7 +763,9 @@ def test_serve_ratchet_gates_load_replay_structure():
     """scripts/bench_compare.py --serve must gate the deterministic
     load-replay structure: lane count may not shrink, the smoke
     deadline-miss rate may not grow, and the goodput-gain row (plus the
-    family itself) must exist."""
+    family itself) must exist. The chaos family is gated the same way:
+    zero lost requests, every scheduled seam fired, goodput ratio at or
+    above its bar, family presence."""
     import importlib.util
     spec = importlib.util.spec_from_file_location(
         "bench_compare_script",
@@ -771,7 +774,8 @@ def test_serve_ratchet_gates_load_replay_structure():
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
 
-    def doc(lanes=3, miss="0.0000", with_gain=True, with_smoke=True):
+    def doc(lanes=3, miss="0.0000", with_gain=True, with_smoke=True,
+            lost=0, seams=3, ratio="0.84x", with_chaos=True):
         rows = [
             {"section": "t", "name": "serve_tier_gate_bs16", "wall_ms": 0.0,
              "derived": "snr_deviation_db=0.0026;gate_db=0.1;admitted=True"},
@@ -789,6 +793,16 @@ def test_serve_ratchet_gates_load_replay_structure():
                          "wall_ms": 0.0,
                          "derived": f"lanes={lanes};"
                                     f"deadline_miss_rate={miss}"})
+        if with_chaos:
+            rows.append({"section": "t", "name": "serve_chaos_smoke",
+                         "wall_ms": 0.0,
+                         "derived": f"lost={lost};completed=24;requests=24;"
+                                    f"seams={seams}"})
+            rows.append({"section": "t",
+                         "name": "serve_chaos_goodput_ratio",
+                         "wall_ms": 0.0,
+                         "derived": f"ratio_vs_fault_free={ratio};"
+                                    "bar=0.5x"})
         return {"rows": rows}
 
     base = doc()
@@ -803,6 +817,16 @@ def test_serve_ratchet_gates_load_replay_structure():
                          if not r["name"].startswith("serve_load_")]}
     assert any("load-replay family is gone" in f
                for f in mod.compare_serve(base, no_loads))
+    # chaos structure: lost requests, missing seams, a sunk goodput
+    # ratio, and dropping the family outright all fail the ratchet
+    assert any("lost under the seeded fault replay" in f
+               for f in mod.compare_serve(base, doc(lost=2)))
+    assert any("fault seams fired" in f
+               for f in mod.compare_serve(base, doc(seams=2)))
+    assert any("recovery overhead regressed" in f
+               for f in mod.compare_serve(base, doc(ratio="0.30x")))
+    assert any("chaos-replay family is gone" in f
+               for f in mod.compare_serve(base, doc(with_chaos=False)))
     # lane GROWTH and new rows land freely (ratchet, not a freeze)
     assert mod.compare_serve(base, doc(lanes=4)) == []
 

@@ -308,6 +308,43 @@ def test_cache_in_process_layer_rereads_on_file_change(tmp_path):
     assert got is not None and got.block == 16
 
 
+def test_cache_quarantines_truncated_json_and_rebuilds(tmp_path, caplog):
+    """Corruption recovery: a truncated (mid-token) cache file must not
+    poison every subsequent load — the unreadable bytes are quarantined
+    to <path>.corrupt for post-mortem, the corruption is logged ONCE,
+    and the cache rebuilds empty so puts/gets work again immediately."""
+    import logging
+    path = str(tmp_path / "c.json")
+    cache = tuning.TuneCache(path)
+    key = tuning.TuneKey.kernel(512, 1)
+    cache.put(key, tuning.KernelConfig(block=16))
+    with open(path, "r+b") as f:             # truncate mid-token
+        f.truncate(17)
+    cache._mtime = None                      # drop the in-process layer
+    with caplog.at_level(logging.WARNING, logger="repro.tuning.cache"):
+        assert cache.get(key) is None, "corrupt file reads as empty"
+        assert cache.get(key) is None
+    assert os.path.exists(path + ".corrupt"), \
+        "the corrupt bytes are preserved for post-mortem"
+    assert not os.path.exists(path)
+    warned = [r for r in caplog.records if "quarantined" in r.getMessage()]
+    assert len(warned) == 1, "corruption is logged once, not per load"
+    # the cache is live again: a fresh put persists and round-trips
+    cache.put(key, tuning.KernelConfig(block=32))
+    assert tuning.TuneCache(path).get(key).block == 32
+
+
+def test_cache_quarantines_wrong_shape_json(tmp_path):
+    """Well-formed JSON of a foreign shape (a list, say) is corruption
+    too: quarantine and rebuild rather than raising on every load."""
+    path = str(tmp_path / "c.json")
+    with open(path, "w") as f:
+        json.dump([1, 2, 3], f)
+    cache = tuning.TuneCache(path)
+    assert cache.get(tuning.TuneKey.kernel(512, 1)) is None
+    assert os.path.exists(path + ".corrupt")
+
+
 # ---------------------------------------------------------------------------
 # Guided search policy
 # ---------------------------------------------------------------------------
