@@ -176,20 +176,23 @@ class FaultInjector:
         with self._lock:
             ordinal = self._dispatch
             self._dispatch += 1
-            for raw in scenes:
-                spec = self._poison.get(scene_digest(raw))
-                if spec is not None:
-                    self.fired.append((ordinal, spec))
-                    return ordinal, spec
+            # ordinal-keyed faults are consulted FIRST: a poison hit at
+            # the same dispatch must not shadow (and silently swallow) a
+            # one-shot fault scheduled there — the poison re-fires on
+            # the scene's next dispatch anyway, the ordinal never
+            # comes back
             spec = self._by_ordinal.get(ordinal)
-            if spec is not None:
-                if spec.lane not in (None, current_lane()):
-                    return ordinal, None     # wrong lane: let it pass
+            if spec is not None and spec.lane in (None, current_lane()):
                 try:
                     self._armed.check(ordinal)     # fires once per ordinal
                 except SimulatedFailure:
                     self.fired.append((ordinal, spec))
                     return ordinal, spec
+            for raw in scenes:
+                pspec = self._poison.get(scene_digest(raw))
+                if pspec is not None:
+                    self.fired.append((ordinal, pspec))
+                    return ordinal, pspec
             return ordinal, None
 
     def begin(self, scenes: Sequence[np.ndarray]) -> Tuple[int,

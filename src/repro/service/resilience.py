@@ -59,7 +59,11 @@ class CircuitBreaker:
     open       ``allow()`` is False until ``cooldown_s`` elapses, then
                the breaker moves to half_open and admits ONE probe.
     half_open  the probe's outcome decides: success closes, failure
-               re-opens (and re-arms the cooldown).
+               re-opens (and re-arms the cooldown). A probe that
+               VANISHES without an outcome (the probe request was shed
+               or deadline-dropped before its dispatch resolved) does
+               not wedge the breaker: after another ``cooldown_s`` with
+               no outcome recorded, ``allow()`` admits a fresh probe.
 
     ``clock`` is injectable for deterministic tests. Thread-safe: routes
     are consulted from lane threads and the event loop.
@@ -77,21 +81,29 @@ class CircuitBreaker:
         self.failures = 0
         self.trips = 0
         self._t_open = -math.inf
+        self._t_probe = -math.inf
 
     def allow(self) -> bool:
         """May this route serve the next request? In half_open only the
         single call that observes the cooldown expiry gets True (the
         probe); concurrent callers keep seeing False until the probe
-        resolves."""
+        resolves — or, if the probe vanished without recording an
+        outcome, until another cooldown elapses and a fresh probe is
+        admitted."""
         with self._lock:
             if self.state == "closed":
                 return True
             if self.state == "open":
                 if self._clock() - self._t_open >= self.cooldown_s:
                     self.state = "half_open"
+                    self._t_probe = self._clock()
                     return True
                 return False
-            return False                         # half_open: probe in flight
+            # half_open: probe in flight, unless it evaporated
+            if self._clock() - self._t_probe >= self.cooldown_s:
+                self._t_probe = self._clock()
+                return True
+            return False
 
     def record_success(self) -> None:
         with self._lock:

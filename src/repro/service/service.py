@@ -508,6 +508,16 @@ class FocusService:
                     await self._serve_batch(lane, key, live[mid:], busy,
                                             depth + 1)
                     return
+                if (key.precision not in (None, "f32")
+                        and self.config.tier_fallback):
+                    # terminal dispatch failure at a reduced tier MUST
+                    # record an outcome on the tier breaker: a half-open
+                    # probe that dies on this path would otherwise wedge
+                    # the breaker half_open forever (no success, no
+                    # failure — allow() never admits another probe) and
+                    # pin the default tier to f32
+                    self._tier_breakers.get(
+                        f"tier:{key.precision}").record_failure()
                 for r in live:
                     self._fail(r, e)
                 return

@@ -107,6 +107,22 @@ class _RWLock:
             self._cond.notify_all()
 
 
+class _Dispatch:
+    """Supervision record for one hand-off to a lane thread. ``t_start``
+    is written by the lane thread the moment the callable actually
+    begins (time queued behind a sibling on the lane's single worker
+    thread never counts toward the stall clock) and read by the
+    event-loop supervisor; ``token`` is this dispatch's gate-lock read
+    hold, so a stall force-releases exactly the stalled dispatch's
+    token and never a healthy sibling's."""
+
+    __slots__ = ("t_start", "token")
+
+    def __init__(self):
+        self.t_start: Optional[float] = None
+        self.token: Optional[_ReadToken] = None
+
+
 class Lane:
     """One executor lane: a device-work thread, an in-flight slot
     semaphore, and occupancy/backlog accounting."""
@@ -133,8 +149,6 @@ class Lane:
         self._sem: Optional[asyncio.Semaphore] = None
         self._executor: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
-        self._tokens_lock = threading.Lock()
-        self._tokens: set = set()         # read tokens held by this lane
 
     def start(self) -> None:
         """(Re)create the loop-bound semaphore and the executor thread —
@@ -151,9 +165,11 @@ class Lane:
 
     # -- supervision ---------------------------------------------------------
     def note_done(self, seconds: float) -> None:
-        """Fold one COMPLETED batch's device seconds into the stall
+        """Fold one COMPLETED batch's device-RUN seconds into the stall
         baseline (failures and stalls are excluded — they would bias the
-        watchdog toward false positives after fast failures)."""
+        watchdog toward false positives after fast failures; queue wait
+        behind a lane sibling is measured out on the lane thread, so it
+        neither inflates the baseline nor double-counts busy time)."""
         self.ewma_s = (seconds if self.ewma_s is None
                        else 0.3 * seconds + 0.7 * self.ewma_s)
         self.max_s = max(self.max_s, seconds)
@@ -167,20 +183,24 @@ class Lane:
         base = max(self.max_s, self.ewma_s or 0.0)
         return max(floor_s, factor * base)
 
-    def restart(self) -> None:
+    def restart(self, stalled: Optional[_Dispatch] = None) -> None:
         """Replace the executor thread after a stall. The semaphore is
         KEPT: hand-offs already parked on `acquire` simply dispatch onto
         the fresh executor — that is the not-yet-dispatched-work requeue.
-        The abandoned thread's gate-lock read tokens are force-released
-        (idempotently) so a pending gate writer is not deadlocked by a
-        thread that will never return."""
+        Hand-offs already QUEUED on the dead executor are cancelled by
+        the teardown; WorkerPool.run_batch translates that cancellation
+        into a retryable LaneStalled so they re-run through the normal
+        recovery ladder instead of leaving request futures pending.
+        Only the STALLED dispatch's gate-lock read token is
+        force-released (idempotently) — a healthy dispatch still running
+        keeps its hold, so a gate writer can never toggle global config
+        under live device work — which is enough to unblock a pending
+        writer because the abandoned thread will never release it."""
         old = self._executor
         if old is not None:
             old.shutdown(wait=False, cancel_futures=True)
-        with self._tokens_lock:
-            tokens, self._tokens = list(self._tokens), set()
-        for tok in tokens:
-            tok.release()
+        if stalled is not None and stalled.token is not None:
+            stalled.token.release()
         self.generation += 1
         self.stalls += 1
         self._executor = concurrent.futures.ThreadPoolExecutor(
@@ -258,49 +278,86 @@ class WorkerPool:
     async def run_batch(self, lane: Lane, fn, *args,
                         stall_timeout: Optional[float] = None):
         """Await ``fn(*args)`` on the lane thread (shared lock held);
-        returns (result, seconds busy on the device thread).
+        returns (result, seconds the callable RAN on the lane thread —
+        time queued behind a lane sibling is excluded from both the
+        supervision baseline and busy accounting).
 
         ``stall_timeout`` arms the lane supervisor: a dispatch that
-        neither returns nor raises within the timeout is declared a dead
+        neither returns nor raises within the timeout of RUNNING time
+        (the clock starts when the callable begins on the lane thread,
+        not at submit — a batch queued behind its sibling on the lane's
+        single worker thread accrues no stall credit) is declared a dead
         lane — the lane's executor is replaced (work already parked on
         its in-flight semaphore re-dispatches onto the fresh thread) and
         :class:`~repro.service.resilience.LaneStalled` is raised so the
-        caller's retry policy can re-run the batch."""
-        t0 = time.perf_counter()
-        fut = asyncio.wrap_future(
-            lane._executor.submit(self._shared_call, lane, fn, *args))
-        if stall_timeout is None:
-            result = await fut
-        else:
-            try:
-                result = await asyncio.wait_for(fut, stall_timeout)
-            except asyncio.TimeoutError:
-                self.restart_lane(lane)
-                raise LaneStalled(
-                    f"lane {lane.name}: dispatch exceeded the "
-                    f"{stall_timeout:.2f}s stall watchdog; lane restarted "
-                    f"(generation {lane.generation})") from None
-        secs = time.perf_counter() - t0
+        caller's retry policy can re-run the batch.
+
+        A hand-off still QUEUED on an executor torn down by a sibling's
+        restart is cancelled by that teardown; the cancellation is
+        translated into LaneStalled here — CancelledError is a
+        BaseException the service's `except Exception` recovery ladder
+        would never see, and an untranslated escape would leave the
+        batch's request futures pending forever."""
+        disp = _Dispatch()
+        cfut = lane._executor.submit(self._shared_call, lane, disp,
+                                     fn, *args)
+        fut = asyncio.wrap_future(cfut)
+        try:
+            if stall_timeout is None:
+                result, secs = await fut
+            else:
+                result, secs = await self._supervise(
+                    lane, disp, fut, stall_timeout)
+        except asyncio.CancelledError:
+            if not cfut.cancelled():
+                raise                      # genuine task cancellation
+            raise LaneStalled(
+                f"lane {lane.name}: queued hand-off cancelled by a lane "
+                f"restart (generation {lane.generation}); eligible for "
+                "re-dispatch on the fresh executor") from None
         lane.note_done(secs)
         return result, secs
 
-    def restart_lane(self, lane: Lane) -> None:
+    async def _supervise(self, lane: Lane, disp: _Dispatch,
+                         fut: "asyncio.Future", stall_timeout: float):
+        """Await ``fut`` under the stall watchdog, counting only RUNNING
+        time: while ``disp.t_start`` is None the hand-off is still
+        queued behind a sibling (whose own watchdog covers a hang there)
+        and each wait simply re-arms."""
+        while True:
+            started = disp.t_start
+            if started is None:
+                timeout = stall_timeout
+            else:
+                timeout = stall_timeout - (time.perf_counter() - started)
+                if timeout <= 0.0:
+                    self.restart_lane(lane, disp)
+                    raise LaneStalled(
+                        f"lane {lane.name}: dispatch exceeded the "
+                        f"{stall_timeout:.2f}s stall watchdog; lane "
+                        f"restarted (generation {lane.generation})"
+                    ) from None
+            try:
+                return await asyncio.wait_for(asyncio.shield(fut), timeout)
+            except asyncio.TimeoutError:
+                continue
+
+    def restart_lane(self, lane: Lane,
+                     stalled: Optional[_Dispatch] = None) -> None:
         """Supervisor action: replace a dead lane's executor thread.
         Parked hand-offs keep their semaphore slots and re-dispatch onto
-        the fresh thread; the abandoned thread's shared-lock hold is
+        the fresh thread; the stalled dispatch's shared-lock hold is
         force-released (see Lane.restart)."""
-        lane.restart()
+        lane.restart(stalled)
 
-    def _shared_call(self, lane: Lane, fn, *args):
+    def _shared_call(self, lane: Lane, disp: _Dispatch, fn, *args):
         token = self.gate_lock.acquire_read()
-        with lane._tokens_lock:
-            lane._tokens.add(token)
+        disp.token = token          # before t_start: the supervisor only
+        disp.t_start = time.perf_counter()   # acts once t_start is set
         try:
-            return fn(*args)
+            return fn(*args), time.perf_counter() - disp.t_start
         finally:
             token.release()
-            with lane._tokens_lock:
-                lane._tokens.discard(token)
 
     async def run_exclusive(self, fn, *args):
         """Await ``fn(*args)`` on lane 0's thread under the EXCLUSIVE

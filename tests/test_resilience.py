@@ -103,6 +103,27 @@ def test_circuit_breaker_half_open_failure_rearms_cooldown():
     assert br.allow()
 
 
+def test_circuit_breaker_vanished_probe_reprobes_after_cooldown():
+    """A half-open probe that never records an outcome (the probe
+    request was shed or deadline-dropped before its dispatch resolved)
+    must not wedge the breaker: after another cooldown a fresh probe is
+    admitted."""
+    clk = _Clock()
+    br = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clk)
+    br.record_failure()
+    clk.t = 5.0
+    assert br.allow(), "cooldown elapsed: probe admitted"
+    assert br.state == "half_open"
+    assert not br.allow(), "probe in flight"
+    clk.t = 9.9
+    assert not br.allow(), "probe-vanish window not elapsed"
+    clk.t = 10.0
+    assert br.allow(), "vanished probe: a fresh probe is admitted"
+    assert not br.allow(), "again only ONE probe at a time"
+    br.record_success()
+    assert br.state == "closed"
+
+
 def test_breaker_board_is_per_name_and_snapshots():
     board = BreakerBoard(threshold=1, cooldown_s=99.0, clock=_Clock())
     board.get("route:a").record_failure()
@@ -203,6 +224,22 @@ def test_fault_spec_validates_seams():
     with pytest.raises(ValueError):
         FaultSpec(seam="poison_scene")         # needs a digest
     assert set(SEAMS) >= {"dispatch_error", "nan_output", "lane_hang"}
+
+
+def test_ordinal_fault_not_shadowed_by_poison_hit():
+    """A poison-scene match and an ordinal-keyed fault colliding on the
+    same dispatch: the ordinal fault fires (its ordinal never comes
+    back) and the poison still fires on the scene's NEXT dispatch, so
+    seams_fired() undercounts neither."""
+    raw = np.asarray(scene())
+    inj = FaultInjector([
+        FaultSpec(seam="dispatch_error", at_dispatch=0),
+        FaultSpec(seam="poison_scene", match=scene_digest(raw))])
+    with pytest.raises(SimulatedFailure, match="dispatch error"):
+        inj.begin([raw])                   # ordinal fault wins the tie
+    with pytest.raises(SimulatedFailure, match="poison"):
+        inj.begin([raw])                   # the poison re-fires next
+    assert inj.seams_fired() == ["dispatch_error", "poison_scene"]
 
 
 def test_chaos_backend_injects_dispatch_error_once_then_recovers():
@@ -414,6 +451,117 @@ def test_lane_stall_releases_gate_lock_for_exclusive_work():
         assert asyncio.run(main()) == "ok"
     finally:
         injector.release_hangs()
+
+
+def test_stall_clock_counts_running_time_not_queue_wait():
+    """A batch queued behind its lane sibling on the single worker
+    thread must not accrue queue wait toward its own stall timeout (a
+    healthy lane serving one long batch + one queued batch would
+    false-trip the watchdog), and its busy/baseline seconds must be the
+    RUN time, not submit-to-done wall time."""
+    from repro.service.workers import WorkerPool
+
+    async def main():
+        pool = WorkerPool(lanes=1, inflight_cap=2)
+        pool.start()
+        lane = pool.batch_lanes[0]
+        # A runs 1.2s (within ITS 5s watchdog) while B — watchdog 0.3s,
+        # far shorter than A's remaining run — waits in queue
+        ta = asyncio.ensure_future(
+            pool.run_batch(lane, time.sleep, 1.2, stall_timeout=5.0))
+        await asyncio.sleep(0.1)        # A is on the worker thread
+        tb = asyncio.ensure_future(
+            pool.run_batch(lane, lambda: "ok", stall_timeout=0.3))
+        (_, secs_a), (out_b, secs_b) = await asyncio.gather(ta, tb)
+        snap = (lane.stalls, lane.generation)
+        pool.shutdown()
+        return out_b, secs_a, secs_b, snap
+
+    out_b, secs_a, secs_b, (stalls, generation) = asyncio.run(main())
+    assert out_b == "ok", "queued batch served after its sibling"
+    assert stalls == 0 and generation == 0, \
+        "queue wait must not trip the watchdog"
+    assert secs_a > 1.0
+    assert secs_b < 0.3, \
+        "busy/baseline seconds are run time, not submit-to-done wall"
+
+
+def test_queued_handoff_cancelled_by_restart_resolves_not_hangs():
+    """THE no-pending-future contract under a sibling stall: when the
+    watchdog restarts a lane, a hand-off already queued on the torn-down
+    executor is cancelled — that cancellation must surface as a
+    retryable LaneStalled inside the recovery ladder (CancelledError is
+    a BaseException the ladder's `except Exception` never sees), so the
+    queued batch re-dispatches and every request still resolves."""
+    raw = scene()
+    ref = reference()
+    injector = FaultInjector([FaultSpec(seam="lane_hang", at_dispatch=1)],
+                             hang_timeout_s=60.0)
+    backend = ChaosBackend(fast_backend(), injector)
+
+    async def main():
+        svc = FocusService(
+            _svc_config(max_batch=1, inflight_cap=2,
+                        stall_factor=3.0, stall_floor_s=1.0,
+                        max_retries=2, max_delay_ms=5.0),
+            backend=backend)
+        await svc.start(warm=[(CFG, "fused3", None)])
+        first = await svc.focus(raw, CFG)       # ordinal 0: warms EWMA
+        # the hang (ordinal 1) and a sibling queued behind it on the
+        # same lane executor; the sibling's future must still resolve
+        outs = await asyncio.wait_for(
+            asyncio.gather(svc.focus(raw, CFG), svc.focus(raw, CFG)),
+            timeout=60.0)
+        await svc.stop()
+        return first, outs, svc.metrics.snapshot(), svc.pool.snapshot()
+
+    try:
+        first, outs, snap, pool_snap = asyncio.run(main())
+    finally:
+        injector.release_hangs()
+    assert np.array_equal(first, ref)
+    for out in outs:
+        assert np.array_equal(out, ref), \
+            "both the stalled and the cancelled-queued batch recover"
+    assert snap["failed"] == 0
+    assert pool_snap["fused0"]["stalls"] >= 1
+
+
+def test_tier_probe_dispatch_failure_reopens_breaker():
+    """A half-open tier probe whose batch dies on the DISPATCH-error
+    path must record an outcome: the breaker re-opens (cooldown
+    re-armed) instead of wedging half_open with the default tier pinned
+    to f32 and no further re-probes."""
+    raw = scene()
+    clk = _Clock()
+    backend = ChaosBackend(
+        fast_backend(),
+        FaultInjector([FaultSpec(seam="dispatch_error", at_dispatch=0)]))
+
+    async def main():
+        svc = FocusService(
+            _svc_config(precision="bs16", max_retries=0, bisect=False),
+            backend=backend, precision_deviation=lambda p: 0.0)
+        svc._tier_breakers = BreakerBoard(threshold=1, cooldown_s=10.0,
+                                          clock=clk)
+        await svc.start(warm=[(CFG, "fused3", "bs16")])
+        br = svc._tier_breakers.get("tier:bs16")
+        br.record_failure()                # tier breaker opens
+        assert br.state == "open"
+        clk.t = 10.0                       # cooldown over: probe admitted
+        with pytest.raises(SimulatedFailure):
+            await svc.focus(raw, CFG)      # the probe dies mid-dispatch
+        assert br.state == "open", \
+            "dispatch-path death recorded an outcome (no half-open wedge)"
+        clk.t = 20.0                       # next cooldown: fresh probe
+        out = await svc.focus(raw, CFG)    # ordinal 1: clean
+        assert br.state == "closed", "successful probe closes the breaker"
+        await svc.stop()
+        return out
+
+    out = asyncio.run(main())
+    assert np.array_equal(out, reference(precision="bs16")), \
+        "the recovered probe serves the reduced tier bit-identically"
 
 
 # ---------------------------------------------------------------------------
